@@ -1,0 +1,157 @@
+"""One benchmark per paper table/figure. Each returns a list of CSV rows
+(name, us_per_call, derived)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Row = Tuple[str, float, str]
+
+
+def _time_call(fn, *args, iters: int = 3, **kw) -> float:
+    fn(*args, **kw)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_headline() -> List[Row]:
+    """§4 headline speedups: model vs paper (GH100 FP8)."""
+    from repro.perfmodel.model import headline_table
+    rows = []
+    for name, d in headline_table().items():
+        rows.append((f"headline/{name}", 0.0,
+                     f"model={d['model']:.4f} paper={d['paper']:.2f} "
+                     f"abs_err={d['abs_err']:.4f}"))
+    return rows
+
+
+def bench_fig6_sweep() -> List[Row]:
+    """Fig. 6: overlap speedup across (seq, heads) on GH100."""
+    from repro.perfmodel.model import sweep_speedup
+    sw = sweep_speedup([2048, 4096, 8192, 16384, 32768, 65536],
+                       [48, 64, 80, 96, 112, 128])
+    rows = []
+    for (s, h), v in sorted(sw.items()):
+        rows.append((f"fig6/seq{s}_heads{h}", 0.0, f"speedup={v:.4f}"))
+    mx = max(sw.values())
+    rows.append(("fig6/max", 0.0,
+                 f"max_speedup={mx:.4f} paper_max=1.23"))
+    return rows
+
+
+def bench_fig7_kernel_scaling() -> List[Row]:
+    """Fig. 7: per-kernel runtime scaling in seq and heads (model) plus
+    measured interpret-mode philox-kernel wall time (shape trend)."""
+    from repro.kernels.philox import philox_dropout_mask
+    from repro.perfmodel.model import BlockShape, kernel_times
+    rows = []
+    for h in (48, 96):
+        t = kernel_times(BlockShape(batch=1, seq=8192, n_heads=h))
+        rows.append((f"fig7/model_heads{h}_seq8192", 0.0,
+                     f"gemm={t['gemm']*1e3:.3f}ms attn={t['attn']*1e3:.3f}"
+                     f"ms rng={t['rng']*1e3:.3f}ms"))
+    for s in (2048, 8192):
+        t = kernel_times(BlockShape(batch=1, seq=s, n_heads=64))
+        rows.append((f"fig7/model_seq{s}_heads64", 0.0,
+                     f"gemm={t['gemm']*1e3:.3f}ms attn={t['attn']*1e3:.3f}"
+                     f"ms rng={t['rng']*1e3:.3f}ms"))
+    # measured: standalone-RNG kernel wall time scales ~4x with seq 2x
+    # (quadratic in seq), ~2x with heads 2x (linear) — interpret mode
+    for (b, h, s) in ((1, 2, 256), (1, 2, 512), (1, 4, 256)):
+        us = _time_call(philox_dropout_mask, b, h, s, s, 0.1, 0)
+        rows.append((f"fig7/measured_rng_b{b}h{h}s{s}", us,
+                     f"elems={b*h*s*s}"))
+    return rows
+
+
+def bench_fig9_hbm() -> List[Row]:
+    """Fig. 9 / §5.1: HBM capacity for the stand-alone RNG mask."""
+    from repro.perfmodel.model import BlockShape
+    nets = {
+        "gpt3_96h": BlockShape(batch=1, seq=32768, n_heads=96),
+        "llama2_64h": BlockShape(batch=1, seq=32768, n_heads=64),
+        "moe_128h": BlockShape(batch=1, seq=32768, n_heads=128),
+    }
+    rows = []
+    for name, shp in nets.items():
+        full = shp.mask_hbm_bytes()
+        rows.append((f"fig9/{name}", 0.0,
+                     f"full={full/2**30:.2f}GiB tp16={full/16/2**30:.3f}"
+                     f"GiB sp16={full/16/2**30:.3f}GiB "
+                     f"tp16xsp16={full/256/2**30:.4f}GiB"))
+    return rows
+
+
+def bench_fig11_philox_rounds() -> List[Row]:
+    """Fig. 11: standalone RNG runtime for Philox 3/5/7 — model ratios vs
+    silicon (0.67/0.81/1.00) plus measured interpret-mode kernel times."""
+    from repro.kernels.philox import philox_dropout_mask
+    from repro.perfmodel.model import rng_ops_per_elem
+    base = rng_ops_per_elem(7)
+    rows = []
+    silicon = {3: 0.67, 5: 0.81, 7: 1.00}
+    for r in (3, 5, 7):
+        ratio = rng_ops_per_elem(r) / base
+        us = _time_call(philox_dropout_mask, 1, 2, 256, 512, 0.1, 0,
+                        0, r)
+        rows.append((f"fig11/philox{r}", us,
+                     f"model_ratio={ratio:.3f} silicon_ratio="
+                     f"{silicon[r]:.2f}"))
+    return rows
+
+
+def bench_fig13_rounds_speedup() -> List[Row]:
+    """Fig. 12/13: cheaper RNG -> smaller overlap speedup."""
+    from repro.perfmodel.model import BlockShape, block_speedup
+    rows = []
+    for h, s in ((48, 16384), (96, 4096), (128, 16384)):
+        shp = BlockShape(batch=1, seq=s, n_heads=h)
+        vals = {r: block_speedup(shp, rounds=r) for r in (3, 5, 7)}
+        rows.append((f"fig13/heads{h}_seq{s}", 0.0,
+                     " ".join(f"philox{r}={v:.4f}"
+                              for r, v in vals.items())))
+    return rows
+
+
+def bench_fig15_hw_scaling() -> List[Row]:
+    """Fig. 15: hypothetical GPU with 2x MMA compute — speedup increases
+    at short seq, Region-3 exposure worsens at long seq."""
+    from repro.perfmodel.hardware import GH100
+    from repro.perfmodel.model import BlockShape, block_speedup
+    hw2 = GH100.scaled(2.0)
+    rows = []
+    for h in (48, 96, 128):
+        for s in (2048, 8192, 32768):
+            shp = BlockShape(batch=1, seq=s, n_heads=h)
+            v1 = block_speedup(shp, GH100)
+            v2 = block_speedup(shp, hw2)
+            rows.append((f"fig15/heads{h}_seq{s}", 0.0,
+                         f"gh100={v1:.4f} mma2x={v2:.4f} "
+                         f"delta={v2-v1:+.4f}"))
+    return rows
+
+
+def bench_tpu_adaptation() -> List[Row]:
+    """Beyond-paper: the model re-targeted at TPU v5e for our assigned
+    archs (bf16, MXU/VPU co-scheduling interference factors)."""
+    from repro.config import get_arch
+    from repro.perfmodel.hardware import TPU_V5E
+    from repro.perfmodel.model import BlockShape, block_speedup
+    rows = []
+    for arch in ("yi-6b", "qwen2-72b", "command-r-35b", "chameleon-34b",
+                 "musicgen-large", "llama2-7b", "gpt3-175b"):
+        cfg = get_arch(arch)
+        shp = BlockShape(
+            batch=1, seq=4096, n_heads=cfg.n_heads,
+            head_dim=cfg.head_dim, n_kv_heads=cfg.n_kv_heads,
+            ffn_mult=cfg.d_ff / cfg.d_model,
+            ffn_gated=cfg.ffn.value in ("swiglu", "geglu"),
+            dtype_bytes=2)
+        v = block_speedup(shp, TPU_V5E)
+        rows.append((f"tpu/{arch}", 0.0, f"speedup={v:.4f}"))
+    return rows

@@ -1,0 +1,78 @@
+"""Benchmark harness: one function per paper table/figure, plus kernel
+microbenches and the dry-run roofline table.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def bench_roofline_table():
+    """Roofline terms per (arch x shape x mesh) from the dry-run JSONs."""
+    rows = []
+    paths = sorted(glob.glob("experiments/dryrun/*.json")
+                   + glob.glob("experiments/perf/*.json"))
+    if not paths:
+        return [("roofline/none", 0.0,
+                 "run: PYTHONPATH=src python -m repro.launch.dryrun")]
+    for p in paths:
+        with open(p) as f:
+            r = json.load(f)
+        roof = r["roofline"]
+        tag = r.get("overrides") and "OPT" or r["mesh"]
+        rows.append((
+            f"roofline/{r['arch']}__{r['shape']}__{tag}", 0.0,
+            f"bound={roof['bound']} "
+            f"t_c={roof['t_compute_s']*1e3:.2f}ms "
+            f"t_m={roof['t_memory_s']*1e3:.2f}ms "
+            f"t_coll={roof['t_collective_s']*1e3:.2f}ms "
+            f"useful={roof['useful_flops_fraction']:.3f} "
+            f"roofline_frac={roof['roofline_fraction']:.3f}"))
+    return rows
+
+
+def all_benches():
+    from benchmarks import kernel_bench, paper_figures
+    return [
+        ("headline", paper_figures.bench_headline),
+        ("fig6", paper_figures.bench_fig6_sweep),
+        ("fig7", paper_figures.bench_fig7_kernel_scaling),
+        ("fig9", paper_figures.bench_fig9_hbm),
+        ("fig11", paper_figures.bench_fig11_philox_rounds),
+        ("fig13", paper_figures.bench_fig13_rounds_speedup),
+        ("fig15", paper_figures.bench_fig15_hw_scaling),
+        ("tpu", paper_figures.bench_tpu_adaptation),
+        ("kernel_attn", kernel_bench.bench_attention_modes),
+        ("kernel_gemm_rng", kernel_bench.bench_gemm_rng),
+        ("kernel_wkv", kernel_bench.bench_wkv),
+        ("roofline", bench_roofline_table),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only benches whose group matches")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for group, fn in all_benches():
+        if args.only and args.only not in group:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # keep the harness running
+            print(f"{group}/ERROR,0.0,{e!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""The paper's core experiment on our stack: dropout-RNG placement
+ablation.
+
+    PYTHONPATH=src python examples/overlap_ablation.py
+
+1. Trains the same model under mode=none / fused / overlap and shows
+   fused == overlap losses bit-for-bit (the masks are the same Philox
+   bits wherever they are generated).
+2. Prints the perf-model speedup the overlap buys on GH100 (paper's
+   platform) and on the TPU-v5e target for several assigned archs.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import DropoutPlanConfig, OptimizerConfig, RunConfig, \
+    ShapeConfig, ShardingConfig, StepKind, TrainConfig, get_arch
+from repro.data import batch_for_step
+from repro.perfmodel import GH100, TPU_V5E, BlockShape, block_speedup
+from repro.train.loop import init_train_state, make_train_step
+
+cfg = get_arch("llama2-7b", reduced=True)
+shape = ShapeConfig("abl", seq_len=128, global_batch=4,
+                    kind=StepKind.TRAIN)
+
+print("=== numerical ablation (10 steps each) ===")
+results = {}
+for mode in ("none", "fused", "overlap"):
+    run = RunConfig(model=cfg, shape=shape,
+                    dropout=DropoutPlanConfig(mode=mode, p=0.1),
+                    sharding=ShardingConfig(remat="block"),
+                    train=TrainConfig(optimizer=OptimizerConfig(
+                        lr=1e-3, warmup_steps=2, total_steps=20)))
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    step_fn = jax.jit(make_train_step(cfg, run))
+    losses = []
+    for s in range(10):
+        x, y = batch_for_step(cfg, shape, s)
+        state, m = step_fn(state, jnp.asarray(x), jnp.asarray(y))
+        losses.append(float(m["loss"]))
+    results[mode] = losses
+    print(f"mode={mode:8s} first={losses[0]:.6f} last={losses[-1]:.6f}")
+
+assert results["fused"] == results["overlap"], \
+    "fused and overlap must be numerically identical (same Philox bits)"
+print("fused == overlap: EXACT (identical training trajectories)")
+print("none differs (regularization active):",
+      results["none"][-1] != results["fused"][-1])
+
+print("\n=== modeled speedup of overlapping (paper technique) ===")
+for name, hw in (("GH100 fp8", GH100), ("TPU-v5e bf16", TPU_V5E)):
+    for arch in ("llama2-7b", "yi-6b", "qwen2-72b", "command-r-35b"):
+        c = get_arch(arch)
+        shp = BlockShape(batch=1, seq=4096, n_heads=c.n_heads,
+                         head_dim=c.head_dim, n_kv_heads=c.n_kv_heads,
+                         ffn_mult=c.d_ff / c.d_model,
+                         ffn_gated=c.ffn.value in ("swiglu", "geglu"),
+                         dtype_bytes=1 if hw is GH100 else 2)
+        print(f"{name:14s} {arch:16s} block speedup "
+              f"{block_speedup(shp, hw):.3f}x")

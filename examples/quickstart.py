@@ -1,0 +1,73 @@
+"""Quickstart: the paper's technique end to end in ~60 seconds on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Generate a packed dropout mask with the standalone Philox kernel.
+2. Generate the SAME mask under a GEMM with the fused gemm_rng kernel.
+3. Run flash attention in fused-RNG mode and premask mode -> identical.
+4. Train a tiny llama-family model a few steps with overlap-mode dropout.
+"""
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DropoutPlanConfig, OptimizerConfig, RunConfig, \
+    ShapeConfig, ShardingConfig, StepKind, TrainConfig, get_arch
+from repro.data import batch_for_step
+from repro.kernels import dropout_mask, flash_attention_fwd, gemm_with_rng
+from repro.train.loop import init_train_state, make_train_step
+
+B, H, S, D = 1, 4, 256, 64
+P_DROP, SEED, SALT = 0.1, 42, 3
+
+print("=== 1. standalone Philox RNG kernel (paper Fig. 4, decoupled) ===")
+mask = dropout_mask(B, H, S, S, P_DROP, SEED, SALT)
+keep_frac = 1.0 - float(jnp.mean(
+    jnp.stack([(mask >> i) & 1 for i in range(32)]).astype(jnp.float32)))
+print(f"packed mask {mask.shape} uint32; drop fraction ~= {keep_frac:.3f} "
+      f"(target {P_DROP})")
+
+print("=== 2. same bits generated UNDER a GEMM (MXU || VPU overlap) ===")
+key = jax.random.PRNGKey(0)
+a = jax.random.normal(key, (512, 256), jnp.float32)
+w = jax.random.normal(key, (256, 512), jnp.float32)
+c, mask2 = gemm_with_rng(a, w, mask_batch=B, mask_heads=H, mask_sq=S,
+                         mask_sk=S, p=P_DROP, seed=SEED, salt=SALT,
+                         block_m=256, block_n=256, block_k=256,
+                         mask_block_cols=256)
+np.testing.assert_array_equal(np.asarray(mask), np.asarray(mask2))
+print("gemm_rng mask is BIT-IDENTICAL to the standalone kernel's")
+
+print("=== 3. attention: fused RNG == premask (consume stored bits) ===")
+q = jax.random.normal(key, (B, H, S, D), jnp.float32)
+k = jax.random.normal(key, (B, H, S, D), jnp.float32)
+v = jax.random.normal(key, (B, H, S, D), jnp.float32)
+o_fused = flash_attention_fwd(q, k, v, causal=True, dropout_p=P_DROP,
+                              mode="fused", seed=SEED, salt=SALT)
+o_pre = flash_attention_fwd(q, k, v, mask_packed=mask, causal=True,
+                            dropout_p=P_DROP, mode="premask", seed=SEED,
+                            salt=SALT)
+np.testing.assert_array_equal(np.asarray(o_fused), np.asarray(o_pre))
+print("flash attention outputs identical across RNG placements")
+
+print("=== 4. train a tiny model with overlap-mode dropout ===")
+cfg = get_arch("llama2-7b", reduced=True)
+shape = ShapeConfig("quick", seq_len=128, global_batch=4,
+                    kind=StepKind.TRAIN)
+run = RunConfig(model=cfg, shape=shape,
+                dropout=DropoutPlanConfig(mode="overlap", p=P_DROP),
+                sharding=ShardingConfig(remat="block"),
+                train=TrainConfig(optimizer=OptimizerConfig(
+                    lr=1e-3, warmup_steps=2, total_steps=20)))
+state = init_train_state(jax.random.PRNGKey(0), cfg)
+step_fn = jax.jit(make_train_step(cfg, run))
+for s in range(10):
+    x, y = batch_for_step(cfg, shape, s)
+    state, m = step_fn(state, jnp.asarray(x), jnp.asarray(y))
+    if s % 3 == 0:
+        print(f"step {s}: loss={float(m['loss']):.4f}")
+print("quickstart complete.")

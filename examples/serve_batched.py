@@ -1,0 +1,24 @@
+"""Batched serving example: prefill + greedy decode on a reduced config.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch yi-6b]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    args, _ = ap.parse_known_args()
+    sys.argv = [sys.argv[0], "--arch", args.arch, "--reduced",
+                "--batch", "4", "--prompt-len", "64", "--max-new", "16"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro — production-grade JAX reproduction of "Reducing the Cost of
+Dropout in Flash-Attention by Hiding RNG with GEMM" (Ma, Liu, Krashinsky;
+2024), extended into a multi-pod training/serving framework.
+"""
+
+__version__ = "1.0.0"

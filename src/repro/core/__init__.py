@@ -1,0 +1,23 @@
+"""The paper's contribution as a composable feature:
+
+dropout_rng — counter-based Philox mask generation (XLA path), bit-exact
+              with the Pallas kernels.
+overlap     — DropoutPlan: decides where RNG runs (fused vs overlapped
+              with producer GEMMs) and threads seeds/salts.
+attention   — attention cores consuming the plan (chunked XLA, Pallas
+              flash, decode).
+"""
+from repro.core.attention import (
+    attention_decode,
+    attention_pallas,
+    attention_xla,
+)
+from repro.core.overlap import DropoutPlan, plan_from_config
+
+__all__ = [
+    "DropoutPlan",
+    "plan_from_config",
+    "attention_decode",
+    "attention_pallas",
+    "attention_xla",
+]

@@ -1,0 +1,101 @@
+"""Decoupled dropout RNG for the pure-JAX (XLA) execution path.
+
+Vectorized Philox mask generation with the SAME canonical counter scheme as
+the Pallas kernels (DESIGN.md §4), so a mask generated here, by the
+standalone philox kernel, or under a GEMM by the fused kernel, is
+bit-identical. Deterministic in (seed, salt) — which makes it safe under
+``jax.checkpoint``: the backward pass regenerates exactly the bits the
+forward pass used, the property that lets the paper store 1 bit/element
+instead of the float mask.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.philox_common import philox4x32, threshold_from_p
+
+__all__ = [
+    "packed_mask",
+    "keep_mask_block",
+    "unpack_block",
+    "mask_bytes",
+]
+
+
+def _split_seed(seed):
+    """seed may be a python int or a traced uint32/int32 scalar (training
+    steps fold the step index in)."""
+    if isinstance(seed, (int, np.integer)):
+        s = int(seed) & 0xFFFFFFFFFFFFFFFF
+        return np.uint32(s & 0xFFFFFFFF), np.uint32(s >> 32)
+    seed = seed.astype(jnp.uint32)
+    return seed, jnp.zeros((), jnp.uint32)
+
+
+def keep_mask_block(batch: int, n_heads: int, q_start, cq: int, sk: int,
+                    p: float, seed, salt, rounds: int = 7,
+                    bits: int = 32) -> jnp.ndarray:
+    """Bool (B, H, cq, SK) keep-mask for query rows [q_start, q_start+cq).
+
+    q_start / seed / salt may be traced scalars (dynamic step folding).
+    Fully vectorized over (b, h) — used by the chunked XLA attention in
+    fused mode and by the paper-topology mask precompute in overlap mode.
+
+    bits=32 is the paper-faithful one-u32-per-element scheme. bits=8
+    (beyond-paper) spends one BYTE per element — each Philox word covers
+    4 k-columns, cutting RNG compute and intermediate traffic 4x, with p
+    quantized to 1/256.
+    """
+    assert cq % 4 == 0
+    k0, k1 = _split_seed(seed)
+    bh = jax.lax.broadcasted_iota(jnp.uint32, (batch * n_heads, 1, 1), 0)
+    q4 = (jnp.asarray(q_start, jnp.uint32) // np.uint32(4)
+          + jax.lax.broadcasted_iota(jnp.uint32, (1, cq // 4, 1), 1))
+    salt = jnp.asarray(salt, jnp.uint32)
+    if bits == 8:
+        assert sk % 4 == 0
+        thr8 = np.uint32(min(max(int(round(p * 256.0)), 0), 255))
+        k4 = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, sk // 4), 2)
+        w = philox4x32(k4, q4, bh, salt, k0, k1, rounds)
+        u = jnp.stack(w, axis=2)                 # (BH, cq//4, 4w, SK//4)
+        u = u.reshape(batch * n_heads, cq, sk // 4)
+        shifts = (jax.lax.broadcasted_iota(jnp.uint32, (1, 1, sk // 4, 4),
+                                           3) * np.uint32(8))
+        bytes_ = ((u[..., None] >> shifts) & np.uint32(0xFF))
+        keep = (bytes_ >= thr8).reshape(batch * n_heads, cq, sk)
+        return keep.reshape(batch, n_heads, cq, sk)
+    thr = np.uint32(threshold_from_p(p))
+    kk = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, sk), 2)
+    w0, w1, w2, w3 = philox4x32(kk, q4, bh, salt, k0, k1, rounds)
+    u = jnp.stack([w0, w1, w2, w3], axis=2)          # (BH, cq//4, 4, SK)
+    u = u.reshape(batch * n_heads, cq, sk)
+    return (u >= thr).reshape(batch, n_heads, cq, sk)
+
+
+def packed_mask(batch: int, n_heads: int, sq: int, sk: int, p: float,
+                seed, salt, rounds: int = 7, bits: int = 32) -> jnp.ndarray:
+    """Packed uint32 (B, H, SQ//32, SK) keep-mask — the paper's 1-bit-per-
+    element HBM tensor, XLA path."""
+    assert sq % 32 == 0
+    keep = keep_mask_block(batch, n_heads, 0, sq, sk, p, seed, salt,
+                           rounds, bits)
+    b = keep.reshape(batch, n_heads, sq // 32, 32, sk).astype(jnp.uint32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 1, 32, 1), 3)
+    return jnp.sum(b << shifts, axis=3, dtype=jnp.uint32)
+
+
+def unpack_block(packed_chunk: jnp.ndarray, cq: int) -> jnp.ndarray:
+    """(B, H, cq//32, SK) uint32 -> (B, H, cq, SK) bool."""
+    b, h, n32, sk = packed_chunk.shape
+    assert n32 * 32 == cq
+    rep = jnp.repeat(packed_chunk, 32, axis=2)
+    shifts = (jax.lax.broadcasted_iota(jnp.uint32, (1, 1, cq, 1), 2)
+              % np.uint32(32))
+    return ((rep >> shifts) & np.uint32(1)).astype(jnp.bool_)
+
+
+def mask_bytes(batch: int, n_heads: int, sq: int, sk: int) -> int:
+    """HBM bytes for one layer's packed mask (paper §5.1)."""
+    return batch * n_heads * (sq // 32) * sk * 4

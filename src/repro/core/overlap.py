@@ -1,0 +1,91 @@
+"""DropoutPlan — the paper's RNG/GEMM overlap as a first-class feature.
+
+The plan decides *where* attention-dropout RNG runs:
+
+  mode "fused"   — inside the attention computation (paper baseline).
+  mode "overlap" — at the producer-GEMM site: the model calls
+                   ``plan.precompute_mask`` next to the QKV projection; the
+                   packed bits flow to attention, which only applies the
+                   cheap dropping step. On TPU the fused gemm_rng Pallas
+                   kernel realizes the concurrency (MXU ∥ VPU); in the XLA
+                   graph path the decoupling moves the RNG ops out of the
+                   softmax region so the scheduler can hoist them.
+  mode "none"    — dropout disabled (inference / ablation).
+
+Seeds fold (train_step, layer) into the Philox counters, so masks are
+deterministic for checkpoint-restart reproducibility and remat-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import DropoutPlanConfig
+from repro.core import dropout_rng
+
+# distinct salt streams so attention masks never collide with residual /
+# embedding dropout even at the same (layer, step)
+SALT_ATTN = 0x0
+SALT_RESID = 0x40000000
+SALT_EMBED = 0x7FFF0000
+
+_LAYER_PRIME = np.uint32(1000003)
+
+
+@dataclasses.dataclass(frozen=True)
+class DropoutPlan:
+    cfg: DropoutPlanConfig
+
+    @property
+    def enabled(self) -> bool:
+        return self.cfg.enabled
+
+    @property
+    def overlapped(self) -> bool:
+        return self.cfg.mode == "overlap"
+
+    def salt(self, layer_idx, stream: int = SALT_ATTN):
+        """uint32 salt for (layer, stream). layer_idx may be traced (scan
+        over layers)."""
+        return (jnp.asarray(layer_idx, jnp.uint32) * _LAYER_PRIME
+                + np.uint32(stream))
+
+    def step_seed(self, step):
+        """Fold the training step into the Philox key (traced-friendly)."""
+        return (jnp.asarray(step, jnp.uint32) * np.uint32(2654435761)
+                + np.uint32(self.cfg.seed & 0xFFFFFFFF))
+
+    def precompute_mask(self, batch: int, n_heads: int, sq: int, sk: int,
+                        layer_idx, step) -> Optional[jnp.ndarray]:
+        """Packed keep-bits generated at the producer-GEMM site (overlap
+        mode only). Returns None when the plan keeps RNG fused."""
+        if not self.enabled or not self.overlapped:
+            return None
+        return dropout_rng.packed_mask(
+            batch, n_heads, sq, sk, self.cfg.p,
+            self.step_seed(step), self.salt(layer_idx),
+            self.cfg.philox_rounds, self.cfg.philox_bits)
+
+    def chunk_keep_mask(self, batch: int, n_heads: int, q_start, cq: int,
+                        sk: int, layer_idx, step) -> Optional[jnp.ndarray]:
+        """Fused-mode in-place mask for one attention q-chunk."""
+        if not self.enabled:
+            return None
+        return dropout_rng.keep_mask_block(
+            batch, n_heads, q_start, cq, sk, self.cfg.p,
+            self.step_seed(step), self.salt(layer_idx),
+            self.cfg.philox_rounds, self.cfg.philox_bits)
+
+    def mask_hbm_bytes(self, batch: int, n_heads: int, sq: int,
+                       sk: int) -> int:
+        """Paper §5.1 capacity requirement for this layer."""
+        if not (self.enabled and self.overlapped):
+            return 0
+        return dropout_rng.mask_bytes(batch, n_heads, sq, sk)
+
+
+def plan_from_config(cfg: DropoutPlanConfig) -> DropoutPlan:
+    return DropoutPlan(cfg)

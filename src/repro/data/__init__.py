@@ -1,0 +1,13 @@
+from repro.data.pipeline import (
+    Prefetcher,
+    batch_for_step,
+    device_batch,
+    embed_batch_for_step,
+)
+
+__all__ = [
+    "Prefetcher",
+    "batch_for_step",
+    "device_batch",
+    "embed_batch_for_step",
+]

@@ -1,0 +1,120 @@
+"""Deterministic, resumable synthetic LM data pipeline.
+
+Every batch is a pure function of (seed, step, position) via the same
+Philox generator the dropout path uses — no state to checkpoint, so
+restart-from-step-N reproduces the exact token stream (the fault-tolerance
+property tests rely on this). A background prefetch thread overlaps host
+batch synthesis with device compute, mirroring a production input
+pipeline; ``device_batch`` materializes the batch as a sharded jax.Array
+for the active mesh so device placement happens once.
+
+The token distribution is Zipf-ish (power-law over the vocab) rather than
+uniform so that losses/aux-balancing behave like language data.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ShardingPolicy
+
+
+def _philox_batch_np(seed: int, step: int, batch: int, seq: int,
+                     vocab: int) -> np.ndarray:
+    """(B, S+1) int32 tokens, stateless in (seed, step)."""
+    from repro.kernels.philox_common import philox4x32
+    n = batch * (seq + 1)
+    n4 = -(-n // 4)
+    idx = np.arange(n4, dtype=np.uint32)
+    w = philox4x32(idx, np.uint32(step), np.uint32(seed),
+                   np.uint32(0x0DA7A), np.uint32(seed >> 32) if seed >> 32
+                   else np.uint32(7), np.uint32(11), rounds=7)
+    u = np.stack([np.asarray(x) for x in w], axis=1).reshape(-1)[:n]
+    # log-uniform ("Zipf-ish") rank distribution: low token ids dominate
+    uf = (u.astype(np.float64) + 0.5) / 4294967296.0
+    ranks = np.exp(uf * np.log(float(vocab))) - 1.0
+    toks = np.clip(ranks.astype(np.int64), 0, vocab - 1).astype(np.int32)
+    return toks.reshape(batch, seq + 1)
+
+
+def batch_for_step(cfg: ModelConfig, shape: ShapeConfig, step: int,
+                   seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (tokens (B,S), labels (B,S)) for a training step."""
+    raw = _philox_batch_np(seed, step, shape.global_batch, shape.seq_len,
+                           cfg.vocab_size)
+    return raw[:, :-1], raw[:, 1:]
+
+
+def embed_batch_for_step(cfg: ModelConfig, shape: ShapeConfig, step: int,
+                         seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Frontend-stub batch: (embeddings (B,S,D) f32, labels (B,S))."""
+    tokens, labels = batch_for_step(cfg, shape, step, seed)
+    rng = np.random.default_rng(seed * 1000003 + step)
+    emb = rng.standard_normal(
+        (shape.global_batch, shape.seq_len, cfg.d_model)).astype(np.float32)
+    return emb, labels
+
+
+def device_batch(cfg: ModelConfig, shape: ShapeConfig, step: int,
+                 policy: Optional[ShardingPolicy] = None, seed: int = 0):
+    """Materialize a batch on device(s), sharded batch-over-data."""
+    if cfg.frontend == "token":
+        x, y = batch_for_step(cfg, shape, step, seed)
+        x_axes = ("batch", None)
+    else:
+        x, y = embed_batch_for_step(cfg, shape, step, seed)
+        x_axes = ("batch", None, None)
+    if policy is None:
+        return jnp.asarray(x), jnp.asarray(y)
+    xs = jax.device_put(x, policy.sharding(x_axes, x.shape))
+    ys = jax.device_put(y, policy.sharding(("batch", None), y.shape))
+    return xs, ys
+
+
+class Prefetcher:
+    """Background-thread prefetch of synthetic batches (depth-N queue)."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 start_step: int, seed: int = 0, depth: int = 2,
+                 policy: Optional[ShardingPolicy] = None):
+        self.cfg, self.shape, self.seed = cfg, shape, seed
+        self.policy = policy
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = device_batch(self.cfg, self.shape, step,
+                                 self.policy, self.seed)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def stop(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

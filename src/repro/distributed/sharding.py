@@ -1,0 +1,161 @@
+"""Logical-axis sharding rules (flax-style, dependency-free).
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, "batch", "seq", "embed")``); a ShardingPolicy installed for
+the enclosing jit maps logical names to mesh axes. Outside a policy context
+the annotations are no-ops, so the same model code runs single-device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# Logical axis vocabulary used across the model zoo.
+#   batch     — global batch                  -> ("pod", "data") usually
+#   seq       — sequence/time                 -> None (or "data" for SP)
+#   embed     — d_model residual dim          -> None (or "model" for SP)
+#   heads     — q heads                       -> "model"
+#   kv_heads  — kv heads                      -> "model" when divisible
+#   kv_seq    — decode KV-cache sequence dim  -> "model" (flash-decoding)
+#   mlp       — ffn hidden dim                -> "model"
+#   vocab     — embedding/logits vocab        -> "model"
+#   expert    — MoE expert dim                -> "model"
+#   expert_cap— MoE capacity dim              -> ("pod", "data")
+#   recur     — RG-LRU recurrent width        -> "model"
+#   qkv       — fused qkv output dim          -> "model"
+#   stack     — scanned layer stack dim       -> None (never sharded)
+
+DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "kv_seq": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("data",),       # EP groups == DP groups (see models/moe.py)
+    "expert_cap": ("pod", "data"),
+    "expert_fsdp": None,   # ep_model layout: expert d_model dim over data
+    "recur": ("model",),
+    "qkv": ("model",),
+    "kv_proj": ("model",),
+    "heads_flat": ("model",),
+    "stack": None,
+    "fsdp": ("pod", "data"),   # weight dim sharded for ZeRO-3/FSDP archs
+}
+
+# Baseline layout presets for the fixed production mesh (16 x 16):
+#   "tp"   — Megatron: batch on (pod,data), TP+SP on model. Used by MoE
+#            training (EP needs the layout) and all serving cells.
+#   "fsdp" — pure data parallel over every axis with ZeRO-3 params: the
+#            right default for dense-arch *training* at global_batch=256
+#            on 256 chips (TP-16 for a <=72B dense model wastes ICI on
+#            SP gathers ~4x the compute time; see EXPERIMENTS.md §Perf).
+LAYOUT_PRESETS: Dict[str, Dict[str, Optional[Tuple[str, ...]]]] = {
+    "tp": {"seq": ("model",)},
+    "fsdp": {
+        "batch": ("pod", "data", "model"),
+        "seq": ("model",),    # picks up 'model' only if batch didn't
+        "heads": None, "kv_heads": None, "mlp": None, "vocab": None,
+        "recur": None, "qkv": None, "kv_proj": None, "heads_flat": None,
+        "fsdp": ("pod", "data", "model"),
+    },
+}
+
+
+class ShardingPolicy:
+    """Maps logical axis names to mesh axis names for one mesh."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Dict] = None,
+                 fsdp_params: bool = False):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+        self.fsdp_params = fsdp_params
+        self._mesh_axes = set(mesh.axis_names)
+
+    def mesh_axes_for(self, logical: Optional[str],
+                      dim_size: Optional[int] = None):
+        if logical is None:
+            return None
+        axes = self.rules.get(logical)
+        if axes is None:
+            return None
+        present = tuple(a for a in axes if a in self._mesh_axes)
+        # drop axes that don't divide the dim (GSPMD would pad; we prefer
+        # explicit replication for small dims like kv_heads=8)
+        return self._fit_axes(present, dim_size)
+
+    def spec(self, logical_axes: Tuple[Optional[str], ...],
+             shape: Optional[Tuple[int, ...]] = None) -> P:
+        """Cross-dim conflict-aware: a mesh axis consumed by an earlier
+        dim is dropped from later dims (e.g. fsdp layout: batch takes
+        ('data','model'), so seq gets nothing on the single-pod mesh)."""
+        parts = []
+        used = set()
+        for i, name in enumerate(logical_axes):
+            dim = None if shape is None else shape[i]
+            axes = self.rules.get(name) if name else None
+            if axes is None:
+                parts.append(None)
+                continue
+            avail = tuple(a for a in axes
+                          if a in self._mesh_axes and a not in used)
+            picked = self._fit_axes(avail, dim)
+            for a in (picked if isinstance(picked, tuple)
+                      else ((picked,) if picked else ())):
+                used.add(a)
+            parts.append(picked)
+        return P(*parts)
+
+    def _fit_axes(self, axes: Tuple[str, ...], dim_size: Optional[int]):
+        if not axes:
+            return None
+        if dim_size is not None:
+            keep, prod = [], 1
+            for a in axes:
+                sz = self.mesh.shape[a]
+                if dim_size % (prod * sz) == 0:
+                    keep.append(a)
+                    prod *= sz
+            axes = tuple(keep)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def sharding(self, logical_axes: Tuple[Optional[str], ...],
+                 shape: Optional[Tuple[int, ...]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[ShardingPolicy]):
+    prev = getattr(_state, "policy", None)
+    _state.policy = policy
+    try:
+        yield
+    finally:
+        _state.policy = prev
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    return getattr(_state, "policy", None)
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint under the active policy; no-op otherwise."""
+    policy = current_policy()
+    if policy is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = policy.spec(tuple(logical_axes), tuple(x.shape))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(policy.mesh, spec))

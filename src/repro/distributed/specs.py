@@ -1,0 +1,244 @@
+"""PartitionSpec derivation for every pytree in the system.
+
+Rules are path+shape driven so one engine covers all 10 architectures:
+
+  params   — Megatron TP layout on the 'model' axis (column-parallel up
+             projections, row-parallel down projections, vocab-sharded
+             embeddings, expert dim on 'data' for EP);
+  master/opt — params layout + 'data' sharding on the first divisible
+             unsharded dim (ZeRO; with fsdp_params the bf16 compute
+             params keep the data sharding too -> per-layer all-gather,
+             i.e. ZeRO-3/FSDP);
+  caches   — batch on ('pod','data'); kv-heads on 'model' when divisible,
+             otherwise the cache *sequence* dim goes on 'model'
+             (flash-decoding layout for small-KV GQA);
+  batches  — batch on ('pod','data').
+
+Stacked (scanned) leaves get a leading None for the stack dim.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig
+from repro.distributed.sharding import ShardingPolicy
+
+# leaf-name -> logical axes, aligned to the LAST ndim dims of the leaf
+_PARAM_RULES = [
+    # attention
+    ("w_q", ("fsdp", "qkv")),
+    ("w_k", ("fsdp", "kv_proj")),
+    ("w_v", ("fsdp", "kv_proj")),
+    ("w_o", ("qkv", "fsdp")),
+    ("b_q", ("qkv",)),
+    ("b_k", ("kv_proj",)),
+    ("b_v", ("kv_proj",)),
+    ("q_norm", (None,)),
+    ("k_norm", (None,)),
+    # moe (leading expert dim)
+    ("router", (None, None)),
+    ("w_gate", ("fsdp", "mlp")),   # also matches moe w_gate via expert rule
+    ("w_up", ("fsdp", "mlp")),
+    ("w_down", ("mlp", "fsdp")),
+    ("b_up", ("mlp",)),
+    ("b_down", (None,)),
+    # rwkv
+    ("w_r", ("fsdp", "heads_flat")),
+    ("w_g", ("fsdp", "heads_flat")),
+    ("w_key", ("fsdp", "mlp")),
+    ("w_value", ("mlp", "fsdp")),
+    ("w_recept", ("fsdp", None)),
+    ("lora_a", (None, None)),
+    ("lora_b", (None, None)),
+    ("ln_x", ("heads", None)),
+    ("u", ("heads", None)),
+    # rglru
+    ("w_x", ("fsdp", "recur")),
+    ("conv_w", (None, "recur")),
+    ("conv_b", ("recur",)),
+    ("w_a", (None, "recur")),
+    ("w_i", (None, "recur")),
+    ("b_a", ("recur",)),
+    ("b_i", ("recur",)),
+    ("lambda", ("recur",)),
+    ("w_out", ("recur", "fsdp")),
+    # embeddings
+    ("unembed", ("fsdp", "vocab")),
+    ("embed", ("vocab", "fsdp")),
+]
+
+# longest key first so "unembed" wins over "u", "w_out" over "w_o", etc.
+_PARAM_RULES.sort(key=lambda kv: -len(kv[0]))
+
+def _logical_to_axes(policy: ShardingPolicy, logical: Optional[str],
+                     dim: int, fsdp: bool):
+    if logical is None:
+        return None
+    if logical == "fsdp" and not fsdp:
+        return None
+    return policy.mesh_axes_for(logical, dim)
+
+
+def _param_spec_for(path: str, shape: Tuple[int, ...],
+                    policy: ShardingPolicy, fsdp: bool,
+                    in_stack: bool) -> P:
+    name = path.rsplit("'", 2)[-2] if "'" in path else path
+    core_ndim = len(shape) - (1 if in_stack else 0)
+    logical: Tuple[Optional[str], ...] = (None,) * core_ndim
+    is_moe = "'moe'" in path
+    for key, rule in _PARAM_RULES:
+        if name.startswith(key) or name == key:
+            logical = rule
+            break
+    else:
+        if "norm" in name or name in ("scale", "bias"):
+            logical = (None,) * core_ndim
+    # MoE expert weights carry a leading expert dim sharded over data (EP)
+    if is_moe and name in ("w_gate", "w_up", "w_down") and core_ndim == 3:
+        ep_model = policy.rules.get("expert") == ("model",)
+        if ep_model:
+            # §Perf ep_model layout: experts over 'model', d_model dim
+            # FSDP'd over 'data', d_ff intact (arithmetic intensity)
+            logical = (("expert", None, "expert_fsdp")
+                       if name == "w_down"
+                       else ("expert", "expert_fsdp", None))
+        elif name == "w_down":
+            logical = ("expert", "mlp", None)
+        else:
+            logical = ("expert", None, "mlp")
+    if len(logical) != core_ndim:
+        logical = (None,) * core_ndim
+    core_shape = shape[1:] if in_stack else shape
+    parts = []
+    used = set()
+    for lg, dim in zip(logical, core_shape):
+        picked = _logical_to_axes(policy, lg, dim, fsdp)
+        if picked is not None:
+            as_tuple = picked if isinstance(picked, tuple) else (picked,)
+            as_tuple = tuple(a for a in as_tuple if a not in used)
+            used.update(as_tuple)
+            picked = (as_tuple if len(as_tuple) > 1
+                      else (as_tuple[0] if as_tuple else None))
+        parts.append(picked)
+    if in_stack:
+        parts = [None] + parts
+    return P(*parts)
+
+
+def param_specs(params_shapes, policy: ShardingPolicy,
+                fsdp: bool = False):
+    """Pytree of PartitionSpec matching a params (or master) shape tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        in_stack = "stacks" in path
+        specs.append(_param_spec_for(path, tuple(leaf.shape), policy,
+                                     fsdp, in_stack))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def zero_extend(spec: P, shape: Tuple[int, ...],
+                policy: ShardingPolicy) -> P:
+    """Add ZeRO 'data' (+'pod') sharding on the first divisible unsharded
+    dim. Already-data-sharded specs pass through."""
+    data_axes = tuple(a for a in ("pod", "data")
+                      if a in policy.mesh.axis_names)
+    if not data_axes:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for pt in parts:
+        if pt is None:
+            continue
+        for a in (pt if isinstance(pt, tuple) else (pt,)):
+            used.add(a)
+    if "data" in used:
+        return spec
+    n = int(np.prod([policy.mesh.shape[a] for a in data_axes]))
+    for i, pt in enumerate(parts):
+        if pt is None and shape[i] % n == 0 and shape[i] > 1:
+            parts[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+            return P(*parts)
+    return spec
+
+
+def train_state_specs(state_shapes, policy: ShardingPolicy,
+                      fsdp: bool, zero1: bool = True):
+    """Specs for {"master", "opt", "step"}."""
+    m_specs = param_specs(state_shapes["master"], policy, fsdp)
+    if zero1:
+        m_specs = jax.tree.map(
+            lambda sp, leaf: zero_extend(sp, tuple(leaf.shape), policy),
+            m_specs, state_shapes["master"],
+            is_leaf=lambda x: isinstance(x, P))
+    return {
+        "master": m_specs,
+        "opt": {"m": m_specs, "v": m_specs},
+        "step": P(),
+    }
+
+
+def cache_specs(cache_shapes, cfg: ModelConfig, policy: ShardingPolicy):
+    """Specs for decode caches (stacked)."""
+    kv_on_model = (policy.mesh_axes_for("kv_heads", cfg.n_kv_heads)
+                   is not None)
+
+    def spec_for(path: str, shape):
+        core = shape[1:]  # strip stack dim
+        if path.endswith("_scale']"):   # int8 cache scales (B,KV,S,1)
+            b, kv, sl = core[0], core[1], core[2]
+            if kv_on_model:
+                return P(None, policy.mesh_axes_for("batch", b),
+                         policy.mesh_axes_for("kv_heads", kv), None, None)
+            return P(None, policy.mesh_axes_for("batch", b), None,
+                     policy.mesh_axes_for("kv_seq", sl), None)
+        if path.endswith("'k']") or path.endswith("'v']"):
+            b, kv, s, hd = core
+            if kv_on_model:
+                return P(None, policy.mesh_axes_for("batch", b),
+                         policy.mesh_axes_for("kv_heads", kv), None, None)
+            return P(None, policy.mesh_axes_for("batch", b), None,
+                     policy.mesh_axes_for("kv_seq", s), None)
+        if path.endswith("'s']"):      # rwkv state (B,H,K,V)
+            b, h = core[0], core[1]
+            return P(None, policy.mesh_axes_for("batch", b),
+                     policy.mesh_axes_for("heads", h), None, None)
+        if path.endswith("'h']"):      # rglru state (B,R)
+            b, r = core
+            return P(None, policy.mesh_axes_for("batch", b),
+                     policy.mesh_axes_for("recur", r))
+        if path.endswith("'conv']"):   # (B,3,R)
+            b, _, r = core
+            return P(None, policy.mesh_axes_for("batch", b), None,
+                     policy.mesh_axes_for("recur", r))
+        if "shift" in path:            # (B,D)
+            b = core[0]
+            return P(None, policy.mesh_axes_for("batch", b), None)
+        if path.endswith("'len']"):
+            return P(None)
+        return P(*([None] * len(shape)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    specs = [spec_for(jax.tree_util.keystr(kp), tuple(leaf.shape))
+             for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def choose_fsdp(cfg: ModelConfig, policy: ShardingPolicy,
+                bytes_per_param: int = 2,
+                hbm_budget: float = 4e9) -> bool:
+    """FSDP the compute params when a TP-only shard would not leave room
+    for activations (> hbm_budget bytes per device)."""
+    tp = policy.mesh.shape.get("model", 1)
+    return cfg.param_count() * bytes_per_param / tp > hbm_budget

@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the paper's hot paths.
+
+philox.py          — standalone dropout-RNG kernel (packed keep-bits)
+flash_attention.py — online-softmax attention; dropout fused|premask|none
+gemm_rng.py        — fused GEMM + RNG (the TPU-native overlap)
+ops.py             — jit'd public wrappers
+ref.py             — pure-jnp oracles (single source of truth)
+"""
+from repro.kernels.ops import (
+    default_interpret,
+    dropout_mask,
+    flash_attention,
+    flash_attention_fwd,
+    fused_qkv_gemm_rng,
+    gemm_with_rng,
+)
+
+__all__ = [
+    "default_interpret",
+    "dropout_mask",
+    "flash_attention",
+    "flash_attention_fwd",
+    "fused_qkv_gemm_rng",
+    "gemm_with_rng",
+]

@@ -1,0 +1,330 @@
+"""Flash-attention Pallas TPU kernel with the paper's three dropout modes.
+
+    mode "none"    — no dropout.
+    mode "fused"   — Philox RNG *inside* the attention kernel (the paper's
+                     baseline, Fig. 4 top): RNG VPU work serializes against
+                     the softmax VPU work, which is why its latency is
+                     exposed on real hardware.
+    mode "premask" — the paper's technique (Fig. 4 bottom): the kernel reads
+                     precomputed packed keep-bits from HBM (produced by the
+                     standalone philox kernel or the fused GEMM+RNG kernel)
+                     and performs only the cheap element-dropping step
+                     (~12% overhead in the paper's measurements).
+
+Tiling: grid (B, H, SQ/bq, SK/bk), k-minor so the online-softmax running
+stats (m, l, acc) live in VMEM scratch across the k sweep. Causal and
+sliding-window blocks that are fully masked are skipped with pl.when.
+Dropout semantics match ref.attention_ref bit-exactly: softmax normalizer l
+accumulates *undropped* probabilities; the keep-mask zeroes the numerator
+contributions; the 1/(1-p) rescale is applied once at finalization.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.philox_common import (
+    seed_to_key,
+    threshold_from_p,
+    tile_keep_mask,
+    unpack_bits_q32,
+)
+
+_NEG_BIG = np.float32(-0.7 * np.finfo(np.float32).max)
+
+
+def _flash_kernel(*refs, bq: int, bk: int, d: int, n_heads: int,
+                  kv_heads: int, scale: float, causal: bool,
+                  local_window: int, q_offset: int, mode: str,
+                  threshold: int, inv_keep: float, salt: int,
+                  k0: int, k1: int, rounds: int, out_dtype,
+                  with_lse: bool = False):
+    lse_ref = None
+    if mode == "premask":
+        if with_lse:
+            (q_ref, k_ref, v_ref, mask_ref, o_ref, lse_ref, m_scr, l_scr,
+             acc_scr) = refs
+        else:
+            q_ref, k_ref, v_ref, mask_ref, o_ref, m_scr, l_scr, acc_scr \
+                = refs
+    else:
+        if with_lse:
+            q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr \
+                = refs
+        else:
+            q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_BIG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # Block-level skip for fully-masked tiles (causal / sliding window).
+    run = jnp.bool_(True)
+    if causal:
+        # lowest q position in this tile (positions are kv-aligned)
+        q_lo = q_start + q_offset
+        q_hi = q_start + bq - 1 + q_offset
+        run = jnp.logical_and(run, k_start <= q_hi)
+        if local_window > 0:
+            run = jnp.logical_and(run, k_start + bk - 1 > q_lo - local_window)
+
+    @pl.when(run)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+
+        if causal or local_window > 0:
+            q_pos = (q_start + q_offset
+                     + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+            k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            valid = jnp.bool_(True)
+            if causal:
+                valid = jnp.logical_and(valid, k_pos <= q_pos)
+            if local_window > 0:
+                valid = jnp.logical_and(valid, k_pos > q_pos - local_window)
+            s = jnp.where(valid, s, _NEG_BIG)
+
+        m_prev = m_scr[...]                           # (bq, 128)
+        l_prev = l_scr[...]                           # (bq, 128)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)    # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)            # (bq, 128)
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])  # (bq, 1)
+        p = jnp.exp(s - m_new[:, :1])                 # (bq, bk)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+        if mode == "fused":
+            bh = b * n_heads + h
+            keep = tile_keep_mask(q_start, k_start, bh, salt, k0, k1,
+                                  threshold, bq, bk, rounds)
+            p_acc = jnp.where(keep, p, 0.0)
+        elif mode == "premask":
+            packed = mask_ref[0, 0]                   # (bq//32, bk)
+            keep = unpack_bits_q32(packed, bq)
+            p_acc = jnp.where(keep, p, 0.0)
+        else:
+            p_acc = p
+
+        pv = jax.lax.dot_general(
+            p_acc, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # (bq, d)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...][:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros
+        out = acc_scr[...] / l * inv_keep
+        o_ref[...] = out[None, None].astype(out_dtype)
+        if lse_ref is not None:
+            lse = m_scr[...][:, 0] + jnp.log(l[:, 0])
+            lse_ref[...] = lse[None, None].astype(jnp.float32)
+
+
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        mask_packed: Optional[jnp.ndarray] = None,
+                        *, causal: bool = True, local_window: int = 0,
+                        dropout_p: float = 0.0, mode: str = "none",
+                        seed: int = 0, salt: int = 0, rounds: int = 7,
+                        scale: Optional[float] = None,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = True,
+                        return_lse: bool = False):
+    """Forward flash attention. q: (B,H,SQ,D); k,v: (B,KV,SK,D).
+
+    mode "premask" requires mask_packed (B,H,SQ//32,SK) uint32 from the
+    canonical counter scheme.
+    """
+    batch, n_heads, sq, d = q.shape
+    kv_heads, sk = k.shape[1], k.shape[2]
+    assert n_heads % kv_heads == 0
+    if mode == "none" or dropout_p == 0.0:
+        mode = "none"
+    if mode == "premask" and mask_packed is None:
+        raise ValueError("premask mode requires mask_packed")
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    if mode == "premask":
+        assert bq % 32 == 0
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    k0, k1 = seed_to_key(seed)
+    grid = (batch, n_heads, sq // bq, sk // bk)
+    group = n_heads // kv_heads
+
+    q_spec = pl.BlockSpec((1, 1, bq, d), lambda b, h, qi, ki: (b, h, qi, 0))
+    kv_spec = pl.BlockSpec((1, 1, bk, d),
+                           lambda b, h, qi, ki: (b, h // group, ki, 0))
+    o_spec = pl.BlockSpec((1, 1, bq, d), lambda b, h, qi, ki: (b, h, qi, 0))
+    in_specs = [q_spec, kv_spec, kv_spec]
+    args = [q, k, v]
+    if mode == "premask":
+        in_specs.append(pl.BlockSpec((1, 1, bq // 32, bk),
+                                     lambda b, h, qi, ki: (b, h, qi, ki)))
+        args.append(mask_packed)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, d=d, n_heads=n_heads,
+        kv_heads=kv_heads, scale=float(scale), causal=causal,
+        local_window=int(local_window), q_offset=sk - sq, mode=mode,
+        threshold=threshold_from_p(dropout_p),
+        inv_keep=float(1.0 / (1.0 - dropout_p)) if mode != "none" else 1.0,
+        salt=salt, k0=k0, k1=k1, rounds=rounds, out_dtype=q.dtype,
+        with_lse=return_lse)
+
+    out_specs = o_spec
+    out_shape = jax.ShapeDtypeStruct((batch, n_heads, sq, d), q.dtype)
+    if return_lse:
+        out_specs = [o_spec,
+                     pl.BlockSpec((1, 1, bq),
+                                  lambda b, h, qi, ki: (b, h, qi))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((batch, n_heads, sq),
+                                          jnp.float32)]
+    # the named_scope marks interpret-mode emulation loops so the
+    # roofline analyzer charges this region by its call-boundary I/O
+    # (= the kernel's true HBM traffic; tiles live in VMEM on TPU)
+    with jax.named_scope("pallas_kernel_region"):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=[
+                pltpu.VMEM((bq, 128), jnp.float32),   # running max m
+                pltpu.VMEM((bq, 128), jnp.float32),   # running denom l
+                pltpu.VMEM((bq, d), jnp.float32),     # output accumulator
+            ],
+            interpret=interpret,
+        )(*args)
+
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11, 12, 13))
+def flash_attention(q, k, v, mask_packed=None, causal=True, local_window=0,
+                    dropout_p=0.0, mode="none", seed=0, salt=0, rounds=7,
+                    block_q=128, block_k=128, interpret=True):
+    """Differentiable flash attention (forward = Pallas kernel; backward =
+    the mathematically identical reference formulas, reusing the same
+    Philox mask so gradients see the exact dropped elements)."""
+    return flash_attention_fwd(
+        q, k, v, mask_packed, causal=causal, local_window=local_window,
+        dropout_p=dropout_p, mode=mode, seed=seed, salt=salt, rounds=rounds,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def _fa_fwd(q, k, v, mask_packed, causal, local_window, dropout_p, mode,
+            seed, salt, rounds, block_q, block_k, interpret):
+    out = flash_attention_fwd(
+        q, k, v, mask_packed, causal=causal, local_window=local_window,
+        dropout_p=dropout_p, mode=mode, seed=seed, salt=salt, rounds=rounds,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return out, (q, k, v, mask_packed)
+
+
+def _zero_ct(x):
+    """Cotangent for a non-float primal (the uint32 mask)."""
+    if x is None:
+        return None
+    import numpy as _np
+    return _np.zeros(x.shape, jax.dtypes.float0)
+
+
+def _fa_bwd(causal, local_window, dropout_p, mode, seed, salt, rounds,
+            block_q, block_k, interpret, res, g):
+    from repro.kernels import ref as _ref
+    q, k, v, mask_packed = res
+    eff_p = 0.0 if mode == "none" else dropout_p
+
+    def f(q_, k_, v_):
+        keep = None
+        if eff_p > 0.0:
+            if mask_packed is not None:
+                b, h, sq32, sk = mask_packed.shape
+                keep = jax.vmap(jax.vmap(
+                    lambda m: unpack_bits_q32(m, sq32 * 32)))(mask_packed)
+            # else: ref regenerates from the canonical counters
+        return _ref.attention_ref(
+            q_, k_, v_, causal=causal, dropout_p=eff_p, dropout_seed=seed,
+            dropout_salt=salt, philox_rounds=rounds, dropout_mask=keep,
+            local_window=local_window)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, _zero_ct(mask_packed)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fully-Pallas differentiable attention (forward AND backward kernels).
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11, 12, 13))
+def flash_attention_mosaic(q, k, v, mask_packed=None, causal=True,
+                           local_window=0, dropout_p=0.0, mode="none",
+                           seed=0, salt=0, rounds=7, block_q=128,
+                           block_k=128, interpret=True):
+    """Flash attention with Pallas forward *and* backward kernels —
+    nothing O(SQ*SK) ever reaches HBM in either direction. In "premask"
+    mode (the paper's overlap technique) the dropout bits come from HBM,
+    so no RNG state enters the kernels and seeds may be traced values on
+    the producer side."""
+    return flash_attention_fwd(
+        q, k, v, mask_packed, causal=causal, local_window=local_window,
+        dropout_p=dropout_p, mode=mode, seed=seed, salt=salt,
+        rounds=rounds, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+
+
+def _fam_fwd(q, k, v, mask_packed, causal, local_window, dropout_p, mode,
+             seed, salt, rounds, block_q, block_k, interpret):
+    o, lse = flash_attention_fwd(
+        q, k, v, mask_packed, causal=causal, local_window=local_window,
+        dropout_p=dropout_p, mode=mode, seed=seed, salt=salt,
+        rounds=rounds, block_q=block_q, block_k=block_k,
+        interpret=interpret, return_lse=True)
+    return o, (q, k, v, mask_packed, o, lse)
+
+
+def _fam_bwd(causal, local_window, dropout_p, mode, seed, salt, rounds,
+             block_q, block_k, interpret, res, g):
+    from repro.kernels.flash_attention_bwd import flash_attention_bwd
+    q, k, v, mask_packed, o, lse = res
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, o, lse, g, mask_packed, causal=causal,
+        local_window=local_window, dropout_p=dropout_p, mode=mode,
+        seed=seed, salt=salt, rounds=rounds, block_q=block_q,
+        block_k=block_k, interpret=interpret)
+    return dq, dk, dv, _zero_ct(mask_packed)
+
+
+flash_attention_mosaic.defvjp(_fam_fwd, _fam_bwd)

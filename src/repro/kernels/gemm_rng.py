@@ -1,0 +1,185 @@
+"""Fused GEMM + dropout-RNG Pallas TPU kernel — the paper's overlap,
+TPU-native.
+
+The paper runs a standalone RNG kernel on a second CUDA stream, concurrent
+with the QKV GEMM, exploiting disjoint bottlenecks (GEMM: MMA math; RNG:
+issue/ALU). TPUs have no streams; the equivalent concurrency lives *inside*
+a kernel: the MXU executes the matmul dots while the VPU — an independent
+unit — executes the Philox chain. Mosaic's scheduler interleaves the two
+instruction streams per grid step, hiding the RNG latency under the MXU
+work exactly as the paper hides it under SM tensor pipes.
+
+Work assignment: the packed mask (flattened 2D layout (BH*SQ32, SK), row-
+padded) is partitioned into (rb x ck) blocks; block s is produced by the
+s-th (i, j) GEMM tile at its k==0 step (the mask buffer stays resident
+across the k sweep, so the single write is flushed exactly once, when the
+(i, j) tile retires). GEMM steps beyond the number of mask blocks write a
+dummy trailing block that is sliced off. If the GEMM grid is too *small*
+to host the mask work within the VMEM row budget, the caller falls back to
+the standalone philox kernel — the paper's Region 3 (RNG runtime exceeds
+GEMM; the remainder runs exposed).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.philox_common import (
+    packed_rows_tile,
+    seed_to_key,
+    threshold_from_p,
+)
+
+
+def _mask_block_idx(s, n_valid_blocks: int, n_cb: int, n_rb_valid: int):
+    """Block coords for GEMM step s: valid steps get their own block;
+    overflow steps share the dummy trailing row-block."""
+    over = s >= n_valid_blocks
+    rb_idx = jnp.where(over, n_rb_valid, s // n_cb)
+    cb_idx = jnp.where(over, 0, s % n_cb)
+    return rb_idx, cb_idx
+
+
+def _gemm_rng_kernel(a_ref, b_ref, c_ref, m_ref, acc_scr, *,
+                     n_cb: int, rb: int, ck: int, sq32: int, salt: int,
+                     k0: int, k1: int, threshold: int, rounds: int,
+                     n_valid_blocks: int, n_rb_valid: int, out_dtype):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    kk = pl.program_id(2)
+    nk = pl.num_programs(2)
+    gn = pl.num_programs(1)
+
+    @pl.when(kk == 0)
+    def _zero():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # --- MXU stream: tiled matmul accumulation --------------------------
+    acc_scr[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # --- VPU stream: Philox mask chunk (no MXU op in this path) ---------
+    @pl.when(kk == 0)
+    def _rng():
+        s = i * gn + j
+        rb_idx, cb_idx = _mask_block_idx(s, n_valid_blocks, n_cb,
+                                         n_rb_valid)
+        m_ref[...] = packed_rows_tile(
+            rb_idx * rb, cb_idx * ck, sq32, salt, k0, k1, threshold,
+            rb, ck, rounds)
+
+    @pl.when(kk == nk - 1)
+    def _flush():
+        c_ref[...] = acc_scr[...].astype(out_dtype)
+
+
+def gemm_with_rng(a: jnp.ndarray, b: jnp.ndarray, *,
+                  mask_batch: int, mask_heads: int, mask_sq: int,
+                  mask_sk: int, p: float, seed: int, salt: int = 0,
+                  rounds: int = 7,
+                  block_m: int = 256, block_n: int = 256,
+                  block_k: int = 512, mask_block_cols: int = 2048,
+                  max_mask_rows_per_block: int = 256,
+                  interpret: bool = True,
+                  ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """C = a @ b, plus the packed dropout keep-mask (B, H, SQ//32, SK)
+    generated under the GEMM. Returns (C, mask) — mask is None when the
+    GEMM grid cannot host the mask work (caller falls back to the
+    standalone kernel; the paper's Region 3).
+    """
+    m, kdim = a.shape
+    k2, n = b.shape
+    assert kdim == k2
+    bm, bn, bkk = min(block_m, m), min(block_n, n), min(block_k, kdim)
+    assert m % bm == 0 and n % bn == 0 and kdim % bkk == 0
+    gm, gn, gk = m // bm, n // bn, kdim // bkk
+    n_steps = gm * gn
+
+    assert mask_sq % 32 == 0
+    sq32 = mask_sq // 32
+    mr = mask_batch * mask_heads * sq32          # valid packed rows
+    ck = min(mask_block_cols, mask_sk)
+    assert mask_sk % ck == 0
+    n_cb = mask_sk // ck
+    rows_per_block = max(1, n_steps // n_cb)
+    rb = -(-mr // rows_per_block)                # ceil
+    rb = -(-rb // 8) * 8                         # sublane multiple
+    n_rb_valid = -(-mr // rb)
+    n_valid_blocks = n_rb_valid * n_cb
+    if rb > max_mask_rows_per_block or n_valid_blocks > n_steps:
+        # GEMM too small to hide this much RNG (paper Region 3): bail out.
+        return _plain_gemm(a, b, bm, bn, bkk, interpret), None
+    mask_rows_alloc = (n_rb_valid + 1) * rb      # +1 dummy overflow block
+
+    k0, k1 = seed_to_key(seed)
+    kernel = functools.partial(
+        _gemm_rng_kernel, n_cb=n_cb, rb=rb, ck=ck, sq32=sq32, salt=salt,
+        k0=k0, k1=k1, threshold=threshold_from_p(p), rounds=rounds,
+        n_valid_blocks=n_valid_blocks, n_rb_valid=n_rb_valid,
+        out_dtype=a.dtype)
+
+    def _mask_index_map(i, j, kk, _gn=gn):
+        rb_idx, cb_idx = _mask_block_idx(i * _gn + j, n_valid_blocks,
+                                         n_cb, n_rb_valid)
+        return rb_idx, cb_idx
+
+    c, mask2d = pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bkk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bkk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((rb, ck), _mask_index_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), a.dtype),
+            jax.ShapeDtypeStruct((mask_rows_alloc, mask_sk), jnp.uint32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    mask = mask2d[:mr].reshape(mask_batch, mask_heads, sq32, mask_sk)
+    return c, mask
+
+
+def _plain_gemm(a, b, bm, bn, bkk, interpret):
+    """Tiled matmul without the RNG side-channel (fallback / baseline)."""
+    m, kdim = a.shape
+    _, n = b.shape
+
+    def kern(a_ref, b_ref, c_ref, acc_scr):
+        kk = pl.program_id(2)
+
+        @pl.when(kk == 0)
+        def _zero():
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        acc_scr[...] += jax.lax.dot_general(
+            a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(kk == pl.num_programs(2) - 1)
+        def _flush():
+            c_ref[...] = acc_scr[...].astype(a.dtype)
+
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn, kdim // bkk),
+        in_specs=[
+            pl.BlockSpec((bm, bkk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bkk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,51 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults to True when no TPU is present (this container), so
+the same call sites run on CPU for validation and compile to Mosaic on TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_fwd
+from repro.kernels.gemm_rng import gemm_with_rng
+from repro.kernels.philox import philox_dropout_mask
+
+__all__ = [
+    "default_interpret",
+    "dropout_mask",
+    "flash_attention",
+    "flash_attention_fwd",
+    "fused_qkv_gemm_rng",
+    "gemm_with_rng",
+]
+
+
+def default_interpret() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def dropout_mask(batch: int, n_heads: int, sq: int, sk: int, p: float,
+                 seed: int, salt: int = 0, rounds: int = 7) -> jnp.ndarray:
+    """Standalone-RNG kernel: packed keep-bits (B, H, SQ//32, SK)."""
+    return philox_dropout_mask(batch, n_heads, sq, sk, p, seed, salt,
+                               rounds, interpret=default_interpret())
+
+
+def fused_qkv_gemm_rng(x: jnp.ndarray, w_qkv: jnp.ndarray, *,
+                       mask_batch: int, mask_heads: int, mask_sq: int,
+                       mask_sk: int, p: float, seed: int, salt: int = 0,
+                       rounds: int = 7,
+                       ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """QKV projection with the dropout mask for the *following* attention
+    layer generated under the GEMM (the paper's Fig. 4 overlap topology).
+    Falls back to (plain GEMM, None) when the GEMM cannot host the RNG —
+    the caller should then invoke ``dropout_mask`` (exposed RNG, paper
+    Region 3)."""
+    return gemm_with_rng(
+        x, w_qkv, mask_batch=mask_batch, mask_heads=mask_heads,
+        mask_sq=mask_sq, mask_sk=mask_sk, p=p, seed=seed, salt=salt,
+        rounds=rounds, interpret=default_interpret())

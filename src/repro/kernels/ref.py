@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every kernel. These are the single source of truth
+the Pallas kernels are validated against (assert_allclose in tests), and the
+math the custom_vjp backward passes reuse.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.philox_common import (
+    seed_to_key,
+    threshold_from_p,
+    tile_keep_mask,
+)
+
+
+def philox_mask_ref(batch: int, n_heads: int, sq: int, sk: int, p: float,
+                    seed: int, salt: int = 0, rounds: int = 7,
+                    packed: bool = True) -> jnp.ndarray:
+    """Dropout keep-mask for a full (B, H, SQ, SK) score tensor.
+
+    Returns packed uint32 (B, H, SQ//32, SK) when ``packed`` (requires
+    SQ % 32 == 0), else bool (B, H, SQ, SK).
+    """
+    keep = keep_mask_ref(batch, n_heads, sq, sk, p, seed, salt, rounds)
+    if not packed:
+        return keep
+    assert sq % 32 == 0
+    # pack 32 consecutive q rows (within each (b, h)) into one uint32
+    b = keep.reshape(batch, n_heads, sq // 32, 32, sk).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32).reshape(1, 1, 1, 32, 1)
+    return jnp.sum(b << shifts, axis=3, dtype=jnp.uint32)
+
+
+def keep_mask_ref(batch: int, n_heads: int, sq: int, sk: int, p: float,
+                  seed: int, salt: int = 0, rounds: int = 7) -> jnp.ndarray:
+    """Bool (B, H, SQ, SK) keep-mask (tile_keep_mask over the full array —
+    identical bits to philox_mask_ref; cheaper when unpacked is wanted)."""
+    k0, k1 = seed_to_key(seed)
+    thr = threshold_from_p(p)
+    per_bh = []
+    for i in range(batch * n_heads):
+        per_bh.append(tile_keep_mask(0, 0, i, salt, k0, k1, thr, sq, sk,
+                                     rounds))
+    return jnp.stack(per_bh).reshape(batch, n_heads, sq, sk)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True,
+                  dropout_p: float = 0.0,
+                  dropout_seed: int = 0,
+                  dropout_salt: int = 0,
+                  philox_rounds: int = 7,
+                  dropout_mask: Optional[jnp.ndarray] = None,
+                  local_window: int = 0,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference multi-head attention with the paper's dropout semantics:
+    softmax over ALL scores, THEN drop (mask) the normalized probabilities,
+    scaled by 1/(1-p).
+
+    q: (B, H, SQ, D); k, v: (B, KV, SK, D) with H % KV == 0 (GQA).
+    dropout_mask: optional precomputed bool (B, H, SQ, SK) keep-mask — the
+    "premask" path. When None and dropout_p > 0, the mask is generated
+    in-place from the canonical Philox scheme (the "fused" path). Both give
+    bit-identical results by construction.
+    """
+    b, h, sq, d = q.shape
+    kv = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if h != kv:
+        rep = h // kv
+        kf = jnp.repeat(kf, rep, axis=1)
+        vf = jnp.repeat(vf, rep, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    sk = scores.shape[-1]
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    # decode-style offset: queries sit at the END of the kv sequence
+    q_pos = q_pos + (sk - sq)
+    neg = jnp.float32(-1e30)
+    if causal:
+        scores = jnp.where(k_pos <= q_pos, scores, neg)
+    if local_window and local_window > 0:
+        scores = jnp.where(k_pos > q_pos - local_window, scores, neg)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    denom = probs.sum(axis=-1, keepdims=True)
+    probs = probs / denom
+    if dropout_p > 0.0:
+        if dropout_mask is None:
+            dropout_mask = keep_mask_ref(b, h, sq, sk, dropout_p,
+                                         dropout_seed, dropout_salt,
+                                         philox_rounds)
+        probs = jnp.where(dropout_mask, probs, 0.0) / (1.0 - dropout_p)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def gemm_rng_ref(a: jnp.ndarray, b: jnp.ndarray,
+                 mask_batch: int, mask_heads: int, mask_sq: int,
+                 mask_sk: int, p: float, seed: int, salt: int = 0,
+                 rounds: int = 7) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the fused GEMM+RNG kernel: plain matmul + the canonical
+    packed mask. The kernel must reproduce BOTH outputs exactly (mask) /
+    allclose (matmul)."""
+    c = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)
+    mask = philox_mask_ref(mask_batch, mask_heads, mask_sq, mask_sk, p,
+                           seed, salt, rounds, packed=True)
+    return c, mask
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)

@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any other import (jax locks the
+# device count on first init). Everything below is ordinary code.
+#
+# Multi-pod dry-run: for every (architecture x input shape) cell, lower
+# and compile the real train/serve step on the production mesh —
+# ShapeDtypeStruct inputs only, no allocation — and extract
+# memory_analysis / cost_analysis / collective schedule for the roofline.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b \
+#       --shape train_4k --multi-pod both --out experiments/dryrun
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.config import (  # noqa: E402
+    DropoutPlanConfig,
+    RunConfig,
+    ShardingConfig,
+    applicable_shapes,
+    get_arch,
+    get_shape,
+    list_archs,
+)
+from repro.config.base import StepKind  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    LAYOUT_PRESETS,
+    ShardingPolicy,
+)
+from repro.distributed.specs import (  # noqa: E402
+    cache_specs,
+    choose_fsdp,
+    param_specs,
+    to_shardings,
+    train_state_specs,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import cache_init, model_init  # noqa: E402
+from repro.roofline import analysis  # noqa: E402
+from repro.train.loop import (  # noqa: E402
+    init_train_state,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _sds(tree_shapes, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree_shapes, shardings)
+
+
+def input_specs(arch: str, shape_name: str, policy: ShardingPolicy,
+                kv_bits: int = 16):
+    """ShapeDtypeStruct stand-ins for every model input of a cell —
+    weak-type-correct, shardable, no device allocation."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = policy.mesh
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == StepKind.TRAIN:
+        if cfg.frontend == "token":
+            x = jax.ShapeDtypeStruct(
+                (b, s), jnp.int32,
+                sharding=policy.sharding(("batch", None), (b, s)))
+        else:
+            x = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), COMPUTE_DTYPE,
+                sharding=policy.sharding(("batch", None, None),
+                                         (b, s, cfg.d_model)))
+        y = jax.ShapeDtypeStruct(
+            (b, s), jnp.int32,
+            sharding=policy.sharding(("batch", None), (b, s)))
+        return {"x": x, "y": y}
+    if shape.kind == StepKind.PREFILL:
+        if cfg.frontend == "token":
+            x = jax.ShapeDtypeStruct(
+                (b, s), jnp.int32,
+                sharding=policy.sharding(("batch", None), (b, s)))
+        else:
+            x = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), COMPUTE_DTYPE,
+                sharding=policy.sharding(("batch", None, None),
+                                         (b, s, cfg.d_model)))
+        return {"x": x}
+    # decode: one new token against a seq_len KV cache/state
+    if cfg.frontend == "token":
+        x = jax.ShapeDtypeStruct(
+            (b, 1), jnp.int32,
+            sharding=policy.sharding(("batch", None), (b, 1)))
+    else:
+        x = jax.ShapeDtypeStruct(
+            (b, 1, cfg.d_model), COMPUTE_DTYPE,
+            sharding=policy.sharding(("batch", None, None),
+                                     (b, 1, cfg.d_model)))
+    cache_shapes = jax.eval_shape(
+        lambda: cache_init(cfg, b, s, COMPUTE_DTYPE, prefilled_len=s - 1,
+                           kv_bits=kv_bits))
+    c_specs = cache_specs(cache_shapes, cfg, policy)
+    caches = _sds(cache_shapes, to_shardings(c_specs, mesh))
+    return {"x": x, "caches": caches}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               run_overrides: Optional[dict] = None):
+    """Lower + compile one cell. Returns (compiled, meta dict)."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = run_overrides or {}
+    # Baseline layout (see LAYOUT_PRESETS): dense training -> DP+FSDP over
+    # all chips; MoE training -> EP('data')+TP('model'); serving -> TP.
+    layout = overrides.get("layout")
+    if layout is None:
+        # dense training fits pure DP+FSDP only while the global batch
+        # covers every mesh axis (256 == 16x16); at 512 chips the extra
+        # parallelism must come from TP, so multi-pod flips to "tp".
+        if (shape.kind == StepKind.TRAIN and cfg.moe is None
+                and not multi_pod):
+            layout = "fsdp"
+        else:
+            layout = "tp"
+    rules = dict(LAYOUT_PRESETS[layout])
+    if overrides.get("moe_seq_dispatch"):
+        # §Perf ep_model MoE layout (see models/moe.py)
+        rules.update({"expert": ("model",), "expert_fsdp": ("data",)})
+    rules.update(overrides.get("rules", {}))
+    policy = ShardingPolicy(mesh, rules=rules)
+    fsdp = (layout == "fsdp") or choose_fsdp(cfg, policy)
+    policy.fsdp_params = fsdp
+    dropout_mode = overrides.get("dropout_mode", "overlap")
+    # rwkv6 has no attention-score matrix: technique inapplicable
+    if cfg.attn_dropout == 0.0:
+        dropout_mode = "none"
+    run = RunConfig(
+        model=cfg, shape=shape,
+        sharding=ShardingConfig(
+            remat=overrides.get("remat", "block"),
+            attn_probs_bf16=overrides.get("probs_bf16", False),
+            moe_seq_dispatch=overrides.get("moe_seq_dispatch", False),
+            attn_impl=overrides.get("attn_impl", "xla")),
+        dropout=DropoutPlanConfig(
+            mode=dropout_mode, p=0.1,
+            philox_bits=overrides.get("philox_bits", 32)),
+    )
+    ins = input_specs(arch, shape_name, policy,
+                      kv_bits=overrides.get("kv_bits", 16))
+    t0 = time.perf_counter()
+
+    if shape.kind == StepKind.TRAIN:
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(0), cfg))
+        st_specs = train_state_specs(state_shapes, policy, fsdp=fsdp,
+                                     zero1=run.sharding.zero1)
+        st_sh = to_shardings(st_specs, mesh)
+        state_sds = _sds(state_shapes, st_sh)
+        step_fn = make_train_step(cfg, run, policy, COMPUTE_DTYPE)
+        jitted = jax.jit(step_fn, out_shardings=(st_sh, None),
+                         donate_argnums=(0,))
+        with mesh:
+            lowered = jitted.lower(state_sds, ins["x"], ins["y"])
+            compiled = lowered.compile()
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = analysis.model_flops_train(cfg, tokens)
+    elif shape.kind == StepKind.PREFILL:
+        params_shapes = jax.eval_shape(
+            lambda: model_init(jax.random.PRNGKey(0), cfg))
+        params_shapes = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, COMPUTE_DTYPE)
+            if l.dtype == jnp.float32 else l, params_shapes)
+        p_specs = param_specs(params_shapes, policy, fsdp=False)
+        p_sh = to_shardings(p_specs, mesh)
+        params_sds = _sds(params_shapes, p_sh)
+        step_fn = make_prefill_step(cfg, policy, COMPUTE_DTYPE)
+        jitted = jax.jit(step_fn)
+        with mesh:
+            lowered = jitted.lower(params_sds, ins["x"])
+            compiled = lowered.compile()
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = analysis.model_flops_decode(cfg, tokens)
+    else:  # decode
+        params_shapes = jax.eval_shape(
+            lambda: model_init(jax.random.PRNGKey(0), cfg))
+        params_shapes = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, COMPUTE_DTYPE)
+            if l.dtype == jnp.float32 else l, params_shapes)
+        p_specs = param_specs(params_shapes, policy, fsdp=False)
+        p_sh = to_shardings(p_specs, mesh)
+        params_sds = _sds(params_shapes, p_sh)
+        step_fn = make_serve_step(cfg, policy, COMPUTE_DTYPE)
+        jitted = jax.jit(step_fn, donate_argnums=(2,))
+        with mesh:
+            lowered = jitted.lower(params_sds, ins["x"], ins["caches"])
+            compiled = lowered.compile()
+        tokens = shape.global_batch
+        model_flops = analysis.model_flops_decode(cfg, tokens)
+
+    compile_s = time.perf_counter() - t0
+    n_dev = mesh.devices.size
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "layout": layout,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "kind": shape.kind.value,
+        "fsdp_params": bool(fsdp),
+        "dropout_mode": dropout_mode,
+        "compile_seconds": compile_s,
+        "model_flops_per_device": model_flops / n_dev,
+    }
+    return compiled, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Optional[str] = None,
+             run_overrides: Optional[dict] = None,
+             verbose: bool = True) -> dict:
+    compiled, meta = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                run_overrides=run_overrides)
+    hlo_text = compiled.as_text()
+    roof = analysis.analyze_compiled(
+        compiled, model_flops_per_device=meta["model_flops_per_device"],
+        hlo_text=hlo_text)
+    mem = analysis.memory_stats(compiled)
+    report = {**meta, "memory": mem, "roofline": roof.to_dict()}
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {meta['mesh']}: "
+              f"compile={meta['compile_seconds']:.1f}s "
+              f"bound={roof.bound} "
+              f"t=(c {roof.t_compute*1e3:.2f} | m {roof.t_memory*1e3:.2f}"
+              f" | coll {roof.t_collective*1e3:.2f}) ms "
+              f"hbm={mem.get('total_hbm_bytes', 0)/2**30:.2f} GiB "
+              f"useful={roof.useful_flops_fraction:.2f}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{meta['mesh'].replace('x', '_')}"
+        analysis.save_report(os.path.join(out_dir, tag + ".json"), report)
+    del compiled
+    return report
+
+
+def all_cells():
+    for arch in list_archs():
+        if arch in ("llama2-7b", "gpt3-175b"):
+            continue  # paper-model configs; not assigned dry-run cells
+        for shape_name in applicable_shapes(arch):
+            yield arch, shape_name
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", choices=("on", "off", "both"),
+                    default="both")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    pods = {"on": [True], "off": [False],
+            "both": [False, True]}[args.multi_pod]
+    cells = list(all_cells())
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+
+    failures = []
+    for arch, shape_name in cells:
+        for mp in pods:
+            tag = (f"{arch}__{shape_name}__"
+                   f"{'2_16_16' if mp else '16_16'}")
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[dryrun] skip {tag} (exists)")
+                continue
+            try:
+                run_cell(arch, shape_name, mp, args.out)
+            except Exception as e:  # a failing cell is a bug in the system
+                failures.append((arch, shape_name, mp, repr(e)))
+                traceback.print_exc()
+            finally:
+                jax.clear_caches()  # bound compile-cache growth (1 proc)
+    if failures:
+        print(f"\n[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        return 1
+    print(f"\n[dryrun] all {len(cells)} cells x {len(pods)} mesh(es) OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

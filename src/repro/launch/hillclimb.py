@@ -1,0 +1,60 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# §Perf hillclimb driver: lower a cell with optimization knobs and report
+# the roofline delta vs the recorded baseline.
+#
+#   PYTHONPATH=src python -m repro.launch.hillclimb --arch yi-6b \
+#       --shape train_4k --set probs_bf16=1 philox_bits=8
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="opt")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="k=v overrides (probs_bf16, philox_bits, "
+                         "moe_seq_dispatch, remat, layout, dropout_mode)")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = (int(v) if v.lstrip("-").isdigit() else v)
+        if k in ("probs_bf16", "moe_seq_dispatch"):
+            overrides[k] = bool(int(v))
+
+    report = run_cell(args.arch, args.shape, args.multi_pod,
+                      out_dir=None, run_overrides=overrides)
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{args.arch}__{args.shape}__{args.tag}"
+    report["overrides"] = overrides
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(report, f, indent=2, default=float)
+
+    base_path = os.path.join(
+        "experiments/dryrun",
+        f"{args.arch}__{args.shape}__"
+        f"{'2_16_16' if args.multi_pod else '16_16'}.json")
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            base = json.load(f)["roofline"]
+        roof = report["roofline"]
+        for term in ("t_compute_s", "t_memory_s", "t_collective_s"):
+            b, o = base[term], roof[term]
+            print(f"  {term}: {b*1e3:10.1f} -> {o*1e3:10.1f} ms "
+                  f"({b/max(o,1e-12):5.2f}x)")
+        print(f"  roofline_fraction: {base['roofline_fraction']:.4f} -> "
+              f"{roof['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state — required because the dry-run must set
+XLA_FLAGS before the first jax initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.config.base import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods =
+    512 chips with a leading 'pod' (pure-DP / DCN) axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    if multi_pod:
+        return MeshConfig(shape=(2, 16, 16), axes=("pod", "data", "model"))
+    return MeshConfig(shape=(16, 16), axes=("data", "model"))
+
+
+def make_mesh_from_config(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axes)
+
+
+def make_host_mesh(shape: Tuple[int, ...] = None,
+                   axes: Tuple[str, ...] = None):
+    """Small mesh over whatever devices exist (tests / examples).
+    Defaults to (n_devices,) over axis 'data'."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n,)
+        axes = axes or ("data",)
+    assert int(np.prod(shape)) <= n, (shape, n)
+    return jax.make_mesh(shape, axes)

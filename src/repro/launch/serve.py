@@ -1,0 +1,89 @@
+"""Batched serving driver: prefill a batch of prompts, then decode with a
+continuous batched loop (greedy sampling).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
+        --batch 4 --prompt-len 64 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_arch
+from repro.models import Runtime, model_init, prefill, decode_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, reduced=args.reduced)
+    rt = Runtime(plan=None, compute_dtype=jnp.float32,
+                 chunk_q=min(256, args.prompt_len))
+    key = jax.random.PRNGKey(args.seed)
+    params = model_init(key, cfg)
+    print(f"[serve] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"batch={args.batch} prompt={args.prompt_len} "
+          f"max_new={args.max_new}")
+
+    if cfg.frontend == "token":
+        prompts = jax.random.randint(
+            key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    else:
+        prompts = jax.random.normal(
+            key, (args.batch, args.prompt_len, cfg.d_model), jnp.float32)
+
+    capacity = args.prompt_len + args.max_new
+    prefill_fn = jax.jit(
+        lambda p, x: prefill(params, cfg, rt, x, capacity=capacity))
+    t0 = time.perf_counter()
+    logits, caches = prefill_fn(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    print(f"[serve] prefill: {t_prefill*1e3:.1f} ms "
+          f"({args.batch * args.prompt_len / t_prefill:,.0f} tok/s)")
+
+    decode_fn = jax.jit(
+        lambda p, x, c: decode_step(p, cfg, rt, x, c))
+
+    def sample(lg, k):
+        if args.temperature <= 0.0:
+            return jnp.argmax(lg[:, -1, :], axis=-1)
+        return jax.random.categorical(k, lg[:, -1, :] / args.temperature)
+
+    toks = sample(logits, key)
+    generated = [toks]
+    t0 = time.perf_counter()
+    for i in range(args.max_new - 1):
+        key, sub = jax.random.split(key)
+        if cfg.frontend == "token":
+            inp = toks[:, None]
+        else:
+            # embed-stub archs: feed the frontend embedding of the token
+            # id through a fixed projection (stub)
+            inp = jax.random.normal(sub, (args.batch, 1, cfg.d_model),
+                                    jnp.float32) * 0.02
+        logits, caches = decode_fn(params, inp, caches)
+        toks = sample(logits, sub)
+        generated.append(toks)
+    jax.block_until_ready(toks)
+    t_dec = time.perf_counter() - t0
+    n_dec = max(args.max_new - 1, 1)
+    print(f"[serve] decode: {t_dec/n_dec*1e3:.2f} ms/token "
+          f"({args.batch * n_dec / t_dec:,.0f} tok/s aggregate)")
+    out = jnp.stack(generated, axis=1)
+    print(f"[serve] sample tokens (seq 0): {out[0][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

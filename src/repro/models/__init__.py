@@ -1,0 +1,22 @@
+"""Model zoo: composable decoder blocks covering all assigned archs."""
+from repro.models.transformer import (
+    Runtime,
+    StackSpec,
+    build_stacks,
+    cache_init,
+    decode_step,
+    forward,
+    model_init,
+    prefill,
+)
+
+__all__ = [
+    "Runtime",
+    "StackSpec",
+    "build_stacks",
+    "cache_init",
+    "decode_step",
+    "forward",
+    "model_init",
+    "prefill",
+]

@@ -1,0 +1,363 @@
+"""GQA attention block: projections, rope, qk-norm, dropout plan, caches.
+
+This is where the paper's topology lives: in overlap mode the packed
+dropout mask is generated NEXT TO the QKV projection (``qkv+RNG`` site) and
+consumed downstream by the attention core — Fig. 4 of the paper. On TPU the
+fused gemm_rng kernel realizes the same site physically (MXU ∥ VPU).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AttentionKind, ModelConfig
+from repro.core.attention import attention_decode, attention_xla
+from repro.core.overlap import DropoutPlan
+from repro.distributed.sharding import constrain
+from repro.models.layers import apply_rope, dense_init, rms_head_norm
+
+
+def attn_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d, nq, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "w_q": dense_init(ks[0], d, nq * hd),
+        "w_k": dense_init(ks[1], d, nkv * hd),
+        "w_v": dense_init(ks[2], d, nkv * hd),
+        "w_o": dense_init(ks[3], nq * hd, d),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((nq * hd,), jnp.float32)
+        p["b_k"] = jnp.zeros((nkv * hd,), jnp.float32)
+        p["b_v"] = jnp.zeros((nkv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    """x (B, S, D) -> q (B,H,S,hd), k/v (B,KV,S,hd)."""
+    b, s, _ = x.shape
+    nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = x @ p["w_q"].astype(dt)
+    k = x @ p["w_k"].astype(dt)
+    v = x @ p["w_v"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["b_q"].astype(dt)
+        k = k + p["b_k"].astype(dt)
+        v = v + p["b_v"].astype(dt)
+    q = constrain(q.reshape(b, s, nq, hd), "batch", None, "heads", None)
+    k = constrain(k.reshape(b, s, nkv, hd), "batch", None, "kv_heads", None)
+    v = constrain(v.reshape(b, s, nkv, hd), "batch", None, "kv_heads", None)
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, *, kind: AttentionKind,
+               plan: Optional[DropoutPlan], layer_idx, step,
+               chunk_q: int = 1024, probs_dtype=None,
+               impl: str = "xla", policy=None) -> jnp.ndarray:
+    """Training / prefill forward (full sequence). x (B, S, D)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    local = cfg.local_window if kind == AttentionKind.LOCAL else 0
+
+    # --- the paper's overlap site: mask precomputed at the QKV GEMM ---
+    packed = None
+    if plan is not None and plan.enabled and plan.overlapped:
+        packed = plan.precompute_mask(b, cfg.n_heads, s, s, layer_idx, step)
+
+    if impl == "pallas" and _pallas_ok(plan, policy, cfg, s):
+        out = _attn_pallas_sharded(q, k, v, packed, plan, local, policy)
+    else:
+        import jax.numpy as _jnp
+        out = attention_xla(
+            q, k, v, causal=True, local_window=local, plan=plan,
+            layer_idx=layer_idx, step=step, packed_mask=packed,
+            chunk_q=chunk_q, probs_dtype=probs_dtype or _jnp.float32)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    out = constrain(out, "batch", None, "heads")
+    return out @ p["w_o"].astype(x.dtype)
+
+
+def _pallas_ok(plan, policy, cfg, s) -> bool:
+    """The flash fwd+bwd kernels need premask-or-none dropout (dynamic
+    seeds never enter the kernel — the paper's decoupling makes the RNG
+    producer-side) and shard-local full kv (batch-only sharding or
+    kv-divisible head sharding)."""
+    if plan is not None and plan.enabled and not plan.overlapped:
+        return False  # fused mode would need in-kernel dynamic seeds
+    if s % 128 != 0:
+        return False
+    if policy is None:
+        return True
+    h_ax = policy.mesh_axes_for("heads", cfg.n_heads)
+    kv_ax = policy.mesh_axes_for("kv_heads", cfg.n_kv_heads)
+    return h_ax is None or kv_ax is not None
+
+
+def _attn_pallas_sharded(q, k, v, packed, plan, local, policy):
+    """shard_map over the mesh; each shard runs the Pallas flash kernels
+    (Mosaic on TPU; interpret lowering here)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels import default_interpret
+    from repro.kernels.flash_attention import flash_attention_mosaic
+
+    p_drop = plan.cfg.p if (plan is not None and plan.enabled) else 0.0
+    mode = "premask" if (packed is not None and p_drop > 0.0) else "none"
+    rounds = plan.cfg.philox_rounds if plan is not None else 7
+    interp = default_interpret()
+
+    def body(q_, k_, v_, m_):
+        return flash_attention_mosaic(
+            q_, k_, v_, m_, True, local, p_drop, mode, 0, 0, rounds,
+            128, 128, interp)
+
+    if policy is None:
+        return body(q, k, v, packed if mode == "premask" else None)
+
+    mesh = policy.mesh
+    bsz = q.shape[0]
+    b_ax = policy.mesh_axes_for("batch", bsz)
+    h_ax = policy.mesh_axes_for("heads", q.shape[1])
+    qs = P(b_ax, h_ax, None, None)
+    kvs = P(b_ax,
+            policy.mesh_axes_for("kv_heads", k.shape[1]), None, None)
+    ms = P(b_ax, h_ax, None, None)
+    if mode == "premask":
+        return jax.shard_map(
+            body, mesh=mesh, in_specs=(qs, kvs, kvs, ms),
+            out_specs=qs, check_vma=False)(q, k, v, packed)
+    return jax.shard_map(
+        lambda q_, k_, v_: body(q_, k_, v_, None), mesh=mesh,
+        in_specs=(qs, kvs, kvs), out_specs=qs,
+        check_vma=False)(q, k, v)
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+def attn_cache_init(cfg: ModelConfig, kind: AttentionKind, batch: int,
+                    max_len: int, dtype,
+                    kv_bits: int = 16) -> Dict[str, jnp.ndarray]:
+    size = (min(max_len, cfg.local_window)
+            if kind == AttentionKind.LOCAL else max_len)
+    shape = (batch, cfg.n_kv_heads, size, cfg.head_dim)
+    if kv_bits == 8:
+        # §Perf serving knob: int8 cache + per-(token, head) scales —
+        # halves the decode memory floor (the KV-cache read)
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:3] + (1,), jnp.float32),
+            "v_scale": jnp.zeros(shape[:3] + (1,), jnp.float32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def quantize_kv(x: jnp.ndarray):
+    """(B,KV,S,D) -> (int8 values, f32 per-row scales)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attn_prefill(p, x, cfg: ModelConfig, *, kind: AttentionKind,
+                 plan, layer_idx, step, chunk_q: int = 1024,
+                 capacity: int = 0
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Prefill: full-sequence attention + cache construction. ``capacity``
+    reserves decode room in FULL caches (>= s + new tokens)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    local = cfg.local_window if kind == AttentionKind.LOCAL else 0
+    out = attention_xla(q, k, v, causal=True, local_window=local,
+                        plan=None, chunk_q=chunk_q)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    y = out @ p["w_o"].astype(x.dtype)
+    if kind == AttentionKind.LOCAL:
+        w = cfg.local_window
+        if s >= w:
+            # ring layout slot = pos % w: roll the last-w tail by s so
+            # cache[(s - w + i) % w] = key(s - w + i)
+            k_cache = jnp.roll(k[:, :, -w:], s % w, axis=2)
+            v_cache = jnp.roll(v[:, :, -w:], s % w, axis=2)
+        else:
+            pad = ((0, 0), (0, 0), (0, w - s), (0, 0))
+            k_cache = jnp.pad(k, pad)
+            v_cache = jnp.pad(v, pad)
+    else:
+        cap = max(capacity, s)
+        pad = ((0, 0), (0, 0), (0, cap - s), (0, 0))
+        k_cache = jnp.pad(k, pad)
+        v_cache = jnp.pad(v, pad)
+    # kv-heads on 'model' when divisible, else sequence (flash-decoding)
+    from repro.distributed.sharding import current_policy
+    pol = current_policy()
+    kv_ax = ("kv_heads", None)
+    if pol is not None and pol.mesh_axes_for("kv_heads",
+                                             cfg.n_kv_heads) is None:
+        kv_ax = (None, "kv_seq")
+    cache = {"k": constrain(k_cache, "batch", kv_ax[0], kv_ax[1], None),
+             "v": constrain(v_cache, "batch", kv_ax[0], kv_ax[1], None),
+             "len": jnp.asarray(s, jnp.int32)}
+    return y, cache
+
+
+def attn_decode(p, x1, cache, cfg: ModelConfig, *, kind: AttentionKind
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode, cache READ-ONLY. x1 (B, 1, D).
+
+    Returns (y, update) where update = {"k_tok", "v_tok", "len"} — the
+    caller writes the token column into the stacked cache *outside* the
+    layer scan (one tiny DUS for all layers instead of a full cache
+    write-back per layer, the difference between O(cache) and O(token)
+    write traffic per decode step).
+    """
+    b = x1.shape[0]
+    pos = cache["len"]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x1, cfg, positions)   # (B,H,1,hd)/(B,KV,1,hd)
+    size = cache["k"].shape[2]
+    quantized = "k_scale" in cache
+    # attend over valid cached positions + the current token (virtual)
+    out = attention_decode_appended(
+        q, cache["k"], cache["v"], k, v, pos, size,
+        kind == AttentionKind.LOCAL,
+        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"))
+    y = out.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ p["w_o"].astype(
+        x1.dtype)
+    if quantized:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        update = {"k_tok": kq, "v_tok": vq, "k_scale_tok": ks,
+                  "v_scale_tok": vs, "len": pos + 1}
+    else:
+        update = {"k_tok": k.astype(cache["k"].dtype),
+                  "v_tok": v.astype(cache["v"].dtype),
+                  "len": pos + 1}
+    return y, update
+
+
+def _decode_scores_partial(qg, k_chunk, v_chunk, slot_offset, n_slots,
+                           pos, size, is_local, scale,
+                           k_scale=None, v_scale=None):
+    """Unnormalized partial softmax over one cache chunk.
+    Returns (m (b,kv,g,1), l (b,kv,g,1), num (b,kv,g,d)) f32."""
+    from repro.core.attention import _NEG
+    if k_scale is not None:  # int8 cache: dequantize the tile
+        k_chunk = k_chunk.astype(jnp.float32) * k_scale
+        v_chunk = (v_chunk.astype(jnp.float32) * v_scale).astype(qg.dtype)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg,
+                        k_chunk.astype(qg.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    slot_ids = slot_offset + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, 1, n_slots), 3)
+    if is_local:
+        valid = slot_ids < jnp.minimum(pos, size)
+        # ring full: the slot being replaced leaves the window
+        valid = jnp.logical_and(
+            valid, jnp.logical_or(pos < size, slot_ids != pos % size))
+    else:
+        valid = slot_ids < pos
+    scores = jnp.where(valid, scores, _NEG)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(valid, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    num = jnp.einsum("bkgs,bksd->bkgd", p.astype(v_chunk.dtype),
+                     v_chunk).astype(jnp.float32)
+    return m, l, num
+
+
+def attention_decode_appended(q, k_cache, v_cache, k_new, v_new, pos,
+                              size, is_local: bool,
+                              k_scale=None, v_scale=None):
+    """Decode attention over (read-only cache ++ current token).
+
+    When the cache sequence dim is sharded over 'model' (small-KV GQA),
+    this runs as explicit flash-decoding inside shard_map: each shard
+    computes an unnormalized partial softmax over its cache slice; the
+    (m, l, num) triples combine with pmax/psum. Otherwise a plain jnp
+    path (kv-head-sharded or unsharded) is used.
+    """
+    from repro.distributed.sharding import current_policy
+    b, h, _, d = q.shape
+    kv = k_cache.shape[1]
+    g = h // kv
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, kv, g, d)
+    s_self = jnp.einsum("bkgd,bkxd->bkgx", qg,
+                        k_new[:, :, 0:1].astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+
+    policy = current_policy()
+    seq_ax = (policy.mesh_axes_for("kv_seq", size)
+              if (policy is not None
+                  and policy.mesh_axes_for("kv_heads", kv) is None)
+              else None)
+
+    if seq_ax is None:
+        m, l, num = _decode_scores_partial(qg, k_cache, v_cache, 0, size,
+                                           pos, size, is_local, scale,
+                                           k_scale, v_scale)
+    else:
+        from jax.sharding import PartitionSpec as P
+        seq_name = seq_ax if isinstance(seq_ax, str) else seq_ax[0]
+        batch_ax = policy.mesh_axes_for("batch", b)
+        rep = P(batch_ax, None, None, None)
+        cache_spec = P(batch_ax, None, seq_name, None)
+
+        def body(qg_, kc, vc, pos_, ks_, vs_):
+            n_loc = kc.shape[2]
+            off = jax.lax.axis_index(seq_name) * n_loc
+            m_loc, l_loc, num_loc = _decode_scores_partial(
+                qg_, kc, vc, off, n_loc, pos_, size, is_local, scale,
+                ks_, vs_)
+            m_g = jax.lax.pmax(m_loc, seq_name)
+            corr = jnp.exp(m_loc - m_g)
+            l_g = jax.lax.psum(l_loc * corr, seq_name)
+            num_g = jax.lax.psum(num_loc * corr, seq_name)
+            return m_g, l_g, num_g
+
+        if k_scale is None:
+            k_scale = jnp.ones(k_cache.shape[:3] + (1,), jnp.float32)
+            v_scale = k_scale
+            # dequant-by-ones keeps one code path; XLA folds it away
+        m, l, num = jax.shard_map(
+            body, mesh=policy.mesh,
+            in_specs=(rep, cache_spec, cache_spec, P(), cache_spec,
+                      cache_spec),
+            out_specs=(rep, rep, rep), check_vma=False,
+        )(qg, k_cache, v_cache, jnp.asarray(pos, jnp.int32),
+          k_scale, v_scale)
+
+    # fold in the current token (softmax over cache ++ self)
+    m_all = jnp.maximum(m, s_self)
+    num = (num * jnp.exp(m - m_all)
+           + jnp.exp(s_self - m_all)
+           * v_new[:, :, 0:1].astype(jnp.float32))
+    den = l * jnp.exp(m - m_all) + jnp.exp(s_self - m_all)
+    out = (num / den).astype(q.dtype)
+    return out.reshape(b, h, 1, d)

@@ -1,0 +1,185 @@
+"""Shared layer primitives (pure functional, param dicts as pytrees)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import FFNKind, ModelConfig, NormKind
+from repro.distributed.sharding import constrain
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale)
+
+
+def embed_init(key, vocab: int, d: int):
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == NormKind.LAYERNORM:
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == NormKind.LAYERNORM:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps: float):
+    """qk-norm: RMS over head_dim. x (..., head_dim)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rope
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, np.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x (B, n, S, D_head); positions (S,) or (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+        ang = ang[None, None]                          # (1,1,S,d/2)
+    else:
+        ang = positions[:, :, None].astype(jnp.float32) * freqs
+        ang = ang[:, None]                             # (B,1,S,d/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# FFN
+# --------------------------------------------------------------------------
+
+def ffn_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn in (FFNKind.SWIGLU, FFNKind.GEGLU):
+        return {"w_gate": dense_init(ks[0], d, f),
+                "w_up": dense_init(ks[1], d, f),
+                "w_down": dense_init(ks[2], f, d)}
+    if cfg.ffn == FFNKind.RWKV_CHANNEL:
+        return {"w_key": dense_init(ks[0], d, f),
+                "w_value": dense_init(ks[1], f, d),
+                "w_recept": dense_init(ks[2], d, d),
+                "mix_k": jnp.full((d,), 0.5, jnp.float32),
+                "mix_r": jnp.full((d,), 0.5, jnp.float32)}
+    return {"w_up": dense_init(ks[0], d, f),
+            "w_down": dense_init(ks[1], f, d),
+            "b_up": jnp.zeros((f,), jnp.float32),
+            "b_down": jnp.zeros((d,), jnp.float32)}
+
+
+def ffn_apply(p, x, cfg: ModelConfig, shifted: Optional[jnp.ndarray] = None):
+    """x (..., d_model). For RWKV channel-mix, ``shifted`` is the
+    token-shifted input."""
+    dt = x.dtype
+    if cfg.ffn == FFNKind.SWIGLU:
+        g = x @ p["w_gate"].astype(dt)
+        u = x @ p["w_up"].astype(dt)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+        h = constrain_ffn(h)
+        return h @ p["w_down"].astype(dt)
+    if cfg.ffn == FFNKind.GEGLU:
+        g = x @ p["w_gate"].astype(dt)
+        u = x @ p["w_up"].astype(dt)
+        h = jax.nn.gelu(g.astype(jnp.float32)).astype(dt) * u
+        h = constrain_ffn(h)
+        return h @ p["w_down"].astype(dt)
+    if cfg.ffn == FFNKind.RWKV_CHANNEL:
+        assert shifted is not None
+        xk = x + (shifted - x) * p["mix_k"].astype(dt)
+        xr = x + (shifted - x) * p["mix_r"].astype(dt)
+        k = xk @ p["w_key"].astype(dt)
+        k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(dt)
+        k = constrain_ffn(k)
+        r = jax.nn.sigmoid((xr @ p["w_recept"].astype(dt))
+                           .astype(jnp.float32)).astype(dt)
+        return r * (k @ p["w_value"].astype(dt))
+    # plain GELU MLP (gpt3 / musicgen)
+    h = x @ p["w_up"].astype(dt) + p["b_up"].astype(dt)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+    h = constrain_ffn(h)
+    return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)
+
+
+def constrain_ffn(h):
+    """Annotate the ffn hidden activation (last dim = mlp)."""
+    names = [None] * (h.ndim - 1) + ["mlp"]
+    names[0] = "batch"
+    return constrain(h, *names)
+
+
+# --------------------------------------------------------------------------
+# token shift (RWKV)
+# --------------------------------------------------------------------------
+
+def token_shift(x: jnp.ndarray,
+                last: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Shift sequence right by one: out[t] = x[t-1]; out[0] = last or 0.
+    x (B, S, D); last (B, D)."""
+    if x.shape[1] == 1:
+        head = (jnp.zeros_like(x[:, :1]) if last is None
+                else last[:, None, :].astype(x.dtype))
+        return head
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if last is not None:
+        shifted = shifted.at[:, 0, :].set(last.astype(x.dtype))
+    return shifted
+
+
+# --------------------------------------------------------------------------
+# elementwise (residual/embedding) dropout via the same Philox stream
+# --------------------------------------------------------------------------
+
+def elementwise_dropout(x, p: float, seed, salt):
+    if p <= 0.0:
+        return x
+    from repro.kernels.philox_common import philox4x32, threshold_from_p
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    n4 = -(-n // 4)
+    idx = jax.lax.broadcasted_iota(jnp.uint32, (n4,), 0)
+    w = philox4x32(idx, np.uint32(0), np.uint32(0),
+                   jnp.asarray(salt, jnp.uint32),
+                   jnp.asarray(seed, jnp.uint32), np.uint32(0), 7)
+    u = jnp.stack(w, axis=1).reshape(-1)[:n]
+    keep = u >= np.uint32(threshold_from_p(p))
+    return (jnp.where(keep, flat, 0) / (1.0 - p)).astype(x.dtype).reshape(
+        x.shape)

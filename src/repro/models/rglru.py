@@ -1,0 +1,158 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block: x -> [linear -> causal conv1d(4) -> RG-LRU] ⊙ [linear -> GeLU]
+         -> linear out.
+
+RG-LRU (per channel):
+    r_t = sigmoid(W_a c_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_i c_t + b_i)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * c_t)
+
+Train/prefill evaluates the diagonal linear recurrence with
+``jax.lax.associative_scan`` (O(log T) depth); decode is the one-step
+update. No attention-score matrix exists, so the paper's attention-dropout
+technique does not apply to these layers (DESIGN.md §Arch-applicability) —
+the 1-in-3 local-attention layers of the Griffin pattern do use it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init
+
+_C = 8.0
+_CONV_W = 4
+
+
+def rglru_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    r = cfg.d_model           # recurrent width == d_model
+    ks = jax.random.split(key, 7)
+    # Lambda init so a^(1/r)-ish decays spread in (0.9, 0.999) (Griffin)
+    lam = jax.random.uniform(ks[0], (r,), jnp.float32, 0.001, 0.1)
+    lam = jnp.log(jnp.exp(-jnp.log(lam) / _C) - 1.0)  # inverse softplus
+    return {
+        "w_x": dense_init(ks[1], d, r),
+        "w_gate": dense_init(ks[2], d, r),
+        "w_out": dense_init(ks[3], r, d),
+        "conv_w": jax.random.normal(ks[4], (_CONV_W, r)) * 0.1,
+        "conv_b": jnp.zeros((r,), jnp.float32),
+        "w_a": dense_init(ks[5], r, r),
+        "b_a": jnp.zeros((r,), jnp.float32),
+        "w_i": dense_init(ks[6], r, r),
+        "b_i": jnp.zeros((r,), jnp.float32),
+        "lambda": lam,
+    }
+
+
+def _causal_conv(p, u, tail=None):
+    """Depthwise causal conv width 4. u (B,T,R); tail (B, 3, R) carries the
+    previous inputs for decode/prefill continuation."""
+    dt = u.dtype
+    w = p["conv_w"].astype(dt)
+    if tail is None:
+        pad = jnp.zeros((u.shape[0], _CONV_W - 1, u.shape[2]), dt)
+    else:
+        pad = tail.astype(dt)
+    full = jnp.concatenate([pad, u], axis=1)       # (B, T+3, R)
+    out = sum(full[:, i:i + u.shape[1], :] * w[i]
+              for i in range(_CONV_W))
+    return out + p["conv_b"].astype(dt)
+
+
+def _gates(p, c):
+    dt = c.dtype
+    r_gate = jax.nn.sigmoid((c @ p["w_a"].astype(dt)
+                             + p["b_a"].astype(dt)).astype(jnp.float32))
+    i_gate = jax.nn.sigmoid((c @ p["w_i"].astype(dt)
+                             + p["b_i"].astype(dt)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r_gate
+    gated = i_gate * c.astype(jnp.float32)
+    return log_a, gated
+
+
+def _scan_recurrence(log_a, gated, h0=None):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) gated_t via associative scan.
+    log_a, gated (B,T,R) f32; h0 (B,R) f32 folds in as a virtual step."""
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 0.0)) * gated
+    if h0 is not None:
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0[:, None, :], b], axis=1)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, bl * ar + br
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh[:, 1:] if h0 is not None else hh
+
+
+def rglru_apply(p, x, cfg: ModelConfig) -> jnp.ndarray:
+    """Training/prefill forward. x (B,T,D)."""
+    dt = x.dtype
+    u = x @ p["w_x"].astype(dt)
+    u = constrain(u, "batch", None, "recur")
+    gate = jax.nn.gelu((x @ p["w_gate"].astype(dt)).astype(jnp.float32))
+    c = _causal_conv(p, u)
+    log_a, gated = _gates(p, c)
+    h = _scan_recurrence(log_a, gated)
+    out = (h * gate).astype(dt)
+    out = constrain(out, "batch", None, "recur")
+    return out @ p["w_out"].astype(dt)
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int, dtype):
+    r = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_W - 1, r), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def rglru_prefill(p, x, cfg: ModelConfig
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    dt = x.dtype
+    b, t, _ = x.shape
+    u = x @ p["w_x"].astype(dt)
+    gate = jax.nn.gelu((x @ p["w_gate"].astype(dt)).astype(jnp.float32))
+    c = _causal_conv(p, u)
+    log_a, gated = _gates(p, c)
+    h = _scan_recurrence(log_a, gated)
+    out = (h * gate).astype(dt) @ p["w_out"].astype(dt)
+    if t >= _CONV_W - 1:
+        tail = u[:, -(_CONV_W - 1):, :]
+    else:
+        tail = jnp.concatenate(
+            [jnp.zeros((b, _CONV_W - 1 - t, u.shape[2]), dt), u], axis=1)
+    cache = {"h": h[:, -1, :], "conv": tail,
+             "len": jnp.asarray(t, jnp.int32)}
+    return out, cache
+
+
+def rglru_decode(p, x1, cache, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x1 (B,1,D)."""
+    dt = x1.dtype
+    u = x1 @ p["w_x"].astype(dt)                   # (B,1,R)
+    gate = jax.nn.gelu((x1 @ p["w_gate"].astype(dt)).astype(jnp.float32))
+    c = _causal_conv(p, u, tail=cache["conv"])
+    log_a, gated = _gates(p, c)
+    a = jnp.exp(log_a[:, 0])
+    b_term = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * gated[:, 0]
+    h = a * cache["h"] + b_term                    # (B,R)
+    out = (h[:, None, :] * gate).astype(dt) @ p["w_out"].astype(dt)
+    new_cache = {
+        "h": h,
+        "conv": jnp.concatenate([cache["conv"][:, 1:], u], axis=1),
+        "len": cache["len"] + 1,
+    }
+    return out, new_cache

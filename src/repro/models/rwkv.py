@@ -1,0 +1,211 @@
+"""RWKV6 (Finch) time-mix with data-dependent decay.
+
+Recurrence (per head, K = V = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+
+Train/prefill uses a **chunked** evaluation (chunk L): within a chunk the
+pairwise decay exp(cum[t-1] - cum[s]) <= 1 is computed directly (never
+overflows, no clamping needed — unlike the factored k/p_s form), the
+cross-chunk state is carried by lax.scan. Decode is the plain one-step
+recurrence. Attention dropout is inapplicable (no score matrix) — see
+DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init, token_shift
+
+_LORA = 32
+_CHUNK = 16
+
+
+def rwkv_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = cfg.rwkv_head_dim
+    assert h * hd == d
+    ks = jax.random.split(key, 20)
+    p: Dict[str, Any] = {
+        "mu_x": jnp.full((d,), 0.5, jnp.float32),
+        "w0": jnp.zeros((d,), jnp.float32) - 0.6,  # decay ~ exp(-exp(-0.6))
+        "u": jax.random.normal(ks[0], (h, hd)) * 0.1,
+        "w_r": dense_init(ks[1], d, d),
+        "w_k": dense_init(ks[2], d, d),
+        "w_v": dense_init(ks[3], d, d),
+        "w_g": dense_init(ks[4], d, d),
+        "w_o": dense_init(ks[5], d, d),
+        "ln_x_scale": jnp.ones((h, hd), jnp.float32),
+        "ln_x_bias": jnp.zeros((h, hd), jnp.float32),
+    }
+    for i, c in enumerate(("w", "k", "v", "r", "g")):
+        p[f"mu_{c}"] = jnp.full((d,), 0.5, jnp.float32)
+        p[f"lora_a_{c}"] = dense_init(ks[6 + 2 * i], d, _LORA, scale=0.01)
+        p[f"lora_b_{c}"] = dense_init(ks[7 + 2 * i], _LORA, d, scale=0.01)
+    return p
+
+
+def _mix_inputs(p, x, shifted):
+    """Token-shift interpolation with LoRA modulation (rwkv6 style)."""
+    dt = x.dtype
+    xx = shifted - x
+    xxx = x + xx * p["mu_x"].astype(dt)
+    outs = {}
+    for c in ("w", "k", "v", "r", "g"):
+        lora = jnp.tanh(xxx @ p[f"lora_a_{c}"].astype(dt)) @ \
+            p[f"lora_b_{c}"].astype(dt)
+        outs[c] = x + xx * (p[f"mu_{c}"].astype(dt) + lora)
+    return outs
+
+
+def _project(p, mixed, b, t, h, hd):
+    dt = mixed["r"].dtype
+    r = (mixed["r"] @ p["w_r"].astype(dt)).reshape(b, t, h, hd)
+    k = (mixed["k"] @ p["w_k"].astype(dt)).reshape(b, t, h, hd)
+    v = (mixed["v"] @ p["w_v"].astype(dt)).reshape(b, t, h, hd)
+    g = jax.nn.silu((mixed["g"] @ p["w_g"].astype(dt))
+                    .astype(jnp.float32)).astype(dt)
+    logw = -jnp.exp((p["w0"].astype(jnp.float32)
+                     + (mixed["w"] @ p["lora_a_w"].astype(dt)
+                        @ p["lora_b_w"].astype(dt)).astype(jnp.float32)))
+    logw = logw.reshape(b, t, h, hd)
+    return r, k, v, g, logw
+
+
+def _group_norm(p, o, eps=1e-5):
+    """Per-head layer norm on the wkv output. o (B,T,H,hd)."""
+    of = o.astype(jnp.float32)
+    mean = jnp.mean(of, axis=-1, keepdims=True)
+    var = jnp.var(of, axis=-1, keepdims=True)
+    return ((of - mean) * jax.lax.rsqrt(var + eps) * p["ln_x_scale"]
+            + p["ln_x_bias"])
+
+
+def wkv_chunked(r, k, v, logw, u, s0, chunk: int = _CHUNK):
+    """r,k,v,logw (B,H,T,K) f32; u (H,K); s0 (B,H,K,V).
+    Returns (o (B,H,T,V), s_final)."""
+    b, h, t, kk = r.shape
+    assert t % chunk == 0
+    n = t // chunk
+    rc = r.reshape(b, h, n, chunk, kk).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(b, h, n, chunk, kk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, h, n, chunk, kk).transpose(2, 0, 1, 3, 4)
+    wc = logw.reshape(b, h, n, chunk, kk).transpose(2, 0, 1, 3, 4)
+
+    def body(s, xs):
+        rr, kk_, vv, ww = xs                       # (B,H,L,K)
+        cum = jnp.cumsum(ww, axis=2)               # decay through t
+        cum_in = cum - ww                          # decay through t-1
+        # state (inter-chunk) contribution
+        o_state = jnp.einsum("bhlk,bhkv->bhlv", rr * jnp.exp(cum_in), s)
+        # intra-chunk pairwise: E[t,s,k] = exp(cum_in[t] - cum[s]), s < t
+        ee = jnp.exp(cum_in[:, :, :, None, :] - cum[:, :, None, :, :])
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+        a = jnp.einsum("bhtk,bhsk,bhtsk->bhts", rr, kk_, ee)
+        a = a * tri
+        # diagonal bonus term diag(u)
+        a_diag = jnp.sum(rr * u[None, :, None, :] * kk_, axis=-1)
+        a = a + a_diag[..., None] * jnp.eye(chunk, dtype=a.dtype)
+        o = o_state + jnp.einsum("bhts,bhsv->bhtv", a, vv)
+        # state update
+        decay_all = jnp.exp(cum[:, :, -1:, :])     # (B,H,1,K)
+        kd = kk_ * jnp.exp(cum[:, :, -1:, :] - cum)
+        s_new = (s * decay_all[:, :, 0, :, None]
+                 + jnp.einsum("bhsk,bhsv->bhkv", kd, vv))
+        return s_new, o
+
+    s_fin, os = jax.lax.scan(body, s0, (rc, kc, vc, wc))
+    o = os.transpose(1, 2, 0, 3, 4).reshape(b, h, t, -1)
+    return o, s_fin
+
+
+def wkv_step(r1, k1, v1, logw1, u, s):
+    """One decode step. r1,k1,v1,logw1 (B,H,K); s (B,H,K,V)."""
+    bonus = s + (u[None] * k1)[..., None] * v1[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", r1, bonus)
+    s_new = s * jnp.exp(logw1)[..., None] + k1[..., None] * v1[..., None, :]
+    return o, s_new
+
+
+def rwkv_apply(p, x, cfg: ModelConfig) -> jnp.ndarray:
+    """Training/prefill forward. x (B, T, D)."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.rwkv_head_dim
+    shifted = token_shift(x)
+    mixed = _mix_inputs(p, x, shifted)
+    r, k, v, g, logw = _project(p, mixed, b, t, h, hd)
+    to_bhtk = lambda a: a.transpose(0, 2, 1, 3).astype(jnp.float32)
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    pad = (-t) % _CHUNK
+    padf = (lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            ) if pad else (lambda a: a)
+    o, _ = wkv_chunked(padf(to_bhtk(r)), padf(to_bhtk(k)),
+                       padf(to_bhtk(v)),
+                       padf(to_bhtk(logw)),
+                       p["u"].astype(jnp.float32), s0)
+    o = o[:, :, :t].transpose(0, 2, 1, 3)          # (B,T,H,hd)
+    o = constrain(o, "batch", None, "heads", None)
+    o = (_group_norm(p, o).astype(x.dtype) * g.reshape(b, t, h, hd))
+    return o.reshape(b, t, d) @ p["w_o"].astype(x.dtype)
+
+
+def rwkv_cache_init(cfg: ModelConfig, batch: int, dtype):
+    h, hd = cfg.n_heads, cfg.rwkv_head_dim
+    return {
+        "s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def rwkv_prefill(p, x, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.rwkv_head_dim
+    shifted = token_shift(x)
+    mixed = _mix_inputs(p, x, shifted)
+    r, k, v, g, logw = _project(p, mixed, b, t, h, hd)
+    to_bhtk = lambda a: a.transpose(0, 2, 1, 3).astype(jnp.float32)
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    pad = (-t) % _CHUNK
+    # zero-pads are state-neutral: k=v=0 adds nothing, logw=0 => decay 1
+    padf = (lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            ) if pad else (lambda a: a)
+    o, s_fin = wkv_chunked(padf(to_bhtk(r)), padf(to_bhtk(k)),
+                           padf(to_bhtk(v)), padf(to_bhtk(logw)),
+                           p["u"].astype(jnp.float32), s0)
+    o = o[:, :, :t].transpose(0, 2, 1, 3)
+    o = (_group_norm(p, o).astype(x.dtype) * g.reshape(b, t, h, hd))
+    y = o.reshape(b, t, d) @ p["w_o"].astype(x.dtype)
+    cache = {"s": s_fin, "shift_tm": x[:, -1, :],
+             "shift_cm": jnp.zeros((b, d), x.dtype),
+             "len": jnp.asarray(t, jnp.int32)}
+    return y, cache
+
+
+def rwkv_decode(p, x1, cache, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x1 (B, 1, D)."""
+    b, _, d = x1.shape
+    h, hd = cfg.n_heads, cfg.rwkv_head_dim
+    shifted = cache["shift_tm"][:, None, :].astype(x1.dtype)
+    mixed = _mix_inputs(p, x1, shifted)
+    r, k, v, g, logw = _project(p, mixed, b, 1, h, hd)
+    sq = lambda a: a[:, 0].astype(jnp.float32)     # (B,1,H,hd) -> (B,H,hd)
+    o, s_new = wkv_step(sq(r), sq(k), sq(v), sq(logw),
+                        p["u"].astype(jnp.float32), cache["s"])
+    o = _group_norm(p, o.reshape(b, 1, h, hd)).astype(x1.dtype)
+    o = o * g.reshape(b, 1, h, hd)
+    y = o.reshape(b, 1, d) @ p["w_o"].astype(x1.dtype)
+    new_cache = dict(cache)
+    new_cache["s"] = s_new
+    new_cache["shift_tm"] = x1[:, 0, :]
+    new_cache["len"] = cache["len"] + 1
+    return y, new_cache

@@ -1,0 +1,464 @@
+"""Model assembly: stacks of scanned layer units covering all 10 assigned
+architectures (dense GQA / MoE / RWKV6 / Griffin hybrid / modality stubs).
+
+Layers are grouped into *stacks* — a repeating unit (e.g. Griffin's
+(R, R, A)) scanned ``count`` times with stacked params — keeping HLO size
+O(1) in depth, which matters when compiling 80-layer models for 512
+devices. Remat wraps the unit body ("block" policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AttentionKind, FFNKind, ModelConfig
+from repro.core.overlap import DropoutPlan
+from repro.distributed.sharding import ShardingPolicy, constrain
+from repro.models import moe as moe_mod
+from repro.models.attention import (
+    attn_apply,
+    attn_cache_init,
+    attn_decode,
+    attn_init,
+    attn_prefill,
+)
+from repro.models.layers import (
+    embed_init,
+    ffn_apply,
+    ffn_init,
+    norm_apply,
+    norm_init,
+    token_shift,
+)
+from repro.models.rglru import (
+    rglru_apply,
+    rglru_cache_init,
+    rglru_decode,
+    rglru_init,
+    rglru_prefill,
+)
+from repro.models.rwkv import (
+    rwkv_apply,
+    rwkv_cache_init,
+    rwkv_decode,
+    rwkv_init,
+    rwkv_prefill,
+)
+
+
+@dataclasses.dataclass
+class Runtime:
+    """Per-call execution context threaded through the model."""
+    plan: Optional[DropoutPlan] = None
+    step: Any = 0
+    compute_dtype: Any = jnp.float32
+    policy: Optional[ShardingPolicy] = None
+    chunk_q: int = 1024
+    remat: str = "none"            # none | block
+    probs_dtype: Any = None        # None -> f32; bf16 = §Perf knob
+    moe_seq_dispatch: bool = False
+    attn_impl: str = "xla"         # xla | pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class StackSpec:
+    unit: Tuple[Tuple[AttentionKind, str], ...]  # (kind, "dense"|"moe")
+    count: int
+    base: int                                     # first layer index
+
+
+def build_stacks(cfg: ModelConfig) -> List[StackSpec]:
+    kinds = cfg.layer_kinds()
+    n = cfg.n_layers
+    first_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+    tag = lambda i: ("moe" if (cfg.moe is not None and i >= first_dense)
+                     else "dense")
+    stacks: List[StackSpec] = []
+    start = 0
+    if first_dense:
+        assert len(cfg.block_pattern) == 1, \
+            "first_dense_layers requires a uniform block pattern"
+        stacks.append(StackSpec(
+            unit=tuple((kinds[i], "dense") for i in range(first_dense)),
+            count=1, base=0))
+        start = first_dense
+    p = len(cfg.block_pattern)
+    rem = n - start
+    cnt = rem // p
+    if cnt:
+        unit = tuple((kinds[start + j], tag(start + j)) for j in range(p))
+        stacks.append(StackSpec(unit=unit, count=cnt, base=start))
+        start += cnt * p
+    if start < n:
+        unit = tuple((kinds[i], tag(i)) for i in range(start, n))
+        stacks.append(StackSpec(unit=unit, count=1, base=start))
+    return stacks
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, kind: AttentionKind, tag: str):
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {
+        "norm_mix": norm_init(cfg),
+        "norm_ffn": norm_init(cfg),
+    }
+    if kind in (AttentionKind.FULL, AttentionKind.LOCAL):
+        p["mix"] = attn_init(ks[0], cfg)
+    elif kind == AttentionKind.RECURRENT:
+        p["mix"] = rglru_init(ks[0], cfg)
+    else:
+        p["mix"] = rwkv_init(ks[0], cfg)
+    if tag == "moe":
+        m = cfg.moe
+        p["moe"] = moe_mod.moe_init(ks[1], cfg)
+        if m.n_shared_experts:
+            p["shared"] = ffn_init(ks[2], cfg,
+                                   d_ff=m.n_shared_experts * m.d_ff_expert)
+        if m.dense_residual:
+            p["dense_res"] = ffn_init(
+                ks[3], cfg, d_ff=m.dense_residual_ff or m.d_ff_expert)
+    else:
+        p["ffn"] = ffn_init(ks[1], cfg)
+    return p
+
+
+def model_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4 + len(build_stacks(cfg)))
+    params: Dict[str, Any] = {"final_norm": norm_init(cfg)}
+    if cfg.frontend == "token":
+        params["embed"] = embed_init(ks[0], cfg.vocab_size, cfg.d_model)
+        if not cfg.tie_embeddings:
+            params["unembed"] = embed_init(ks[1], cfg.vocab_size,
+                                           cfg.d_model).T
+    else:
+        params["unembed"] = embed_init(ks[1], cfg.vocab_size,
+                                       cfg.d_model).T
+    stacks = []
+    for si, spec in enumerate(build_stacks(cfg)):
+        def unit_init(k, _spec=spec):
+            uks = jax.random.split(k, len(_spec.unit))
+            return {f"l{j}": _layer_init(uks[j], cfg, kind, tag)
+                    for j, (kind, tag) in enumerate(_spec.unit)}
+        stacks.append(jax.vmap(unit_init)(
+            jax.random.split(ks[3 + si], spec.count)))
+    params["stacks"] = stacks
+    return params
+
+
+# --------------------------------------------------------------------------
+# block forward
+# --------------------------------------------------------------------------
+
+def _mix_forward(p, x, cfg, rt: Runtime, kind, layer_idx):
+    if kind in (AttentionKind.FULL, AttentionKind.LOCAL):
+        return attn_apply(p, x, cfg, kind=kind, plan=rt.plan,
+                          layer_idx=layer_idx, step=rt.step,
+                          chunk_q=rt.chunk_q,
+                          probs_dtype=rt.probs_dtype or jnp.float32,
+                          impl=rt.attn_impl, policy=rt.policy)
+    if kind == AttentionKind.RECURRENT:
+        return rglru_apply(p, x, cfg)
+    return rwkv_apply(p, x, cfg)
+
+
+def _ffn_forward(p, x, cfg, rt: Runtime, tag):
+    """Returns (out, aux)."""
+    if tag == "moe":
+        y, aux = moe_mod.moe_apply(p["moe"], x, cfg, rt.policy,
+                                   seq_dispatch=rt.moe_seq_dispatch)
+        if "shared" in p:
+            y = y + ffn_apply(p["shared"], x, cfg)
+        if "dense_res" in p:
+            y = y + ffn_apply(p["dense_res"], x, cfg)
+        return y, aux
+    shifted = None
+    if cfg.ffn == FFNKind.RWKV_CHANNEL:
+        shifted = token_shift(x)
+    return ffn_apply(p["ffn"], x, cfg, shifted=shifted), jnp.float32(0.0)
+
+
+def block_apply(p, x, cfg, rt: Runtime, kind, tag, layer_idx):
+    x = constrain(x, "batch", "seq", "embed")
+    h = norm_apply(p["norm_mix"], x, cfg)
+    x = x + _mix_forward(p["mix"], h, cfg, rt, kind, layer_idx)
+    h2 = norm_apply(p["norm_ffn"], x, cfg)
+    f, aux = _ffn_forward(p, h2, cfg, rt, tag)
+    return x + f, aux
+
+
+# --------------------------------------------------------------------------
+# full forward (training)
+# --------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ModelConfig, inputs, rt: Runtime):
+    if cfg.frontend == "token":
+        x = jnp.take(params["embed"], inputs, axis=0)
+    else:
+        x = inputs                                  # precomputed embeddings
+    return x.astype(rt.compute_dtype)
+
+
+def unembed(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["unembed"]
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def forward(params, cfg: ModelConfig, rt: Runtime, inputs
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/eval forward. inputs: tokens (B,S) or embeds (B,S,D).
+    Returns (logits f32 (B,S,V), aux_loss)."""
+    x = embed_inputs(params, cfg, inputs, rt)
+    aux_total = jnp.float32(0.0)
+    for spec, stack_params in zip(build_stacks(cfg), params["stacks"]):
+        unit_len = len(spec.unit)
+
+        def unit_apply(x, up, pos, _spec=spec, _ul=unit_len):
+            aux = jnp.float32(0.0)
+            for j, (kind, tag) in enumerate(_spec.unit):
+                lidx = _spec.base + pos * _ul + j
+                x, a = block_apply(up[f"l{j}"], x, cfg, rt, kind, tag, lidx)
+                aux = aux + a
+            return x, aux
+
+        if rt.remat == "block":
+            unit_apply = jax.checkpoint(
+                unit_apply,
+                policy=jax.checkpoint_policies.nothing_saveable)
+
+        def body(carry, xs, _ua=unit_apply):
+            xc, aux = carry
+            up, pos = xs
+            xn, a = _ua(xc, up, pos)
+            return (xn, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total),
+            (stack_params, jnp.arange(spec.count)))
+    x = norm_apply(params["final_norm"], x, cfg)
+    return unembed(params, cfg, x), aux_total
+
+
+# --------------------------------------------------------------------------
+# caches / prefill / decode
+# --------------------------------------------------------------------------
+
+def _layer_cache_init(cfg, kind, batch, max_len, dtype, kv_bits=16):
+    if kind in (AttentionKind.FULL, AttentionKind.LOCAL):
+        return attn_cache_init(cfg, kind, batch, max_len, dtype, kv_bits)
+    if kind == AttentionKind.RECURRENT:
+        return rglru_cache_init(cfg, batch, dtype)
+    return rwkv_cache_init(cfg, batch, dtype)
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype,
+               prefilled_len: int = 0, kv_bits: int = 16) -> List[Any]:
+    """Zero caches for decode, stacked to match params['stacks']. If
+    prefilled_len > 0 the caches advertise that many valid positions
+    (dry-run decode cells construct state this way, without a prefill)."""
+    caches = []
+    for spec in build_stacks(cfg):
+        unit_cache = {}
+        for j, (kind, _) in enumerate(spec.unit):
+            c = _layer_cache_init(cfg, kind, batch, max_len, dtype,
+                                  kv_bits)
+            if prefilled_len:
+                c["len"] = jnp.asarray(prefilled_len, jnp.int32)
+            unit_cache[f"l{j}"] = c
+        stacked = jax.tree.map(
+            lambda a: jnp.zeros((spec.count,) + a.shape, a.dtype)
+            + a, unit_cache)
+        caches.append(stacked)
+    return caches
+
+
+def _layer_prefill(p, x, cfg, rt, kind, tag, layer_idx, capacity):
+    x = constrain(x, "batch", "seq", "embed")
+    h = norm_apply(p["norm_mix"], x, cfg)
+    if kind in (AttentionKind.FULL, AttentionKind.LOCAL):
+        y, cache = attn_prefill(p["mix"], h, cfg, kind=kind, plan=None,
+                                layer_idx=layer_idx, step=rt.step,
+                                chunk_q=rt.chunk_q, capacity=capacity)
+    elif kind == AttentionKind.RECURRENT:
+        y, cache = rglru_prefill(p["mix"], h, cfg)
+    else:
+        y, cache = rwkv_prefill(p["mix"], h, cfg)
+    x = x + y
+    h2 = norm_apply(p["norm_ffn"], x, cfg)
+    if kind == AttentionKind.WKV:
+        cache["shift_cm"] = h2[:, -1, :]
+    f, _ = _ffn_forward(p, h2, cfg, rt, tag)
+    return x + f, cache
+
+
+def _layer_decode(p, x1, cache, cfg, rt, kind, tag):
+    """Cache is READ-ONLY here. Returns (x, update) — for attention
+    layers the update is the token kv column ({"k_tok","v_tok","len"}),
+    applied to the stacked cache outside the layer scan; recurrent/wkv
+    states are small and returned in full."""
+    h = norm_apply(p["norm_mix"], x1, cfg)
+    if kind in (AttentionKind.FULL, AttentionKind.LOCAL):
+        y, update = attn_decode(p["mix"], h, cache, cfg, kind=kind)
+    elif kind == AttentionKind.RECURRENT:
+        y, update = rglru_decode(p["mix"], h, cache, cfg)
+    else:
+        y, update = rwkv_decode(p["mix"], h, cache, cfg)
+    x1 = x1 + y
+    h2 = norm_apply(p["norm_ffn"], x1, cfg)
+    shifted_cm = None
+    if kind == AttentionKind.WKV:
+        shifted_cm = cache["shift_cm"]
+        update = dict(update)
+        update["shift_cm"] = h2[:, 0, :]
+    if tag == "moe":
+        f, _ = _ffn_forward(p, h2, cfg, rt, tag)
+    else:
+        sh = (shifted_cm[:, None, :].astype(h2.dtype)
+              if cfg.ffn == FFNKind.RWKV_CHANNEL else None)
+        f = ffn_apply(p["ffn"], h2, cfg, shifted=sh)
+    return x1 + f, update
+
+
+def _token_column_write(cache_arr, tok, slot, policy, cfg):
+    """cache_arr (count,B,KV,size,D); tok (count,B,KV,1,D). When the cache
+    sequence dim is sharded (small-KV flash-decoding layout), a dynamic
+    DUS on that dim would make GSPMD all-gather the cache; instead each
+    shard resolves the write locally inside shard_map."""
+    zero = jnp.zeros((), jnp.int32)
+    seq_sharded = (
+        policy is not None
+        and policy.mesh_axes_for("kv_heads", cfg.n_kv_heads) is None
+        and policy.mesh_axes_for("kv_seq", cache_arr.shape[3]) is not None)
+    if not seq_sharded:
+        start = (zero, zero, zero, slot.astype(jnp.int32), zero)
+        return jax.lax.dynamic_update_slice(cache_arr, tok, start)
+
+    from jax.sharding import PartitionSpec as P
+    mesh = policy.mesh
+    b = cache_arr.shape[1]
+    batch_ax = policy.mesh_axes_for("batch", b)
+    seq_ax = policy.mesh_axes_for("kv_seq", cache_arr.shape[3])
+    seq_name = seq_ax if isinstance(seq_ax, str) else seq_ax[0]
+    cache_spec = P(None, batch_ax, None, seq_ax, None)
+    tok_spec = P(None, batch_ax, None, None, None)
+
+    def body(c, t, s):
+        size_loc = c.shape[3]
+        off = jax.lax.axis_index(seq_name) * size_loc
+        loc = jnp.clip(s - off, 0, size_loc - 1)
+        cur = jax.lax.dynamic_slice_in_dim(c, loc, 1, axis=3)
+        hit = jnp.logical_and(s >= off, s < off + size_loc)
+        val = jnp.where(hit, t.astype(c.dtype), cur)
+        return jax.lax.dynamic_update_slice_in_dim(c, val, loc, axis=3)
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(cache_spec, tok_spec, P()),
+        out_specs=cache_spec, check_vma=False,
+    )(cache_arr, tok, slot.astype(jnp.int32))
+
+
+def _apply_cache_updates(spec: StackSpec, stack_cache, updates, cfg,
+                         policy=None):
+    """Merge per-layer scan updates back into the stacked caches with one
+    token-column write per attention cache (write O(L*token), not
+    O(L*cache))."""
+    new_stack = {}
+    for j, (kind, _) in enumerate(spec.unit):
+        key = f"l{j}"
+        cache = stack_cache[key]
+        upd = updates[key]
+        if kind in (AttentionKind.FULL, AttentionKind.LOCAL):
+            size = cache["k"].shape[3]          # (count,B,KV,size,D)
+            pos = cache["len"][0]               # equal across the stack
+            slot = (pos % size) if kind == AttentionKind.LOCAL else pos
+            new_entry = {
+                "k": _token_column_write(cache["k"], upd["k_tok"], slot,
+                                         policy, cfg),
+                "v": _token_column_write(cache["v"], upd["v_tok"], slot,
+                                         policy, cfg),
+                "len": upd["len"],
+            }
+            if "k_scale" in cache:  # int8 cache: write the scale column
+                new_entry["k_scale"] = _token_column_write(
+                    cache["k_scale"], upd["k_scale_tok"], slot, policy,
+                    cfg)
+                new_entry["v_scale"] = _token_column_write(
+                    cache["v_scale"], upd["v_scale_tok"], slot, policy,
+                    cfg)
+            new_stack[key] = new_entry
+        else:
+            new_stack[key] = upd                # full small state
+    return new_stack
+
+
+def prefill(params, cfg: ModelConfig, rt: Runtime, inputs,
+            capacity: int = 0) -> Tuple[jnp.ndarray, List[Any]]:
+    """Returns (last-position logits (B,1,V), caches)."""
+    x = embed_inputs(params, cfg, inputs, rt)
+    caches = []
+    for spec, stack_params in zip(build_stacks(cfg), params["stacks"]):
+        unit_len = len(spec.unit)
+
+        def unit_prefill(x, up, pos, _spec=spec, _ul=unit_len):
+            ucache = {}
+            for j, (kind, tag) in enumerate(_spec.unit):
+                lidx = _spec.base + pos * _ul + j
+                x, c = _layer_prefill(up[f"l{j}"], x, cfg, rt, kind, tag,
+                                      lidx, capacity)
+                ucache[f"l{j}"] = c
+            return x, ucache
+
+        def body(xc, xs, _up=unit_prefill):
+            up, pos = xs
+            xn, uc = _up(xc, up, pos)
+            return xn, uc
+
+        x, stack_cache = jax.lax.scan(
+            body, x, (stack_params, jnp.arange(spec.count)))
+        caches.append(stack_cache)
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = unembed(params, cfg, x[:, -1:, :])
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, rt: Runtime, inputs, caches
+                ) -> Tuple[jnp.ndarray, List[Any]]:
+    """One token for every sequence. inputs (B,1) tokens or (B,1,D)
+    embeds. Returns (logits (B,1,V), new caches)."""
+    x = embed_inputs(params, cfg, inputs, rt)
+    new_caches = []
+    for spec, stack_params, stack_cache in zip(
+            build_stacks(cfg), params["stacks"], caches):
+
+        def unit_decode(x, up, cache, _spec=spec):
+            updates = {}
+            for j, (kind, tag) in enumerate(_spec.unit):
+                x, u = _layer_decode(up[f"l{j}"], x, cache[f"l{j}"], cfg,
+                                     rt, kind, tag)
+                updates[f"l{j}"] = u
+            return x, updates
+
+        def body(xc, xs, _ud=unit_decode):
+            up, cache = xs
+            xn, uc = _ud(xc, up, cache)
+            return xn, uc
+
+        # caches ride through xs READ-ONLY (no per-layer write-back);
+        # the token column is written once below
+        x, updates = jax.lax.scan(
+            body, x, (stack_params, stack_cache))
+        new_caches.append(
+            _apply_cache_updates(spec, stack_cache, updates, cfg,
+                                 rt.policy))
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = unembed(params, cfg, x)
+    return logits, new_caches

@@ -1,0 +1,27 @@
+from repro.optim.adamw import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    schedule_lr,
+)
+from repro.optim.compression import (
+    compress_tree,
+    compressed_psum,
+    dequantize_int8,
+    quantize_int8,
+    residual_init,
+)
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "schedule_lr",
+    "compress_tree",
+    "compressed_psum",
+    "dequantize_int8",
+    "quantize_int8",
+    "residual_init",
+]

@@ -1,0 +1,99 @@
+"""AdamW with mixed-precision master weights, global-norm clipping and LR
+schedules. Functional, pytree-based; ZeRO-1 partitioning of (master, m, v)
+is applied by the distribution layer through sharding specs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import OptimizerConfig
+
+
+def schedule_lr(cfg: OptimizerConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = 1.0 - 0.9 * t
+    else:  # cosine
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        decay = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * decay
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(
+        lambda a: jnp.zeros(a.shape, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def clip_by_global_norm(grads, max_norm: float
+                        ) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+_NO_DECAY_TOKENS = ("norm", "bias", "scale", "mu_", "lambda", "w0", "u")
+
+
+def _decay_mask(path: str) -> bool:
+    lower = path.lower()
+    return not any(tok in lower for tok in _NO_DECAY_TOKENS)
+
+
+def adamw_update(grads, opt_state, master, cfg: OptimizerConfig, step,
+                 compute_dtype=None):
+    """One AdamW step on f32 master params.
+
+    Returns (new_master, new_params_compute, new_opt_state, metrics).
+    """
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = schedule_lr(cfg, step)
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(kp, g, m, v, p):
+        g = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        if _decay_mask(jax.tree_util.keystr(kp)):
+            delta = delta + cfg.weight_decay * p
+        return m_new, v_new, p - lr * delta
+
+    flat = jax.tree_util.tree_flatten_with_path(master)
+    treedef = flat[1]
+    kps = [kp for kp, _ in flat[0]]
+    ms = jax.tree_util.tree_leaves(opt_state["m"])
+    vs = jax.tree_util.tree_leaves(opt_state["v"])
+    gs = jax.tree_util.tree_leaves(grads)
+    ps = [p for _, p in flat[0]]
+    out = [upd(kp, g, m, v, p)
+           for kp, g, m, v, p in zip(kps, gs, ms, vs, ps)]
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_master = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    if compute_dtype is not None and compute_dtype != jnp.float32:
+        new_params = jax.tree.map(
+            lambda a: a.astype(compute_dtype), new_master)
+    else:
+        new_params = new_master
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_master, new_params, {"m": new_m, "v": new_v}, metrics

@@ -1,0 +1,21 @@
+from repro.perfmodel.hardware import GH100, TPU_V5E, Hardware
+from repro.perfmodel.model import (
+    BlockShape,
+    block_speedup,
+    kernel_times,
+    overlap_block_time,
+    baseline_block_time,
+    sweep_speedup,
+)
+
+__all__ = [
+    "GH100",
+    "TPU_V5E",
+    "Hardware",
+    "BlockShape",
+    "block_speedup",
+    "kernel_times",
+    "overlap_block_time",
+    "baseline_block_time",
+    "sweep_speedup",
+]

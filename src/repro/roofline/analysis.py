@@ -1,0 +1,139 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / (links * link_bw)
+
+cost_analysis() runs on the post-SPMD module, so flops/bytes are already
+per-device. Hardware constants (TPU v5e-class target, per the brief):
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI with 2 usable link
+groups for the 2D torus axes we shard over (all-reduce ring factor
+2(n-1)/n is folded into the collective bytes convention in hlo.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.roofline import hlo as hlo_mod
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+ICI_LINK_BW = 50e9           # bytes/s per link
+ICI_LINKS = 2                # usable link groups for our 2D sharding
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    collectives: Dict[str, Dict[str, float]]
+    model_flops: float = 0.0   # 6*N*D (dense) or 6*N_active*D (MoE)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (ICI_LINKS * ICI_LINK_BW)
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_total(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        if self.flops <= 0:
+            return 0.0
+        return self.model_flops / self.flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip's peak the step would achieve if it runs
+        at the dominant-term bound: useful_model_flops_time / t_total."""
+        if self.t_total <= 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.t_total
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bound": self.bound,
+            "model_flops_per_device": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "collectives": self.collectives,
+        }
+
+
+def analyze_compiled(compiled, model_flops_per_device: float = 0.0,
+                     hlo_text: Optional[str] = None) -> Roofline:
+    """Loop-aware module analysis (repro.roofline.hlo). XLA's own
+    cost_analysis visits while bodies once, undercounting scanned layers
+    by ~n_layers, so we parse the module ourselves."""
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    mod = hlo_mod.analyze_module(text)
+    return Roofline(flops=float(mod["flops"]),
+                    hbm_bytes=float(mod["bytes"]),
+                    coll_bytes=sum(v["bytes"]
+                                   for v in mod["collectives"].values()),
+                    collectives=mod["collectives"],
+                    model_flops=model_flops_per_device)
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if m is None:
+        return {}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+        v = getattr(m, field, None)
+        if v is not None:
+            out[field] = int(v)
+    if out:
+        out["total_hbm_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6*N*D rule (fwd 2ND + bwd 4ND), N = active params."""
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def model_flops_decode(cfg, tokens: int) -> float:
+    """2*N*D for single forward decode."""
+    return 2.0 * cfg.active_param_count() * tokens
+
+
+def save_report(path: str, report: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, default=float)

@@ -1,0 +1,397 @@
+"""Post-SPMD HLO module analysis: FLOPs, buffer traffic and collective
+bytes **with while-loop trip-count multiplication**.
+
+XLA's built-in cost_analysis visits while bodies once, which undercounts a
+scan-over-layers train step by ~n_layers. This analyzer parses the
+optimized module text, recovers each while's trip count from its condition
+computation, and propagates multipliers through the call graph:
+
+  flops       — dot ops: 2 * numel(output) * contraction_size, counted in
+                every reachable computation (fusion bodies included);
+  hbm bytes   — operand+output bytes of *sequenced* instructions (entry,
+                while bodies, conditional branches — i.e. post-fusion
+                buffers), skipping aliasing ops; fusion internals excluded;
+  collectives — per-kind {count, bytes}, loop-multiplied. Convention:
+                result bytes per op (all-gather: gathered output;
+                reduce-scatter: input = shard * group; all-reduce: tensor;
+                all-to-all / collective-permute: tensor).
+
+Shapes in the post-SPMD module are per-device, so every number is
+per-device.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INST_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_CALLEE_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|true_computation|false_computation"
+    r"|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_CONST_INT_RE = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_ALIAS_OPCODES = {"parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "copy", "after-all", "iota", "partition-id",
+                  "replica-id"}
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, int]]:
+    """All dtype[shape] occurrences in a type string (tuples flattened)."""
+    return [(m.group(1), _numel(m.group(2)))
+            for m in _SHAPE_RE.finditer(type_str)]
+
+
+def _numel(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def shape_bytes(type_str: str) -> int:
+    return sum(_DTYPE_BYTES.get(dt, 4) * n
+               for dt, n in _parse_shapes(type_str))
+
+
+class Instruction:
+    __slots__ = ("name", "rhs", "result_type", "opcode", "operands",
+                 "attrs")
+
+    def __init__(self, name: str, rhs: str):
+        self.name = name
+        self.rhs = rhs
+        # --- result type: balanced-paren tuple or single shape token ----
+        rhs = rhs.strip()
+        if rhs.startswith("("):
+            depth = 0
+            tend = -1
+            for i, ch in enumerate(rhs):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    tend = i + 1
+                    break
+            self.result_type = rhs[:tend]
+        else:
+            m = re.match(r"[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?", rhs)
+            self.result_type = m.group(0) if m else ""
+        rest = rhs[len(self.result_type):].lstrip()
+        om = re.match(r"([\w\-]+)\(", rest)
+        self.opcode = om.group(1) if om else ""
+        # --- operands: %names inside the balanced (...) after opcode ----
+        paren = rest.find("(")
+        depth, end = 0, -1
+        for i in range(paren, len(rest)) if paren >= 0 else ():
+            depth += rest[i] == "("
+            depth -= rest[i] == ")"
+            if depth == 0:
+                end = i
+                break
+        oper_str = rest[paren + 1:end] if end > 0 else ""
+        self.operands = re.findall(r"%([\w.\-]+)", oper_str)
+        self.attrs = rest[end + 1:] if end > 0 else ""
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.instructions: List[Instruction] = []
+        self.shapes: Dict[str, str] = {}   # inst name -> result type str
+        self.root: Optional[Instruction] = None
+        self.params: Dict[int, Instruction] = {}
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self.global_shapes: Dict[str, str] = {}
+        for comp in self.computations.values():
+            self.global_shapes.update(comp.shapes)
+
+    def _parse(self, text: str):
+        cur: Optional[Computation] = None
+        for line in text.splitlines():
+            h = _HEADER_RE.match(line)
+            if h and "->" in line:
+                cur = Computation(h.group(2))
+                self.computations[cur.name] = cur
+                if h.group(1):
+                    self.entry = cur.name
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _INST_RE.match(line)
+            if not m:
+                continue
+            inst = Instruction(m.group(1), m.group(2))
+            cur.instructions.append(inst)
+            cur.shapes[inst.name] = inst.result_type
+            if line.lstrip().startswith("ROOT"):
+                cur.root = inst
+            if inst.opcode == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", inst.rhs)
+                if pm:
+                    cur.params[int(pm.group(1))] = inst
+
+    # -- trip counts --------------------------------------------------------
+
+    def while_trip_count(self, cond_name: str) -> int:
+        comp = self.computations.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for inst in comp.instructions:
+            m = _CONST_INT_RE.search("= " + inst.rhs)
+            if m:
+                best = max(best, int(m.group(1)))
+        return best
+
+    # -- cost walk ----------------------------------------------------------
+
+    def analyze(self) -> Dict[str, object]:
+        flops_memo: Dict[str, float] = {}
+        self._coll = defaultdict(lambda: {"count": 0.0, "bytes": 0.0})
+        self._bytes = 0.0
+        entry = self.entry or next(iter(self.computations))
+        flops = self._walk(entry, 1.0, flops_memo, sequenced=True)
+        return {
+            "flops": flops,
+            "bytes": self._bytes,
+            "collectives": {k: dict(v) for k, v in self._coll.items()},
+        }
+
+    def _operand_type(self, comp: Computation, name: str) -> str:
+        return comp.shapes.get(name, self.global_shapes.get(name, ""))
+
+    def _dot_flops(self, comp: Computation, inst: Instruction) -> float:
+        out_elems = sum(n for _, n in _parse_shapes(inst.result_type))
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.attrs)
+        if not m or not inst.operands:
+            return 2.0 * out_elems  # degenerate
+        lhs_type = self._operand_type(comp, inst.operands[0])
+        sm = _SHAPE_RE.search(lhs_type)
+        if not sm:
+            return 2.0 * out_elems
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+        contract = 1
+        for ci in m.group(1).split(","):
+            if ci != "" and int(ci) < len(dims):
+                contract *= dims[int(ci)]
+        return 2.0 * out_elems * contract
+
+    def _collective(self, inst: Instruction, mult: float):
+        kind = inst.opcode.replace("-start", "")
+        if kind.endswith("-done"):
+            return
+        b = float(shape_bytes(inst.result_type))
+        if kind == "reduce-scatter":
+            g = re.search(r"replica_groups=\[(\d+),(\d+)\]", inst.attrs)
+            if g:
+                b *= int(g.group(2))
+            else:
+                g2 = re.search(r"replica_groups=\{\{([0-9,]+)\}", inst.attrs)
+                if g2:
+                    b *= len(g2.group(1).split(","))
+        self._coll[kind]["count"] += mult
+        self._coll[kind]["bytes"] += b * mult
+
+    def _is_pallas_region(self, comp_name: str,
+                          _depth: int = 0) -> bool:
+        """True if the computation (or a callee, 2 levels deep) carries
+        the pallas_kernel_region named_scope marker."""
+        comp = self.computations.get(comp_name)
+        if comp is None or _depth > 2:
+            return False
+        cached = getattr(self, "_pallas_memo", None)
+        if cached is None:
+            cached = self._pallas_memo = {}
+        if comp_name in cached:
+            return cached[comp_name]
+        found = False
+        for inst in comp.instructions:
+            if "pallas_kernel_region" in inst.rhs:
+                found = True
+                break
+            m = re.search(r"(?:calls|body)=%?([\w.\-]+)", inst.attrs)
+            if m and self._is_pallas_region(m.group(1), _depth + 1):
+                found = True
+                break
+        cached[comp_name] = found
+        return found
+
+    # -- slice-aware byte accounting (mirrors HloCostAnalysis semantics) ---
+
+    def _inst_bytes(self, comp: Computation, inst: Instruction) -> float:
+        op = inst.opcode
+        if (not op or op in _ALIAS_OPCODES
+                or op in ("while", "conditional", "call")):
+            return 0.0  # loop carries / control flow alias in place
+        out_b = shape_bytes(inst.result_type)
+        if op == "dynamic-slice":
+            return 2.0 * out_b
+        if op == "dynamic-update-slice":
+            upd = (shape_bytes(self._operand_type(comp, inst.operands[1]))
+                   if len(inst.operands) > 1 else out_b)
+            return 3.0 * upd  # read update + read/write region (in-place)
+        if op == "gather":
+            return 2.0 * out_b
+        if op == "scatter":
+            upd = (shape_bytes(self._operand_type(comp, inst.operands[-1]))
+                   if inst.operands else out_b)
+            return 3.0 * upd
+        if op == "fusion":
+            return self._fusion_bytes(comp, inst)
+        b = float(out_b)
+        for o in inst.operands:
+            b += shape_bytes(self._operand_type(comp, o))
+        return b
+
+    def _fusion_bytes(self, comp: Computation, inst: Instruction) -> float:
+        m = re.search(r"calls=%?([\w.\-]+)", inst.attrs)
+        callee = self.computations.get(m.group(1)) if m else None
+        if callee is None:
+            b = shape_bytes(inst.result_type)
+            for o in inst.operands:
+                b += shape_bytes(self._operand_type(comp, o))
+            return float(b)
+        # output side: a DUS root writes only the update region (aliased)
+        total = self._fusion_out_bytes(callee)
+        # input side: params consumed solely by dynamic-slice/gather read
+        # only the slice, not the (possibly scan-stacked) full operand
+        for i, oname in enumerate(inst.operands):
+            pinst = callee.params.get(i)
+            full = shape_bytes(self._operand_type(comp, oname))
+            if pinst is None:
+                total += full
+                continue
+            users = [u for u in callee.instructions
+                     if pinst.name in u.operands]
+            if users and all(u.opcode in ("dynamic-slice", "gather")
+                             for u in users):
+                total += sum(shape_bytes(u.result_type) for u in users)
+            elif users and all(
+                    u.opcode == "dynamic-update-slice"
+                    and u.operands and u.operands[0] == pinst.name
+                    for u in users):
+                total += 0.0  # in-place DUS destination (aliased)
+            else:
+                total += full
+        return float(total)
+
+    def _fusion_out_bytes(self, callee: Computation) -> float:
+        root = callee.root
+        if root is None:
+            return 0.0
+
+        def one(io: Instruction) -> float:
+            if io.opcode == "dynamic-update-slice" and len(io.operands) > 1:
+                return 2.0 * shape_bytes(
+                    callee.shapes.get(io.operands[1], ""))
+            return float(shape_bytes(io.result_type))
+
+        if root.opcode == "tuple":
+            total = 0.0
+            for oname in root.operands:
+                oi = next((x for x in callee.instructions
+                           if x.name == oname), None)
+                total += one(oi) if oi is not None else 0.0
+            return total
+        return one(root)
+
+    def _walk(self, comp_name: str, mult: float,
+              flops_memo: Dict[str, float], sequenced: bool) -> float:
+        comp = self.computations.get(comp_name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        for inst in comp.instructions:
+            op = inst.opcode
+            if op == "dot" or op.startswith("dot"):
+                total += self._dot_flops(comp, inst) * mult
+            elif op == "convolution":
+                # approximate: 2 * output elems * (input feature window)
+                total += 2.0 * sum(
+                    n for _, n in _parse_shapes(inst.result_type)) * mult
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and sequenced:
+                self._collective(inst, mult)
+            if sequenced:
+                self._bytes += self._inst_bytes(comp, inst) * mult
+            # recurse into callees
+            if op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", inst.attrs)
+                cond = re.search(r"condition=%?([\w.\-]+)", inst.attrs)
+                trip = self.while_trip_count(cond.group(1)) if cond else 1
+                if body:
+                    if sequenced and "pallas_kernel_region" in inst.rhs:
+                        # interpret-mode Pallas grid emulation: the loop's
+                        # per-step slices are VMEM tiles on the real TPU.
+                        # Charge HBM by the kernel's call-boundary I/O
+                        # (carried operands, once) and keep loop-multiplied
+                        # FLOPs (those are the kernel's true MXU work).
+                        b = 0.0
+                        for o in inst.operands:
+                            b += shape_bytes(self._operand_type(comp, o))
+                        self._bytes += b * mult
+                        total += self._walk(body.group(1), mult * trip,
+                                            flops_memo, sequenced=False)
+                        continue
+                    total += self._walk(body.group(1), mult * trip,
+                                        flops_memo, sequenced)
+            elif op in ("fusion", "call", "map", "reduce", "reduce-window",
+                        "scatter", "sort", "custom-call", "all-reduce",
+                        "reduce-scatter"):
+                m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)",
+                              inst.attrs)
+                if m and op in ("fusion", "call", "map"):
+                    total += self._walk(m.group(1), mult, flops_memo,
+                                        sequenced=False)
+            elif op == "conditional":
+                for m in re.finditer(
+                        r"(?:true|false)_computation=%?([\w.\-]+)",
+                        inst.attrs):
+                    total += self._walk(m.group(1), mult, flops_memo,
+                                        sequenced)
+                bm = re.search(r"branch_computations=\{([^}]*)\}",
+                               inst.attrs)
+                if bm:
+                    for name in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                        total += self._walk(name, mult, flops_memo,
+                                            sequenced)
+        return total
+
+
+def analyze_module(hlo_text: str) -> Dict[str, object]:
+    return HloModule(hlo_text).analyze()
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    return analyze_module(hlo_text)["collectives"]
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in collective_bytes(hlo_text).values())
+
+
+def count_op(hlo_text: str, opcode: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opcode)}\(", hlo_text))

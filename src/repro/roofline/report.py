@@ -1,0 +1,132 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.roofline.analysis import PEAK_FLOPS
+
+
+def load_reports(directory: str) -> List[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.2f}ms"
+
+
+def dryrun_table(reports: List[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | layout | compile | HBM/dev | flops/dev |"
+        " coll bytes/dev | collective mix |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in reports:
+        roof = r["roofline"]
+        hbm = r.get("memory", {}).get("total_hbm_bytes", 0)
+        mix = " ".join(
+            f"{k}:{int(v['count'])}" for k, v in sorted(
+                roof["collectives"].items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r.get('layout','-')} "
+            f"| {r['compile_seconds']:.1f}s "
+            f"| {hbm/2**30:.2f} GiB "
+            f"| {roof['flops_per_device']:.2e} "
+            f"| {roof['collective_bytes_per_device']:.2e} "
+            f"| {mix} |")
+    return "\n".join(lines)
+
+
+def roofline_table(reports: List[dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | bound "
+        "| MODEL_FLOPS/HLO | roofline frac | what would move the "
+        "dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in reports:
+        if r["mesh"] != mesh:
+            continue
+        roof = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {_fmt_s(roof['t_compute_s'])} "
+            f"| {_fmt_s(roof['t_memory_s'])} "
+            f"| {_fmt_s(roof['t_collective_s'])} "
+            f"| **{roof['bound']}** "
+            f"| {roof['useful_flops_fraction']:.2f} "
+            f"| {roof['roofline_fraction']:.4f} "
+            f"| {_advice(r)} |")
+    return "\n".join(lines)
+
+
+def _advice(r: dict) -> str:
+    roof = r["roofline"]
+    bound = roof["bound"]
+    kind = r["kind"]
+    if bound == "memory" and kind == "train":
+        return ("flash-attention Pallas kernel keeps P=softmax(QK^T) in "
+                "VMEM (XLA path materializes it)")
+    if bound == "memory" and kind == "prefill":
+        return "same as train: fuse attention/WKV chain into VMEM tiles"
+    if bound == "memory" and kind == "decode":
+        return ("KV-cache read is the floor; quantize cache to int8 and "
+                "fuse dequant into the decode dot")
+    if bound == "collective":
+        return ("dedupe EP all-to-all across the model axis / overlap "
+                "dispatch with expert GEMMs")
+    return "increase per-chip batch or reduce remat recompute"
+
+
+def pick_hillclimb(reports: List[dict]) -> Dict[str, dict]:
+    """worst roofline fraction / most collective-bound / most paper-
+    representative (largest share of attention-dropout-relevant work)."""
+    single = [r for r in reports if r["mesh"] == "16x16"
+              and r["kind"] == "train"]
+    worst = min(single, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(single, key=lambda r: r["roofline"]["t_collective_s"])
+    dense_train = [r for r in single
+                   if r["arch"] in ("yi-6b", "qwen3-8b", "qwen2-72b",
+                                    "command-r-35b", "chameleon-34b")]
+    rep = max(dense_train,
+              key=lambda r: r["roofline"]["t_memory_s"]
+              / max(r["roofline"]["t_compute_s"], 1e-12))
+    return {"worst_fraction": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    reports = load_reports(args.dir)
+    print("## Dry-run table\n")
+    print(dryrun_table(reports))
+    print("\n## Roofline table (single pod)\n")
+    print(roofline_table(reports, args.mesh))
+    print("\n## Roofline table (multi-pod)\n")
+    print(roofline_table(reports, "2x16x16"))
+    picks = pick_hillclimb(reports)
+    print("\n## Hillclimb picks\n")
+    for k, r in picks.items():
+        print(f"- {k}: {r['arch']} x {r['shape']} "
+              f"(bound={r['roofline']['bound']}, "
+              f"frac={r['roofline']['roofline_fraction']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests must see the real single device.
+# Multi-device tests run in subprocesses (test_dryrun_small.py).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

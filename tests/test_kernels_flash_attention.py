@@ -1,0 +1,105 @@
+"""Flash-attention Pallas kernel vs the pure-jnp oracle: shape/dtype
+sweeps, GQA, causal/local masking, all three dropout modes, gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention, \
+    flash_attention_fwd
+from repro.kernels.philox import philox_dropout_mask
+
+
+def _qkv(key, b, h, kv, sq, sk, d, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, kv, sk, d), dtype)
+    v = jax.random.normal(ks[2], (b, kv, sk, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dims", [
+    (1, 1, 1, 128, 128, 32),
+    (2, 4, 2, 256, 256, 64),   # GQA 2:1
+    (1, 8, 1, 128, 256, 64),   # MQA, decode-style sk > sq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matches_ref_no_dropout(rng_key, dims, dtype):
+    b, h, kv, sq, sk, d = dims
+    q, k, v = _qkv(rng_key, b, h, kv, sq, sk, d, dtype)
+    out = flash_attention_fwd(q, k, v, causal=True, block_q=128,
+                              block_k=128)
+    want = ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_non_causal(rng_key):
+    q, k, v = _qkv(rng_key, 1, 2, 2, 128, 128, 32, jnp.float32)
+    out = flash_attention_fwd(q, k, v, causal=False)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_local_window(rng_key):
+    q, k, v = _qkv(rng_key, 1, 2, 1, 256, 256, 32, jnp.float32)
+    out = flash_attention_fwd(q, k, v, causal=True, local_window=64)
+    want = ref.attention_ref(q, k, v, causal=True, local_window=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("rounds", [3, 7])
+def test_fused_dropout_matches_ref(rng_key, rounds):
+    q, k, v = _qkv(rng_key, 2, 2, 2, 128, 128, 32, jnp.float32)
+    out = flash_attention_fwd(q, k, v, causal=True, dropout_p=0.2,
+                              mode="fused", seed=5, salt=3, rounds=rounds)
+    want = ref.attention_ref(q, k, v, causal=True, dropout_p=0.2,
+                             dropout_seed=5, dropout_salt=3,
+                             philox_rounds=rounds)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_premask_bit_identical_to_fused(rng_key):
+    """The paper's requirement: relocating RNG must not change results."""
+    b, h, s, d = 2, 4, 256, 64
+    q, k, v = _qkv(rng_key, b, h, h, s, s, d, jnp.float32)
+    fused = flash_attention_fwd(q, k, v, causal=True, dropout_p=0.15,
+                                mode="fused", seed=3, salt=9)
+    mask = philox_dropout_mask(b, h, s, s, 0.15, 3, salt=9)
+    pre = flash_attention_fwd(q, k, v, mask_packed=mask, causal=True,
+                              dropout_p=0.15, mode="premask", seed=3,
+                              salt=9)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(pre))
+
+
+def test_block_shape_invariance(rng_key):
+    q, k, v = _qkv(rng_key, 1, 2, 2, 256, 256, 32, jnp.float32)
+    a = flash_attention_fwd(q, k, v, causal=True, block_q=128, block_k=128)
+    b = flash_attention_fwd(q, k, v, causal=True, block_q=256, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_gradients_match_ref(rng_key):
+    q, k, v = _qkv(rng_key, 1, 2, 2, 128, 128, 32, jnp.float32)
+
+    def f_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, None, True, 0, 0.1,
+                                       "fused", 7, 1, 7, 128, 128, True))
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=True,
+                                         dropout_p=0.1, dropout_seed=7,
+                                         dropout_salt=1))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)

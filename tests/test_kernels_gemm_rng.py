@@ -1,0 +1,67 @@
+"""Fused GEMM+RNG kernel: matmul allclose, mask bit-exact, Region-3
+fallback, dtype sweep."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.gemm_rng import gemm_with_rng
+from repro.kernels.ref import gemm_ref, philox_mask_ref
+
+
+@pytest.mark.parametrize("dims", [(256, 128, 256), (512, 256, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_and_mask(rng_key, dims, dtype):
+    m, k, n = dims
+    a = jax.random.normal(rng_key, (m, k), dtype)
+    b = jax.random.normal(jax.random.PRNGKey(9), (k, n), dtype)
+    c, mask = gemm_with_rng(
+        a, b, mask_batch=2, mask_heads=2, mask_sq=64, mask_sk=256,
+        p=0.25, seed=4, salt=2, block_m=128, block_n=128, block_k=128,
+        mask_block_cols=128)
+    assert mask is not None
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(c, np.float32),
+                               np.asarray(gemm_ref(a, b), np.float32),
+                               rtol=tol, atol=tol)
+    want = philox_mask_ref(2, 2, 64, 256, 0.25, 4, salt=2)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(want))
+
+
+def test_mask_identical_to_standalone_kernel(rng_key):
+    """Paper Fig. 4: bits must not depend on where RNG runs."""
+    from repro.kernels.philox import philox_dropout_mask
+    a = jax.random.normal(rng_key, (256, 256), jnp.float32)
+    b = jax.random.normal(rng_key, (256, 256), jnp.float32)
+    _, mask_under_gemm = gemm_with_rng(
+        a, b, mask_batch=1, mask_heads=4, mask_sq=64, mask_sk=128,
+        p=0.1, seed=11, salt=6, block_m=128, block_n=128, block_k=128,
+        mask_block_cols=128)
+    standalone = philox_dropout_mask(1, 4, 64, 128, 0.1, 11, salt=6)
+    np.testing.assert_array_equal(np.asarray(mask_under_gemm),
+                                  np.asarray(standalone))
+
+
+def test_region3_fallback(rng_key):
+    """A GEMM too small to host the RNG returns (C, None) — the paper's
+    Region 3 (RNG exceeds GEMM; caller runs the standalone kernel)."""
+    a = jax.random.normal(rng_key, (128, 128), jnp.float32)
+    b = jax.random.normal(rng_key, (128, 128), jnp.float32)
+    c, mask = gemm_with_rng(
+        a, b, mask_batch=8, mask_heads=16, mask_sq=2048, mask_sk=2048,
+        p=0.1, seed=0, block_m=128, block_n=128, block_k=128)
+    assert mask is None
+    np.testing.assert_allclose(np.asarray(c), np.asarray(gemm_ref(a, b)),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_grid_shape_invariance(rng_key):
+    a = jax.random.normal(rng_key, (512, 256), jnp.float32)
+    b = jax.random.normal(rng_key, (256, 512), jnp.float32)
+    kw = dict(mask_batch=2, mask_heads=2, mask_sq=64, mask_sk=256,
+              p=0.3, seed=8, mask_block_cols=128)
+    _, m1 = gemm_with_rng(a, b, block_m=128, block_n=128, block_k=128,
+                          **kw)
+    _, m2 = gemm_with_rng(a, b, block_m=256, block_n=256, block_k=256,
+                          **kw)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))

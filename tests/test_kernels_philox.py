@@ -1,0 +1,101 @@
+"""Philox RNG kernel: bit-exactness against the pure-jnp oracle, a big-int
+python implementation, statistical sanity, and layout invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.philox import philox_dropout_mask
+from repro.kernels.philox_common import (
+    pack_bits_q32,
+    packed_rows_tile,
+    philox4x32,
+    seed_to_key,
+    threshold_from_p,
+    tile_keep_mask,
+    unpack_bits_q32,
+)
+from repro.kernels.ref import keep_mask_ref, philox_mask_ref
+
+
+def _py_philox(ctr, key, rounds):
+    M0, M1, W0, W1 = 0xD2511F53, 0xCD9E8D57, 0x9E3779B9, 0xBB67AE85
+    x0, x1, x2, x3 = ctr
+    k0, k1 = key
+    for _ in range(rounds):
+        p0, p1 = M0 * x0, M1 * x2
+        hi0, lo0 = p0 >> 32, p0 & 0xFFFFFFFF
+        hi1, lo1 = p1 >> 32, p1 & 0xFFFFFFFF
+        x0, x1, x2, x3 = hi1 ^ x1 ^ k0, lo1, hi0 ^ x3 ^ k1, lo0
+        k0, k1 = (k0 + W0) & 0xFFFFFFFF, (k1 + W1) & 0xFFFFFFFF
+    return x0, x1, x2, x3
+
+
+@pytest.mark.parametrize("rounds", [3, 5, 7, 10])
+@pytest.mark.parametrize("ctr", [(0, 0, 0, 0), (123, 456, 789, 101112),
+                                 (0xFFFFFFFF,) * 4, (1, 2, 3, 4)])
+def test_philox_matches_bigint_oracle(ctr, rounds):
+    got = philox4x32(*[jnp.uint32(c) for c in ctr], jnp.uint32(111),
+                     jnp.uint32(222), rounds)
+    want = _py_philox(ctr, (111, 222), rounds)
+    assert tuple(int(g) for g in got) == want
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 32, 128), (2, 3, 64, 256),
+                                   (1, 2, 128, 384)])
+@pytest.mark.parametrize("rounds", [3, 7])
+def test_kernel_bit_exact_vs_ref(shape, rounds):
+    b, h, sq, sk = shape
+    got = philox_dropout_mask(b, h, sq, sk, 0.13, 99, salt=5,
+                              rounds=rounds, rows32_blk=1, bk=128)
+    want = philox_mask_ref(b, h, sq, sk, 0.13, 99, salt=5, rounds=rounds)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_block_shape_invariance():
+    """Different BlockSpec tilings must produce identical bits."""
+    a = philox_dropout_mask(2, 2, 64, 256, 0.2, 7, rows32_blk=1, bk=128)
+    b = philox_dropout_mask(2, 2, 64, 256, 0.2, 7, rows32_blk=2, bk=256)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pack_unpack_roundtrip(rng_key):
+    import jax
+    bits = jax.random.bernoulli(rng_key, 0.5, (96, 128))
+    packed = pack_bits_q32(bits)
+    assert packed.shape == (3, 128) and packed.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(unpack_bits_q32(packed, 96)),
+                                  np.asarray(bits))
+
+
+def test_keep_fraction_statistics():
+    for p in (0.0, 0.1, 0.5):
+        keep = keep_mask_ref(1, 2, 128, 512, p, seed=3)
+        frac = float(jnp.mean(keep.astype(jnp.float32)))
+        assert abs(frac - (1.0 - p)) < 0.01, (p, frac)
+
+
+def test_seed_and_salt_decorrelate():
+    a = philox_mask_ref(1, 1, 32, 128, 0.5, seed=1, salt=0)
+    b = philox_mask_ref(1, 1, 32, 128, 0.5, seed=2, salt=0)
+    c = philox_mask_ref(1, 1, 32, 128, 0.5, seed=1, salt=1)
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_packed_rows_tile_crosses_heads():
+    b, h, sq, sk = 2, 3, 128, 256
+    ref = np.asarray(philox_mask_ref(b, h, sq, sk, 0.2, 11, salt=5))
+    flat = ref.reshape(b * h * (sq // 32), sk)
+    k0, k1 = seed_to_key(11)
+    thr = threshold_from_p(0.2)
+    got = packed_rows_tile(5, 128, sq // 32, 5, k0, k1, thr, 6, 128)
+    np.testing.assert_array_equal(np.asarray(got), flat[5:11, 128:256])
+
+
+def test_tile_matches_ref_at_offsets():
+    k0, k1 = seed_to_key(77)
+    thr = threshold_from_p(0.3)
+    full = keep_mask_ref(1, 4, 128, 256, 0.3, 77, salt=9)
+    tile = tile_keep_mask(64, 128, 2, 9, k0, k1, thr, 32, 64)
+    np.testing.assert_array_equal(np.asarray(tile),
+                                  np.asarray(full[0, 2, 64:96, 128:192]))

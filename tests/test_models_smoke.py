@@ -1,0 +1,130 @@
+"""Per-arch smoke tests: reduced same-family config, one forward/train
+step on CPU, output shapes + no NaNs; prefill/decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import (
+    DropoutPlanConfig,
+    OptimizerConfig,
+    RunConfig,
+    ShapeConfig,
+    ShardingConfig,
+    StepKind,
+    TrainConfig,
+    get_arch,
+    list_archs,
+)
+from repro.core.overlap import plan_from_config
+from repro.data import batch_for_step
+from repro.models import (
+    Runtime,
+    build_stacks,
+    decode_step,
+    forward,
+    model_init,
+    prefill,
+)
+from repro.train.loop import init_train_state, make_train_step
+
+ALL = list_archs()
+B, S = 2, 64
+
+
+def _inputs(cfg, key, b=B, s=S):
+    if cfg.frontend == "token":
+        return jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_forward_shapes_no_nan(arch, rng_key):
+    cfg = get_arch(arch, reduced=True)
+    params = model_init(rng_key, cfg)
+    plan = plan_from_config(DropoutPlanConfig(mode="overlap", p=0.1))
+    rt = Runtime(plan=plan, step=0, chunk_q=32)
+    logits, aux = forward(params, cfg, rt, _inputs(cfg, rng_key))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_one_train_step(arch, rng_key):
+    cfg = get_arch(arch, reduced=True)
+    shape = ShapeConfig("t", seq_len=32, global_batch=2,
+                        kind=StepKind.TRAIN)
+    run = RunConfig(model=cfg, shape=shape,
+                    dropout=DropoutPlanConfig(mode="overlap", p=0.1),
+                    sharding=ShardingConfig(remat="block"),
+                    train=TrainConfig(optimizer=OptimizerConfig(
+                        total_steps=10)))
+    state = init_train_state(rng_key, cfg)
+    step = make_train_step(cfg, run)
+    if cfg.frontend == "token":
+        x, y = batch_for_step(cfg, shape, 0)
+        x, y = jnp.asarray(x), jnp.asarray(y)
+    else:
+        x = jax.random.normal(rng_key, (2, 32, cfg.d_model), jnp.float32)
+        y = jax.random.randint(rng_key, (2, 32), 0, cfg.vocab_size)
+    state, m = jax.jit(step)(state, x, y)
+    assert not bool(jnp.isnan(m["loss"]))
+    assert int(state["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "qwen3-8b",
+                                  "recurrentgemma-9b", "rwkv6-7b",
+                                  "moonshot-v1-16b-a3b", "arctic-480b",
+                                  "musicgen-large"])
+def test_prefill_decode_matches_forward(arch, rng_key):
+    cfg = get_arch(arch, reduced=True)
+    params = model_init(rng_key, cfg)
+    rt = Runtime(plan=None, chunk_q=16)
+    s = 33
+    inp = _inputs(cfg, rng_key, 2, s + 3)
+    logits_full, _ = forward(params, cfg, rt, inp)
+    lg, caches = prefill(params, cfg, rt, inp[:, :s], capacity=s + 3)
+    err = float(jnp.abs(lg[:, 0] - logits_full[:, s - 1]).max())
+    for t in range(3):
+        lg, caches = decode_step(params, cfg, rt, inp[:, s + t:s + t + 1],
+                                 caches)
+        err = max(err, float(jnp.abs(lg[:, 0]
+                                     - logits_full[:, s + t]).max()))
+    assert err < 2e-3, (arch, err)
+
+
+def test_stack_structure_recurrentgemma():
+    cfg = get_arch("recurrentgemma-9b")
+    stacks = build_stacks(cfg)
+    assert sum(len(s.unit) * s.count for s in stacks) == cfg.n_layers
+    assert stacks[0].count == 12 and len(stacks[0].unit) == 3
+    assert stacks[1].count == 1 and len(stacks[1].unit) == 2
+
+
+def test_stack_structure_moonshot():
+    cfg = get_arch("moonshot-v1-16b-a3b")
+    stacks = build_stacks(cfg)
+    assert stacks[0].unit[0][1] == "dense" and stacks[0].count == 1
+    assert stacks[1].unit[0][1] == "moe" and stacks[1].count == 47
+
+
+def test_dropout_modes_equivalent(rng_key):
+    """overlap == fused exactly; none differs."""
+    cfg = get_arch("llama2-7b", reduced=True)
+    shape = ShapeConfig("t", seq_len=64, global_batch=2,
+                        kind=StepKind.TRAIN)
+    x, y = batch_for_step(cfg, shape, 0)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    losses = {}
+    for mode in ("overlap", "fused", "none"):
+        run = RunConfig(model=cfg, shape=shape,
+                        dropout=DropoutPlanConfig(mode=mode, p=0.1),
+                        train=TrainConfig(optimizer=OptimizerConfig(
+                            total_steps=10)))
+        state = init_train_state(rng_key, cfg)
+        _, m = jax.jit(make_train_step(cfg, run))(state, x, y)
+        losses[mode] = float(m["loss"])
+    assert losses["overlap"] == losses["fused"]
+    assert losses["none"] != losses["fused"]

@@ -1,0 +1,112 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dropout_rng
+from repro.kernels.philox_common import (
+    pack_bits_q32,
+    philox4x32,
+    threshold_from_p,
+    unpack_bits_q32,
+)
+from repro.kernels.ref import attention_ref, philox_mask_ref
+
+_SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(seed=st.integers(0, 2**63 - 1), salt=st.integers(0, 2**32 - 1),
+       b=st.integers(1, 3), h=st.integers(1, 3))
+@settings(**_SETTINGS)
+def test_mask_deterministic(seed, salt, b, h):
+    a = philox_mask_ref(b, h, 32, 128, 0.3, seed, salt)
+    c = philox_mask_ref(b, h, 32, 128, 0.3, seed, salt)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+@given(ctrs=st.lists(
+    st.tuples(*(st.integers(0, 2**32 - 1),) * 4), min_size=2, max_size=8,
+    unique=True))
+@settings(**_SETTINGS)
+def test_philox_injective_on_counters(ctrs):
+    """Distinct counters -> distinct outputs (PRP property, overwhelming
+    probability; any collision here would be a bug)."""
+    outs = set()
+    for c in ctrs:
+        w = philox4x32(*[jnp.uint32(x) for x in c], jnp.uint32(1),
+                       jnp.uint32(2), 7)
+        outs.add(tuple(int(x) for x in w))
+    assert len(outs) == len(ctrs)
+
+
+@given(p=st.floats(0.0, 0.9), rows=st.integers(1, 4))
+@settings(**_SETTINGS)
+def test_pack_unpack_inverse(p, rows):
+    key = jax.random.PRNGKey(int(p * 1000) + rows)
+    bits = jax.random.bernoulli(key, 1 - p, (rows * 32, 128))
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bits_q32(pack_bits_q32(bits), rows * 32)),
+        np.asarray(bits))
+
+
+@given(p=st.floats(0.05, 0.6))
+@settings(**_SETTINGS)
+def test_keep_rate_concentrates(p):
+    keep = dropout_rng.keep_mask_block(1, 2, 0, 64, 512, p, 3, 1)
+    frac = float(jnp.mean(keep.astype(jnp.float32)))
+    assert abs(frac - (1 - p)) < 0.03
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_attention_rows_normalized(seed):
+    """Without dropout, attention output is a convex combination of V
+    rows: outputs stay within [min(V), max(V)] per dim."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 2, 16, 8))
+    k = jax.random.normal(ks[1], (1, 2, 16, 8))
+    v = jax.random.normal(ks[2], (1, 2, 16, 8))
+    out = attention_ref(q, k, v, causal=True)
+    assert float(out.max()) <= float(v.max()) + 1e-5
+    assert float(out.min()) >= float(v.min()) - 1e-5
+
+
+@given(p=st.floats(0.05, 0.5), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_dropout_unbiased_in_expectation(p, seed):
+    """E[dropped probs * 1/(1-p)] == probs: the mean over many heads of
+    the dropout-rescaled attention matches no-dropout within tolerance."""
+    key = jax.random.PRNGKey(seed)
+    b, h, s, d = 1, 16, 32, 4
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d)) * 0.1
+    k = jax.random.normal(ks[1], (b, h, s, d)) * 0.1
+    v = jnp.ones((b, h, s, d))
+    # with v == 1, output rows = sum of (dropped, rescaled) probs;
+    # expectation over the mask = 1
+    out = attention_ref(q, k, v, causal=False, dropout_p=p,
+                        dropout_seed=seed)
+    mean = float(jnp.mean(out))
+    assert abs(mean - 1.0) < 0.1
+
+
+@given(layer=st.integers(0, 200), step=st.integers(0, 1000))
+@settings(**_SETTINGS)
+def test_packed_mask_changes_with_layer_and_step(layer, step):
+    from repro.core.overlap import DropoutPlan
+    from repro.config import DropoutPlanConfig
+    plan = DropoutPlan(DropoutPlanConfig(mode="overlap", p=0.5))
+    m1 = plan.precompute_mask(1, 1, 32, 128, layer, step)
+    m2 = plan.precompute_mask(1, 1, 32, 128, layer + 1, step)
+    m3 = plan.precompute_mask(1, 1, 32, 128, layer, step + 1)
+    assert not np.array_equal(np.asarray(m1), np.asarray(m2))
+    assert not np.array_equal(np.asarray(m1), np.asarray(m3))
+
+
+@given(th=st.floats(0.0, 1.0))
+@settings(**_SETTINGS)
+def test_threshold_monotone(th):
+    assert 0 <= threshold_from_p(th) <= 0xFFFFFFFF
+    assert threshold_from_p(th) <= threshold_from_p(min(1.0, th + 0.05))

@@ -1,0 +1,117 @@
+"""Sharding-policy spec derivation + the loop-aware HLO analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import get_arch
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    LAYOUT_PRESETS,
+    ShardingPolicy,
+)
+from repro.roofline.hlo import HloModule, analyze_module, shape_bytes
+
+
+class _FakeMesh:
+    """Just enough Mesh surface for spec derivation tests."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(self.shape)
+
+
+def _policy(rules=None, shape=(("data", 16), ("model", 16))):
+    return ShardingPolicy(_FakeMesh(shape), rules=rules)
+
+
+def test_spec_divisibility_drops_axes():
+    pol = _policy()
+    # kv_heads=8 does not divide model=16 -> replicated
+    assert pol.mesh_axes_for("kv_heads", 8) is None
+    assert pol.mesh_axes_for("kv_heads", 16) == "model"
+    assert pol.mesh_axes_for("batch", 256) == "data"
+
+
+def test_spec_conflict_resolution():
+    pol = _policy(rules=LAYOUT_PRESETS["fsdp"])
+    # batch takes (data, model); seq finds model already used
+    spec = pol.spec(("batch", "seq", "embed"), (256, 4096, 4096))
+    assert spec == P(("data", "model"), None, None)
+
+
+def test_fsdp_multipod_seq_gets_model():
+    pol = _policy(rules=LAYOUT_PRESETS["fsdp"],
+                  shape=(("pod", 2), ("data", 16), ("model", 16)))
+    # batch 256 covers pod*data=32 but not *model (256 % 512 != 0)
+    spec = pol.spec(("batch", "seq", "embed"), (256, 4096, 4096))
+    assert spec == P(("pod", "data"), "model", None)
+
+
+def test_param_specs_for_arch():
+    from repro.distributed.specs import param_specs
+    from repro.models import model_init
+    cfg = get_arch("moonshot-v1-16b-a3b", reduced=True)
+    shapes = jax.eval_shape(
+        lambda: model_init(jax.random.PRNGKey(0), cfg))
+    pol = _policy(shape=(("data", 2), ("model", 2)))
+    specs = param_specs(shapes, pol, fsdp=False)
+    # moe stack: expert weights sharded (stack, expert->data, -, mlp)
+    moe_spec = specs["stacks"][1]["l0"]["moe"]["w_gate"]
+    assert moe_spec == P(None, "data", None, "model")
+    # embedding: vocab over model
+    assert specs["embed"][0] == "model" or specs["embed"] == P("model",
+                                                               None)
+
+
+def test_zero_extend():
+    from repro.distributed.specs import zero_extend
+    pol = _policy()
+    # unsharded dim gets 'data'
+    assert zero_extend(P(None, "model"), (4096, 128), pol) == \
+        P("data", "model")
+    # already data-sharded passes through
+    assert zero_extend(P("data", None), (256, 64), pol) == P("data", None)
+
+
+# ------------------------------------------------------------ HLO analyzer
+
+def test_hlo_flops_loop_multiplied():
+    """A scan of N matmuls must report N * per-matmul flops."""
+    n, d = 8, 64
+
+    def f(x, ws):
+        def body(x, w):
+            return x @ w, ()
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    x = jnp.ones((d, d))
+    ws = jnp.ones((n, d, d))
+    text = jax.jit(f).lower(x, ws).compile().as_text()
+    r = analyze_module(text)
+    expect = n * 2 * d ** 3
+    assert r["flops"] == pytest.approx(expect, rel=0.01), r["flops"]
+
+
+def test_hlo_shape_bytes():
+    assert shape_bytes("f32[4,8]{1,0}") == 128
+    assert shape_bytes("bf16[10]") == 20
+    assert shape_bytes("(f32[2,2], u32[4])") == 32
+    assert shape_bytes("pred[16]") == 16
+
+
+def test_hlo_trip_count():
+    def f(x):
+        def body(c, _):
+            return c * 2.0, ()
+        c, _ = jax.lax.scan(body, x, None, length=13)
+        return c
+
+    text = jax.jit(f).lower(jnp.ones((8,))).compile().as_text()
+    mod = HloModule(text)
+    trips = [mod.while_trip_count(
+        __import__("re").search(r"condition=%?([\w.\-]+)", i.attrs).group(1))
+        for c in mod.computations.values() for i in c.instructions
+        if i.opcode == "while"]
+    assert 13 in trips
