@@ -77,6 +77,58 @@ def bench_gemm_rng() -> List[Row]:
     ]
 
 
+def bench_mask_sites() -> List[Row]:
+    """Producer-site ablation: the same packed mask generated at each of
+    the three scheduler sites ("xla" | "qkv" | "prev_gemm"), through the
+    real producer entry points. Also asserts the load-bearing invariant:
+    every site emits bit-identical bits."""
+    import numpy as np
+
+    from repro.config.base import DropoutPlanConfig
+    from repro.core import dropout_rng, producer
+    from repro.core.overlap import plan_from_config
+
+    B, H, S, D = 1, 4, 256, 512
+    plan = plan_from_config(
+        DropoutPlanConfig(mode="overlap", p=0.1, seed=0))
+    key = jax.random.PRNGKey(3)
+    x2d = jax.random.normal(key, (B * S, D), jnp.float32)      # qkv GEMM
+    w_qkv = jax.random.normal(key, (D, 3 * D), jnp.float32)
+    out2d = jax.random.normal(key, (B * S, D), jnp.float32)    # out-proj
+    w_o = jax.random.normal(key, (D, D), jnp.float32)
+    layer, step = 1, 0
+
+    def site_xla():
+        return plan.precompute_mask(B, H, S, S, layer, step)
+
+    def site_qkv():
+        return producer.gemm_with_mask(
+            x2d, w_qkv, plan, (B, H, S, S), layer, step)
+
+    def site_prev():
+        return producer.gemm_with_mask(
+            out2d, w_o, plan, (B, H, S, S), layer, step)
+
+    m_xla = site_xla()
+    _, m_qkv, how_qkv = site_qkv()
+    _, m_prev, how_prev = site_prev()
+    np.testing.assert_array_equal(np.asarray(m_xla), np.asarray(m_qkv))
+    np.testing.assert_array_equal(np.asarray(m_xla), np.asarray(m_prev))
+
+    t_xla = _t(site_xla)
+    t_qkv = _t(site_qkv)
+    t_prev = _t(site_prev)
+    return [
+        ("site/xla", t_xla, "mask only (XLA producer)"),
+        ("site/qkv", t_qkv,
+         f"gemm+mask, how={how_qkv} (interpret; on TPU the RNG hides in "
+         "the MXU shadow)"),
+        ("site/prev_gemm", t_prev,
+         f"out-proj gemm+mask for layer l+1, how={how_prev}; "
+         "bits identical across all three sites"),
+    ]
+
+
 def bench_wkv() -> List[Row]:
     """Chunked WKV vs naive recurrence (throughput substrate for rwkv6)."""
     from repro.models.rwkv import wkv_chunked, wkv_step

@@ -53,6 +53,7 @@ def all_benches():
         ("tpu", paper_figures.bench_tpu_adaptation),
         ("kernel_attn", kernel_bench.bench_attention_modes),
         ("kernel_gemm_rng", kernel_bench.bench_gemm_rng),
+        ("kernel_mask_sites", kernel_bench.bench_mask_sites),
         ("kernel_wkv", kernel_bench.bench_wkv),
         ("roofline", bench_roofline_table),
     ]

@@ -1,0 +1,44 @@
+"""JAX version compatibility shims.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` in newer
+JAX releases and renamed the replication-check kwarg ``check_rep`` ->
+``check_vma`` along the way. The repo targets the new spelling; this shim
+lets the same call sites run on 0.4.x where only the experimental entry
+point exists.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+
+__all__ = ["shard_map"]
+
+_RESOLVED: Optional[Tuple[Callable, str]] = None
+
+
+def _resolve() -> Tuple[Callable, str]:
+    """(shard_map callable, name of its replication-check kwarg). Some
+    releases expose ``jax.shard_map`` while still spelling the kwarg
+    ``check_rep``, so branch on the signature, not on attribute
+    existence."""
+    global _RESOLVED
+    if _RESOLVED is None:
+        if hasattr(jax, "shard_map"):
+            fn = jax.shard_map
+        else:
+            from jax.experimental.shard_map import shard_map as fn
+        params = inspect.signature(fn).parameters
+        kw = "check_vma" if "check_vma" in params else "check_rep"
+        _RESOLVED = (fn, kw)
+    return _RESOLVED
+
+
+def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: bool = True) -> Callable:
+    """``jax.shard_map`` when available, else the experimental fallback;
+    ``check_vma`` maps onto ``check_rep`` where that is the spelling."""
+    fn, kw = _resolve()
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{kw: check_vma})

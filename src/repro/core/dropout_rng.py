@@ -14,7 +14,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.philox_common import philox4x32, threshold_from_p
+from repro.kernels.philox_common import (
+    philox4x32,
+    split_seed,
+    threshold_from_p,
+)
 
 __all__ = [
     "packed_mask",
@@ -24,14 +28,10 @@ __all__ = [
 ]
 
 
-def _split_seed(seed):
-    """seed may be a python int or a traced uint32/int32 scalar (training
-    steps fold the step index in)."""
-    if isinstance(seed, (int, np.integer)):
-        s = int(seed) & 0xFFFFFFFFFFFFFFFF
-        return np.uint32(s & 0xFFFFFFFF), np.uint32(s >> 32)
-    seed = seed.astype(jnp.uint32)
-    return seed, jnp.zeros((), jnp.uint32)
+# seed may be a python int or a traced uint32/int32 scalar (training
+# steps fold the step index in); the split is shared with the Pallas
+# kernels' SMEM operand so all producers key Philox identically.
+_split_seed = split_seed
 
 
 def keep_mask_block(batch: int, n_heads: int, q_start, cq: int, sk: int,

@@ -12,6 +12,11 @@ The plan decides *where* attention-dropout RNG runs:
                    softmax region so the scheduler can hoist them.
   mode "none"    — dropout disabled (inference / ablation).
 
+In overlap mode ``cfg.site`` selects WHICH producer GEMM hosts the RNG
+("xla" | "qkv" | "prev_gemm" — see DropoutPlanConfig); the scheduling
+logic lives in core/producer.py. The load-bearing invariant: every site
+emits bit-identical packed masks for the same (seed, salt, layer, step).
+
 Seeds fold (train_step, layer) into the Philox counters, so masks are
 deterministic for checkpoint-restart reproducibility and remat-safe.
 """
@@ -46,6 +51,18 @@ class DropoutPlan:
     @property
     def overlapped(self) -> bool:
         return self.cfg.mode == "overlap"
+
+    @property
+    def site(self) -> str:
+        """Producer-GEMM site hosting the RNG (overlap mode only)."""
+        return getattr(self.cfg, "site", "xla")
+
+    @property
+    def carried(self) -> bool:
+        """True when masks pipeline across layers (site="prev_gemm"):
+        the transformer scan threads a carried mask buffer."""
+        return (self.enabled and self.overlapped
+                and self.site == "prev_gemm")
 
     def salt(self, layer_idx, stream: int = SALT_ATTN):
         """uint32 salt for (layer, stream). layer_idx may be traced (scan

@@ -1,0 +1,131 @@
+"""Producer-site RNG scheduler — decides WHERE each layer's packed dropout
+mask is physically generated, and runs the producer GEMM when the site is
+kernel-fused.
+
+The paper hides dropout RNG under producer GEMMs (QKV projection, or the
+previous layer's GEMMs). This module is the single place that scheduling
+decision lives: the model passes it a producer GEMM plus the mask shape,
+and gets back the GEMM result, the packed mask, and a static tag saying
+where the bits actually came from:
+
+  "gemm_rng"   — inside the fused GEMM+RNG Pallas kernel (MXU ∥ VPU)
+  "standalone" — the standalone philox Pallas kernel (paper Region 3:
+                 the GEMM could not host the RNG, the remainder runs
+                 exposed — but still producer-side, before attention)
+  "xla"        — XLA-generated bits (non-Pallas path / sharded path /
+                 8-bit Philox scheme, which only the XLA producer knows)
+
+Every producer is bit-identical for the same (seed, salt, layer, step) —
+the invariant the sites ablation and checkpoint-restart reproducibility
+rest on. Sharded fused projections (running the fused kernel inside
+shard_map) are a ROADMAP follow-on; with a sharding policy installed the
+scheduler currently degrades to the XLA producer.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import dropout_rng
+from repro.core.overlap import DropoutPlan
+
+HOW_GEMM = "gemm_rng"
+HOW_STANDALONE = "standalone"
+HOW_XLA = "xla"
+
+# interpret-mode-friendly caps, matching the fused kernel's defaults
+_BLOCK_M_CAP = 256
+_BLOCK_N_CAP = 256
+_BLOCK_K_CAP = 512
+
+
+def _largest_divisor(dim: int, cap: int) -> int:
+    for c in range(min(cap, dim), 0, -1):
+        if dim % c == 0:
+            return c
+    return 1
+
+
+def pick_gemm_blocks(m: int, n: int, k: int
+                     ) -> Optional[Tuple[int, int, int]]:
+    """Block shape for a model-path fused GEMM, or None when the operand
+    shapes don't tile cleanly (oddly-sized dims would force degenerate
+    blocks; the caller then keeps the plain GEMM and the XLA producer)."""
+    bm = _largest_divisor(m, _BLOCK_M_CAP)
+    bn = _largest_divisor(n, _BLOCK_N_CAP)
+    bk = _largest_divisor(k, _BLOCK_K_CAP)
+    if bm % 8 or bn % 8 or bk % 8:
+        return None
+    return bm, bn, bk
+
+
+def _kernel_capable(plan: DropoutPlan, sq: int, sk: int) -> bool:
+    """The Pallas producers implement the paper-faithful 32-bit Philox
+    scheme only; the beyond-paper 8-bit scheme stays with XLA."""
+    if plan.cfg.philox_bits != 32:
+        return False
+    if sq % 32:
+        return False
+    sq32 = sq // 32
+    return (sq32 % min(8, sq32) == 0) and (sk % min(512, sk) == 0)
+
+
+def standalone_packed_mask(plan: DropoutPlan, batch: int, n_heads: int,
+                           sq: int, sk: int, layer_idx, step,
+                           use_kernel: bool = True) -> jnp.ndarray:
+    """Packed mask from a producer-side standalone generator: the philox
+    Pallas kernel when it can represent the plan, else the XLA producer.
+    Used for the Region-3 remainder and to bootstrap the first layer of
+    the prev_gemm pipeline (no previous GEMM exists yet)."""
+    seed = plan.step_seed(step)
+    salt = plan.salt(layer_idx)
+    if use_kernel and _kernel_capable(plan, sq, sk):
+        from repro.kernels import ops
+        return ops.dropout_mask(batch, n_heads, sq, sk, plan.cfg.p,
+                                seed, salt, plan.cfg.philox_rounds)
+    return dropout_rng.packed_mask(
+        batch, n_heads, sq, sk, plan.cfg.p, seed, salt,
+        plan.cfg.philox_rounds, plan.cfg.philox_bits)
+
+
+def gemm_with_mask(x2d: jnp.ndarray, w2d: jnp.ndarray, plan: DropoutPlan,
+                   mask_shape: Tuple[int, int, int, int], layer_idx, step,
+                   allow_fused: bool = True
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, str]:
+    """y = x2d @ w2d with the packed mask for ``mask_shape`` = (B, H, SQ,
+    SK) produced at this GEMM. Returns (y2d, mask, how) with ``how`` a
+    static tag (see module docstring).
+
+    allow_fused=False forces the XLA producer (used when the GEMM itself
+    must stay an XLA op: impl="xla", or a sharding policy is installed and
+    the fused kernel cannot yet run shard-local).
+    """
+    batch, n_heads, sq, sk = mask_shape
+    m, kdim = x2d.shape
+    n = w2d.shape[1]
+    blocks = pick_gemm_blocks(m, n, kdim) if allow_fused else None
+    if (not allow_fused or blocks is None
+            or not _kernel_capable(plan, sq, sk)
+            or sk % min(2048, sk) != 0):
+        y = x2d @ w2d
+        mask = dropout_rng.packed_mask(
+            batch, n_heads, sq, sk, plan.cfg.p, plan.step_seed(step),
+            plan.salt(layer_idx), plan.cfg.philox_rounds,
+            plan.cfg.philox_bits)
+        return y, mask, HOW_XLA
+
+    from repro.kernels import ops
+    bm, bn, bk = blocks
+    y, mask = ops.fused_qkv_gemm_rng(
+        x2d, w2d, mask_batch=batch, mask_heads=n_heads, mask_sq=sq,
+        mask_sk=sk, p=plan.cfg.p, seed=plan.step_seed(step),
+        salt=plan.salt(layer_idx), rounds=plan.cfg.philox_rounds,
+        block_m=bm, block_n=bn, block_k=bk)
+    if mask is None:
+        # Region 3: the GEMM grid is too small to hide this much RNG;
+        # the remainder runs exposed in the standalone kernel.
+        mask = standalone_packed_mask(plan, batch, n_heads, sq, sk,
+                                      layer_idx, step)
+        return y, mask, HOW_STANDALONE
+    return y, mask, HOW_GEMM

@@ -26,12 +26,13 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.philox_common import (
     packed_rows_tile,
-    seed_to_key,
+    seed_salt_smem,
     threshold_from_p,
 )
 
@@ -45,9 +46,9 @@ def _mask_block_idx(s, n_valid_blocks: int, n_cb: int, n_rb_valid: int):
     return rb_idx, cb_idx
 
 
-def _gemm_rng_kernel(a_ref, b_ref, c_ref, m_ref, acc_scr, *,
-                     n_cb: int, rb: int, ck: int, sq32: int, salt: int,
-                     k0: int, k1: int, threshold: int, rounds: int,
+def _gemm_rng_kernel(s_ref, a_ref, b_ref, c_ref, m_ref, acc_scr, *,
+                     n_cb: int, rb: int, ck: int, sq32: int,
+                     threshold: int, rounds: int,
                      n_valid_blocks: int, n_rb_valid: int, out_dtype):
     i = pl.program_id(0)
     j = pl.program_id(1)
@@ -71,8 +72,8 @@ def _gemm_rng_kernel(a_ref, b_ref, c_ref, m_ref, acc_scr, *,
         rb_idx, cb_idx = _mask_block_idx(s, n_valid_blocks, n_cb,
                                          n_rb_valid)
         m_ref[...] = packed_rows_tile(
-            rb_idx * rb, cb_idx * ck, sq32, salt, k0, k1, threshold,
-            rb, ck, rounds)
+            rb_idx * rb, cb_idx * ck, sq32, s_ref[2], s_ref[0], s_ref[1],
+            threshold, rb, ck, rounds)
 
     @pl.when(kk == nk - 1)
     def _flush():
@@ -91,7 +92,9 @@ def gemm_with_rng(a: jnp.ndarray, b: jnp.ndarray, *,
     """C = a @ b, plus the packed dropout keep-mask (B, H, SQ//32, SK)
     generated under the GEMM. Returns (C, mask) — mask is None when the
     GEMM grid cannot host the mask work (caller falls back to the
-    standalone kernel; the paper's Region 3).
+    standalone kernel; the paper's Region 3). ``seed``/``salt`` may be
+    python ints or traced uint32 scalars (the training path folds the
+    step/layer in); they ride into the kernel as a (3,) SMEM operand.
     """
     m, kdim = a.shape
     k2, n = b.shape
@@ -117,10 +120,21 @@ def gemm_with_rng(a: jnp.ndarray, b: jnp.ndarray, *,
         return _plain_gemm(a, b, bm, bn, bkk, interpret), None
     mask_rows_alloc = (n_rb_valid + 1) * rb      # +1 dummy overflow block
 
-    k0, k1 = seed_to_key(seed)
+    static = (gm, gn, gk, bm, bn, bkk, n_cb, rb, ck, sq32,
+              threshold_from_p(p), rounds, n_valid_blocks, n_rb_valid,
+              mask_rows_alloc, mask_sk, interpret,
+              mask_batch, mask_heads)
+    return _gemm_rng_call(static, seed_salt_smem(seed, salt), a, b)
+
+
+def _gemm_rng_impl(static, sd, a, b):
+    (gm, gn, gk, bm, bn, bkk, n_cb, rb, ck, sq32, threshold, rounds,
+     n_valid_blocks, n_rb_valid, mask_rows_alloc, mask_sk,
+     interpret, mask_batch, mask_heads) = static
+    m, n = a.shape[0], b.shape[1]
     kernel = functools.partial(
-        _gemm_rng_kernel, n_cb=n_cb, rb=rb, ck=ck, sq32=sq32, salt=salt,
-        k0=k0, k1=k1, threshold=threshold_from_p(p), rounds=rounds,
+        _gemm_rng_kernel, n_cb=n_cb, rb=rb, ck=ck, sq32=sq32,
+        threshold=threshold, rounds=rounds,
         n_valid_blocks=n_valid_blocks, n_rb_valid=n_rb_valid,
         out_dtype=a.dtype)
 
@@ -133,6 +147,7 @@ def gemm_with_rng(a: jnp.ndarray, b: jnp.ndarray, *,
         kernel,
         grid=(gm, gn, gk),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((bm, bkk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bkk, bn), lambda i, j, kk: (kk, j)),
         ],
@@ -146,13 +161,48 @@ def gemm_with_rng(a: jnp.ndarray, b: jnp.ndarray, *,
         ],
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(a, b)
-    mask = mask2d[:mr].reshape(mask_batch, mask_heads, sq32, mask_sk)
-    return c, mask
+    )(sd, a, b)
+    mr = mask_batch * mask_heads * sq32
+    # the dummy-row slice lives INSIDE the custom_vjp so AD never has to
+    # transpose a slice of the integer mask (float0 cotangents)
+    return c, mask2d[:mr].reshape(mask_batch, mask_heads, sq32, mask_sk)
 
 
-def _plain_gemm(a, b, bm, bn, bkk, interpret):
-    """Tiled matmul without the RNG side-channel (fallback / baseline)."""
+# The training path differentiates through the fused projection GEMM.
+# Only the FORWARD GEMM hosts RNG (the backward regenerates nothing — it
+# consumes the stored 1-bit mask), so the bwd is the textbook pair of
+# dgrad GEMMs as XLA dots; the integer outputs/inputs (mask, seed) carry
+# float0 cotangents.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gemm_rng_call(static, sd, a, b):
+    return _gemm_rng_impl(static, sd, a, b)
+
+
+def _gemm_rng_fwd(static, sd, a, b):
+    return _gemm_rng_impl(static, sd, a, b), (a, b)
+
+
+def _dgrad_pair(a, b, dc):
+    """Textbook GEMM backward in f32: (dA, dB) from dC."""
+    dcf = dc.astype(jnp.float32)
+    da = (dcf @ b.astype(jnp.float32).T).astype(a.dtype)
+    db = (a.astype(jnp.float32).T @ dcf).astype(b.dtype)
+    return da, db
+
+
+def _gemm_rng_bwd(static, res, cts):
+    a, b = res
+    da, db = _dgrad_pair(a, b, cts[0])
+    dsd = np.zeros((3,), jax.dtypes.float0)
+    return dsd, da, db
+
+
+_gemm_rng_call.defvjp(_gemm_rng_fwd, _gemm_rng_bwd)
+
+
+def _plain_gemm_impl(a, b, static):
+    bm, bn, bkk, interpret = static
     m, kdim = a.shape
     _, n = b.shape
 
@@ -183,3 +233,25 @@ def _plain_gemm(a, b, bm, bn, bkk, interpret):
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _plain_gemm_call(a, b, static):
+    return _plain_gemm_impl(a, b, static)
+
+
+def _plain_gemm_fwd(a, b, static):
+    return _plain_gemm_impl(a, b, static), (a, b)
+
+
+def _plain_gemm_bwd(static, res, dc):
+    a, b = res
+    return _dgrad_pair(a, b, dc)
+
+
+_plain_gemm_call.defvjp(_plain_gemm_fwd, _plain_gemm_bwd)
+
+
+def _plain_gemm(a, b, bm, bn, bkk, interpret):
+    """Tiled matmul without the RNG side-channel (fallback / baseline)."""
+    return _plain_gemm_call(a, b, (bm, bn, bkk, interpret))

@@ -29,23 +29,27 @@ def default_interpret() -> bool:
 
 
 def dropout_mask(batch: int, n_heads: int, sq: int, sk: int, p: float,
-                 seed: int, salt: int = 0, rounds: int = 7) -> jnp.ndarray:
-    """Standalone-RNG kernel: packed keep-bits (B, H, SQ//32, SK)."""
+                 seed, salt=0, rounds: int = 7) -> jnp.ndarray:
+    """Standalone-RNG kernel: packed keep-bits (B, H, SQ//32, SK).
+    ``seed``/``salt`` may be python ints or traced uint32 scalars."""
     return philox_dropout_mask(batch, n_heads, sq, sk, p, seed, salt,
                                rounds, interpret=default_interpret())
 
 
 def fused_qkv_gemm_rng(x: jnp.ndarray, w_qkv: jnp.ndarray, *,
                        mask_batch: int, mask_heads: int, mask_sq: int,
-                       mask_sk: int, p: float, seed: int, salt: int = 0,
-                       rounds: int = 7,
+                       mask_sk: int, p: float, seed, salt=0,
+                       rounds: int = 7, block_m: int = 256,
+                       block_n: int = 256, block_k: int = 512,
                        ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """QKV projection with the dropout mask for the *following* attention
     layer generated under the GEMM (the paper's Fig. 4 overlap topology).
     Falls back to (plain GEMM, None) when the GEMM cannot host the RNG —
     the caller should then invoke ``dropout_mask`` (exposed RNG, paper
-    Region 3)."""
+    Region 3). ``seed``/``salt`` may be traced uint32 scalars — the
+    training path folds (step, layer) in under the jit."""
     return gemm_with_rng(
         x, w_qkv, mask_batch=mask_batch, mask_heads=mask_heads,
         mask_sq=mask_sq, mask_sk=mask_sk, p=p, seed=seed, salt=salt,
-        rounds=rounds, interpret=default_interpret())
+        rounds=rounds, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=default_interpret())

@@ -105,6 +105,32 @@ def seed_to_key(seed: int) -> Tuple[int, int]:
     return seed & 0xFFFFFFFF, seed >> 32
 
 
+def split_seed(seed) -> Tuple:
+    """seed -> (key_lo, key_hi). Python ints use the full 64-bit key;
+    traced scalars land in key_lo with key_hi = 0. THE canonical split,
+    shared by the XLA producer and the SMEM kernel operand — every mask
+    producer must key Philox identically or the cross-site bit-identity
+    invariant breaks."""
+    if isinstance(seed, (int, np.integer)):
+        lo, hi = seed_to_key(int(seed))
+        return np.uint32(lo), np.uint32(hi)
+    return seed.astype(jnp.uint32), jnp.zeros((), jnp.uint32)
+
+
+def seed_salt_smem(seed, salt) -> jnp.ndarray:
+    """(3,) uint32 [key_lo, key_hi, salt] — the SMEM operand of the
+    dynamic-seed kernels (training folds the step/layer into seed/salt as
+    traced scalars, so they must enter the kernel as data, not literals).
+    """
+    k0, k1 = split_seed(seed)
+    if isinstance(salt, (int, np.integer)):
+        s = jnp.full((), int(salt) & 0xFFFFFFFF, jnp.uint32)
+    else:
+        s = salt.astype(jnp.uint32)
+    return jnp.stack([jnp.asarray(k0, jnp.uint32),
+                      jnp.asarray(k1, jnp.uint32), s])
+
+
 def tile_random_u32(q_start, k_start, bh, salt, k0, k1,
                     bq: int, bk: int, rounds: int = 7,
                     iota_fn=None) -> jnp.ndarray:

@@ -12,6 +12,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.config.base import AttentionKind, ModelConfig
 from repro.core.attention import attention_decode, attention_xla
 from repro.core.overlap import DropoutPlan
@@ -38,14 +39,11 @@ def attn_init(key, cfg: ModelConfig) -> Dict[str, Any]:
     return p
 
 
-def _project_qkv(p, x, cfg: ModelConfig, positions):
-    """x (B, S, D) -> q (B,H,S,hd), k/v (B,KV,S,hd)."""
-    b, s, _ = x.shape
+def _finish_qkv(p, q, k, v, b, s, cfg: ModelConfig, positions):
+    """Shared post-GEMM half of the projection: bias, head split,
+    sharding constraints, qk-norm, rope. q/k/v arrive as (B, S, dim)."""
     nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    dt = x.dtype
-    q = x @ p["w_q"].astype(dt)
-    k = x @ p["w_k"].astype(dt)
-    v = x @ p["w_v"].astype(dt)
+    dt = q.dtype
     if cfg.qkv_bias:
         q = q + p["b_q"].astype(dt)
         k = k + p["b_k"].astype(dt)
@@ -65,20 +63,82 @@ def _project_qkv(p, x, cfg: ModelConfig, positions):
     return q, k, v
 
 
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    """x (B, S, D) -> q (B,H,S,hd), k/v (B,KV,S,hd)."""
+    b, s, _ = x.shape
+    dt = x.dtype
+    q = x @ p["w_q"].astype(dt)
+    k = x @ p["w_k"].astype(dt)
+    v = x @ p["w_v"].astype(dt)
+    return _finish_qkv(p, q, k, v, b, s, cfg, positions)
+
+
+def _project_qkv_fused(p, x, cfg: ModelConfig, positions, plan,
+                       layer_idx, step):
+    """Fused QKV projection: one concatenated GEMM with this layer's
+    packed dropout mask physically generated under it (the paper's
+    ``qkv+RNG`` site, kernel-realized). Returns (q, k, v, packed, how) —
+    ``how`` is the producer tag ("gemm_rng" | "standalone" | "xla")."""
+    from repro.core import producer
+    b, s, d = x.shape
+    nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    w_qkv = jnp.concatenate(
+        [p["w_q"].astype(dt), p["w_k"].astype(dt), p["w_v"].astype(dt)],
+        axis=1)
+    y2d, packed, how = producer.gemm_with_mask(
+        x.reshape(b * s, d), w_qkv, plan, (b, nq, s, s), layer_idx, step)
+    y = y2d.reshape(b, s, -1)
+    q = y[..., :nq * hd]
+    k = y[..., nq * hd:(nq + nkv) * hd]
+    v = y[..., (nq + nkv) * hd:]
+    q, k, v = _finish_qkv(p, q, k, v, b, s, cfg, positions)
+    return q, k, v, packed, how
+
+
 def attn_apply(p, x, cfg: ModelConfig, *, kind: AttentionKind,
                plan: Optional[DropoutPlan], layer_idx, step,
                chunk_q: int = 1024, probs_dtype=None,
-               impl: str = "xla", policy=None) -> jnp.ndarray:
-    """Training / prefill forward (full sequence). x (B, S, D)."""
+               impl: str = "xla", policy=None,
+               mask_in=None, emit_next: bool = False):
+    """Training / prefill forward (full sequence). x (B, S, D).
+
+    The dropout plan's ``site`` picks the mask producer (core/producer.py):
+      "xla"       — XLA bits generated next to the QKV GEMM (default)
+      "qkv"       — bits generated INSIDE the fused QKV-GEMM kernel when
+                    impl="pallas" (Region-3 fallback: standalone kernel)
+      "prev_gemm" — ``mask_in`` carries this layer's mask (made under the
+                    previous layer's out-proj GEMM); with ``emit_next``
+                    the call returns (out, mask_next) where mask_next is
+                    layer l+1's mask generated under THIS layer's
+                    out-projection. All sites emit bit-identical masks.
+    Returns out, or (out, mask_next) when ``emit_next``.
+    """
     b, s, _ = x.shape
     positions = jnp.arange(s, dtype=jnp.int32)
-    q, k, v = _project_qkv(p, x, cfg, positions)
     local = cfg.local_window if kind == AttentionKind.LOCAL else 0
+    overlap = plan is not None and plan.enabled and plan.overlapped
+    site = plan.site if overlap else "xla"
+    # fused kernels run shard-local only for the unsharded case today;
+    # sharded fused projections are a ROADMAP follow-on
+    fuse_ok = impl == "pallas" and policy is None
 
-    # --- the paper's overlap site: mask precomputed at the QKV GEMM ---
+    # --- the paper's overlap site: mask produced at a producer GEMM ---
     packed = None
-    if plan is not None and plan.enabled and plan.overlapped:
-        packed = plan.precompute_mask(b, cfg.n_heads, s, s, layer_idx, step)
+    if overlap and site == "qkv" and fuse_ok:
+        q, k, v, packed, _how = _project_qkv_fused(
+            p, x, cfg, positions, plan, layer_idx, step)
+    else:
+        q, k, v = _project_qkv(p, x, cfg, positions)
+        if overlap and site == "prev_gemm":
+            from repro.core import producer
+            packed = mask_in if mask_in is not None else \
+                producer.standalone_packed_mask(
+                    plan, b, cfg.n_heads, s, s, layer_idx, step,
+                    use_kernel=fuse_ok)
+        elif overlap:
+            packed = plan.precompute_mask(b, cfg.n_heads, s, s,
+                                          layer_idx, step)
 
     if impl == "pallas" and _pallas_ok(plan, policy, cfg, s):
         out = _attn_pallas_sharded(q, k, v, packed, plan, local, policy)
@@ -90,7 +150,17 @@ def attn_apply(p, x, cfg: ModelConfig, *, kind: AttentionKind,
             chunk_q=chunk_q, probs_dtype=probs_dtype or _jnp.float32)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
     out = constrain(out, "batch", None, "heads")
-    return out @ p["w_o"].astype(x.dtype)
+    w_o = p["w_o"].astype(x.dtype)
+    if emit_next and overlap and site == "prev_gemm":
+        # cross-layer pipelining: the NEXT layer's mask rides under this
+        # layer's out-projection (the paper's "previous GEMM layers" site)
+        from repro.core import producer
+        y2d, mask_next, _how = producer.gemm_with_mask(
+            out.reshape(b * s, -1), w_o, plan, (b, cfg.n_heads, s, s),
+            layer_idx + 1, step, allow_fused=fuse_ok)
+        return y2d.reshape(b, s, -1), mask_next
+    y = out @ w_o
+    return (y, mask_in) if emit_next else y
 
 
 def _pallas_ok(plan, policy, cfg, s) -> bool:
@@ -138,10 +208,10 @@ def _attn_pallas_sharded(q, k, v, packed, plan, local, policy):
             policy.mesh_axes_for("kv_heads", k.shape[1]), None, None)
     ms = P(b_ax, h_ax, None, None)
     if mode == "premask":
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh, in_specs=(qs, kvs, kvs, ms),
             out_specs=qs, check_vma=False)(q, k, v, packed)
-    return jax.shard_map(
+    return shard_map(
         lambda q_, k_, v_: body(q_, k_, v_, None), mesh=mesh,
         in_specs=(qs, kvs, kvs), out_specs=qs,
         check_vma=False)(q, k, v)
@@ -345,7 +415,7 @@ def attention_decode_appended(q, k_cache, v_cache, k_new, v_new, pos,
             k_scale = jnp.ones(k_cache.shape[:3] + (1,), jnp.float32)
             v_scale = k_scale
             # dequant-by-ones keeps one code path; XLA folds it away
-        m, l, num = jax.shard_map(
+        m, l, num = shard_map(
             body, mesh=policy.mesh,
             in_specs=(rep, cache_spec, cache_spec, P(), cache_spec,
                       cache_spec),

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.config.base import ModelConfig, MoEConfig
 from repro.distributed.sharding import ShardingPolicy
 from repro.models.layers import dense_init
@@ -292,7 +293,7 @@ def moe_apply(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
         body = functools.partial(_dispatch_combine_ep_model, moe=moe,
                                  ep_axis=tp, fsdp_axis="data",
                                  dp_axes=dp)
-        y2d, aux = jax.shard_map(
+        y2d, aux = shard_map(
             body, mesh=mesh,
             in_specs=(tok_spec, P(None, None), P(tp, "data", None),
                       P(tp, "data", None), P(tp, None, "data")),
@@ -311,7 +312,7 @@ def moe_apply(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
         tok_spec = P(dp + (tp,), None)
         body = functools.partial(_dispatch_combine_dedup, moe=moe,
                                  ep_axis=ep, tp_axis=tp, dp_axes=dp)
-        y2d, aux = jax.shard_map(
+        y2d, aux = shard_map(
             body, mesh=mesh,
             in_specs=(tok_spec, P(None, None), ew_spec, ew_spec,
                       ew2_spec),
@@ -325,7 +326,7 @@ def moe_apply(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
     tok_spec = P(dp if len(dp) > 1 else (dp[0] if dp else None), None)
     body = functools.partial(_dispatch_combine, moe=moe, ep_axis=ep,
                              tp_axis=tp, dp_axes=dp)
-    y2d, aux = jax.shard_map(
+    y2d, aux = shard_map(
         body, mesh=mesh,
         in_specs=(tok_spec, P(None, None), ew_spec, ew_spec, ew2_spec),
         out_specs=(tok_spec, P()),

@@ -14,6 +14,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.config.base import AttentionKind, FFNKind, ModelConfig
 from repro.core.overlap import DropoutPlan
 from repro.distributed.sharding import ShardingPolicy, constrain
@@ -155,16 +156,21 @@ def model_init(key, cfg: ModelConfig) -> Dict[str, Any]:
 # block forward
 # --------------------------------------------------------------------------
 
-def _mix_forward(p, x, cfg, rt: Runtime, kind, layer_idx):
+def _mix_forward(p, x, cfg, rt: Runtime, kind, layer_idx,
+                 mask_in=None, emit_next=False):
+    """Returns (y, mask_next). mask_next threads the prev_gemm pipeline;
+    it is None unless ``emit_next`` (site="prev_gemm" carried buffer)."""
     if kind in (AttentionKind.FULL, AttentionKind.LOCAL):
-        return attn_apply(p, x, cfg, kind=kind, plan=rt.plan,
-                          layer_idx=layer_idx, step=rt.step,
-                          chunk_q=rt.chunk_q,
-                          probs_dtype=rt.probs_dtype or jnp.float32,
-                          impl=rt.attn_impl, policy=rt.policy)
+        y = attn_apply(p, x, cfg, kind=kind, plan=rt.plan,
+                       layer_idx=layer_idx, step=rt.step,
+                       chunk_q=rt.chunk_q,
+                       probs_dtype=rt.probs_dtype or jnp.float32,
+                       impl=rt.attn_impl, policy=rt.policy,
+                       mask_in=mask_in, emit_next=emit_next)
+        return y if emit_next else (y, None)
     if kind == AttentionKind.RECURRENT:
-        return rglru_apply(p, x, cfg)
-    return rwkv_apply(p, x, cfg)
+        return rglru_apply(p, x, cfg), None
+    return rwkv_apply(p, x, cfg), None
 
 
 def _ffn_forward(p, x, cfg, rt: Runtime, tag):
@@ -183,13 +189,18 @@ def _ffn_forward(p, x, cfg, rt: Runtime, tag):
     return ffn_apply(p["ffn"], x, cfg, shifted=shifted), jnp.float32(0.0)
 
 
-def block_apply(p, x, cfg, rt: Runtime, kind, tag, layer_idx):
+def block_apply(p, x, cfg, rt: Runtime, kind, tag, layer_idx,
+                mask_in=None, emit_next=False):
+    """Returns (x, aux, mask_next); mask_next carries the prev_gemm
+    pipeline buffer (None when the plan doesn't pipeline masks)."""
     x = constrain(x, "batch", "seq", "embed")
     h = norm_apply(p["norm_mix"], x, cfg)
-    x = x + _mix_forward(p["mix"], h, cfg, rt, kind, layer_idx)
+    y, mask_next = _mix_forward(p["mix"], h, cfg, rt, kind, layer_idx,
+                                mask_in=mask_in, emit_next=emit_next)
+    x = x + y
     h2 = norm_apply(p["norm_ffn"], x, cfg)
     f, aux = _ffn_forward(p, h2, cfg, rt, tag)
-    return x + f, aux
+    return x + f, aux, mask_next
 
 
 # --------------------------------------------------------------------------
@@ -213,37 +224,82 @@ def unembed(params, cfg: ModelConfig, x):
     return constrain(logits, "batch", None, "vocab")
 
 
+def _wants_carried_mask(cfg: ModelConfig, rt: Runtime) -> bool:
+    """The prev_gemm pipeline threads one (B, H, S//32, S) buffer through
+    the layer scan — which requires every scanned layer to be an
+    attention layer (uniform shapes + every layer both consumes and
+    produces a mask). Mixed patterns degrade to per-layer generation
+    inside attn_apply (same bits, no cross-layer carry)."""
+    plan = rt.plan
+    if plan is None or not plan.carried:
+        return False
+    return all(k in (AttentionKind.FULL, AttentionKind.LOCAL)
+               for k in cfg.layer_kinds())
+
+
 def forward(params, cfg: ModelConfig, rt: Runtime, inputs
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Training/eval forward. inputs: tokens (B,S) or embeds (B,S,D).
-    Returns (logits f32 (B,S,V), aux_loss)."""
+    Returns (logits f32 (B,S,V), aux_loss).
+
+    With site="prev_gemm" the scan carry additionally threads the packed
+    mask buffer: layer l+1's attention mask is generated under layer l's
+    out-proj GEMM (paper's "previous GEMM layers" site). Layer 0 has no
+    producer GEMM before it, so its mask bootstraps from the standalone
+    producer — the cross-layer analogue of the Region-3 remainder."""
     x = embed_inputs(params, cfg, inputs, rt)
     aux_total = jnp.float32(0.0)
+    carry_mask = _wants_carried_mask(cfg, rt)
+    mask_buf = None
+    if carry_mask:
+        from repro.core import producer
+        b, s = x.shape[0], x.shape[1]
+        mask_buf = producer.standalone_packed_mask(
+            rt.plan, b, cfg.n_heads, s, s, 0, rt.step,
+            use_kernel=(rt.attn_impl == "pallas" and rt.policy is None))
     for spec, stack_params in zip(build_stacks(cfg), params["stacks"]):
         unit_len = len(spec.unit)
 
-        def unit_apply(x, up, pos, _spec=spec, _ul=unit_len):
+        def unit_apply(x, mask, up, pos, _spec=spec, _ul=unit_len):
             aux = jnp.float32(0.0)
             for j, (kind, tag) in enumerate(_spec.unit):
                 lidx = _spec.base + pos * _ul + j
-                x, a = block_apply(up[f"l{j}"], x, cfg, rt, kind, tag, lidx)
+                x, a, mask = block_apply(up[f"l{j}"], x, cfg, rt, kind,
+                                         tag, lidx, mask_in=mask,
+                                         emit_next=carry_mask)
                 aux = aux + a
-            return x, aux
+            return x, aux, mask
 
         if rt.remat == "block":
             unit_apply = jax.checkpoint(
                 unit_apply,
                 policy=jax.checkpoint_policies.nothing_saveable)
 
-        def body(carry, xs, _ua=unit_apply):
-            xc, aux = carry
-            up, pos = xs
-            xn, a = _ua(xc, up, pos)
-            return (xn, aux + a), None
+        if carry_mask:
+            def body(carry, xs, _ua=unit_apply):
+                xc, aux, mask = carry
+                up, pos = xs
+                xn, a, mask = _ua(xc, mask, up, pos)
+                return (xn, aux + a, mask), None
 
-        (x, aux_total), _ = jax.lax.scan(
-            body, (x, aux_total),
-            (stack_params, jnp.arange(spec.count)))
+            (x, aux_total, mask_buf), _ = jax.lax.scan(
+                body, (x, aux_total, mask_buf),
+                (stack_params, jnp.arange(spec.count)))
+        else:
+            def body(carry, xs, _ua=unit_apply):
+                xc, aux = carry
+                up, pos = xs
+                xn, a, _ = _ua(xc, None, up, pos)
+                return (xn, aux + a), None
+
+            (x, aux_total), _ = jax.lax.scan(
+                body, (x, aux_total),
+                (stack_params, jnp.arange(spec.count)))
+    # the last layer's emitted mask (salt = n_layers) has no consumer —
+    # dropped here. The scan compiles ONE body for all iterations, so
+    # that final generation cannot be peeled away: prev_gemm mode pays
+    # one extra B*H*(S/32)*S mask per forward (hidden under the GEMM
+    # when fused; cheap but real in the XLA path).
     x = norm_apply(params["final_norm"], x, cfg)
     return unembed(params, cfg, x), aux_total
 
@@ -360,7 +416,7 @@ def _token_column_write(cache_arr, tok, slot, policy, cfg):
         val = jnp.where(hit, t.astype(c.dtype), cur)
         return jax.lax.dynamic_update_slice_in_dim(c, val, loc, axis=3)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=(cache_spec, tok_spec, P()),
         out_specs=cache_spec, check_vma=False,
     )(cache_arr, tok, slot.astype(jnp.int32))

@@ -7,6 +7,7 @@ from repro.optim.adamw import (
 )
 from repro.optim.compression import (
     compress_tree,
+    compressed_allreduce,
     compressed_psum,
     dequantize_int8,
     quantize_int8,
@@ -20,6 +21,7 @@ __all__ = [
     "global_norm",
     "schedule_lr",
     "compress_tree",
+    "compressed_allreduce",
     "compressed_psum",
     "dequantize_int8",
     "quantize_int8",

@@ -17,6 +17,9 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -52,6 +55,27 @@ def compressed_psum(x: jnp.ndarray, axis_name, residual: jnp.ndarray
     # each shard used its own scale; approximate with the mean scale
     out = summed.astype(jnp.float32) * (scale_sum / n) / n
     return out.astype(x.dtype), new_res
+
+
+def compressed_allreduce(stacked: jnp.ndarray, residual: jnp.ndarray,
+                         mesh, axis_name: str
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Explicit-collective form of the compressed DP gradient all-reduce.
+
+    ``stacked`` / ``residual`` carry one leading slot per rank on
+    ``axis_name`` (shape (n_ranks, ...)); each rank quantizes its slot,
+    the int8 payload is psum'd, and every rank gets the mean-reduced
+    gradient back plus its own updated error-feedback residual.
+    """
+    spec = P(axis_name)
+
+    def body(xs, rs):
+        out, new_r = compressed_psum(xs[0], axis_name, rs[0])
+        return out[None], new_r[None]
+
+    return shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                     out_specs=(spec, spec), check_vma=False
+                     )(stacked, residual)
 
 
 def residual_init(grads_like) -> Any:

@@ -44,11 +44,32 @@ def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
     return jnp.mean(lse - picked)
 
 
+_DROPOUT_SITES = ("xla", "qkv", "prev_gemm")
+
+
+def _validate_dropout_plan(run: RunConfig) -> None:
+    """The producer-site knob only makes sense for decoupled RNG: fused
+    mode generates bits inside attention, so there is no producer GEMM to
+    host them. Catch the bad combo at step-build time, not mid-scan."""
+    d = run.dropout
+    if d.site not in _DROPOUT_SITES:
+        raise ValueError(
+            f"DropoutPlanConfig.site={d.site!r}; expected one of "
+            f"{_DROPOUT_SITES}")
+    if d.site != "xla" and d.mode == "fused":
+        raise ValueError(
+            f"site={d.site!r} requires mode='overlap' (fused mode has no "
+            "producer-GEMM site)")
+
+
 def make_train_step(cfg: ModelConfig, run: RunConfig,
                     policy: Optional[ShardingPolicy] = None,
                     compute_dtype=jnp.float32) -> Callable:
     """Returns train_step(state, x, y) -> (state, metrics). Pure function
-    of its inputs — jit/lower it with explicit shardings."""
+    of its inputs — jit/lower it with explicit shardings. The dropout
+    plan's producer site ("xla" | "qkv" | "prev_gemm") threads through
+    Runtime.plan into the model (see core/producer.py)."""
+    _validate_dropout_plan(run)
     plan = plan_from_config(run.dropout)
     remat = run.sharding.remat
     micro = run.train.microbatch

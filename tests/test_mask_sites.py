@@ -1,0 +1,217 @@
+"""Producer-site RNG scheduler: the three sites ("xla" | "qkv" |
+"prev_gemm") must emit bit-identical packed masks for the same
+(seed, salt, layer, step), the fused-QKV model path must physically
+produce its mask via gemm_with_rng, and the Region-3 fallback must hand
+the remainder to the standalone kernel without changing a bit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import (
+    AttentionKind,
+    DropoutPlanConfig,
+    ModelConfig,
+)
+from repro.core import dropout_rng, producer
+from repro.core.overlap import plan_from_config
+from repro.kernels.ref import philox_mask_ref
+from repro.models.attention import attn_apply, attn_init
+from repro.models.transformer import Runtime, forward, model_init
+
+_P = 0.25
+_SEED = 5
+
+
+def _plan(site, **kw):
+    return plan_from_config(DropoutPlanConfig(
+        mode="overlap", p=_P, seed=_SEED, site=site, **kw))
+
+
+def _small_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64,
+                n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=64,
+                head_dim=32, block_pattern=(AttentionKind.FULL,),
+                attn_dropout=_P)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("site", ["xla", "qkv", "prev_gemm"])
+def test_sites_bit_identical(rng_key, site):
+    """Same (seed, salt, layer, step) -> same bits, wherever produced."""
+    plan = _plan(site)
+    b, h, s = 2, 2, 128
+    layer, step = 3, 7
+    want = philox_mask_ref(
+        b, h, s, s, _P, int(plan.step_seed(step)), int(plan.salt(layer)))
+    if site == "xla":
+        got = plan.precompute_mask(b, h, s, s, layer, step)
+    elif site == "qkv":
+        x2d = jax.random.normal(rng_key, (b * s, 64), jnp.float32)
+        w = jax.random.normal(rng_key, (64, 6 * 32), jnp.float32)
+        _, got, how = producer.gemm_with_mask(
+            x2d, w, plan, (b, h, s, s), layer, step)
+        assert how == producer.HOW_GEMM
+    else:
+        # prev_gemm: the mask rides under the PREVIOUS layer's out-proj
+        out2d = jax.random.normal(rng_key, (b * s, 64), jnp.float32)
+        w_o = jax.random.normal(rng_key, (64, 64), jnp.float32)
+        _, got, _ = producer.gemm_with_mask(
+            out2d, w_o, plan, (b, h, s, s), layer, step)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_attn_apply_pallas_mask_via_gemm_rng(rng_key, monkeypatch):
+    """attn_apply(impl="pallas", site="qkv") must route its packed mask
+    through the fused gemm_with_rng kernel — verified by intercepting the
+    ops-layer entry point and checking the captured bits."""
+    from repro.kernels import ops
+    cfg = _small_cfg()
+    p = attn_init(rng_key, cfg)
+    b, s = 1, 128
+    x = jax.random.normal(rng_key, (b, s, cfg.d_model), jnp.float32)
+    plan = _plan("qkv")
+
+    calls = {}
+    real = ops.fused_qkv_gemm_rng
+
+    def spy(*a, **kw):
+        out, mask = real(*a, **kw)
+        calls["mask"] = mask
+        return out, mask
+
+    monkeypatch.setattr(ops, "fused_qkv_gemm_rng", spy)
+    out = attn_apply(p, x, cfg, kind=AttentionKind.FULL, plan=plan,
+                     layer_idx=0, step=0, impl="pallas")
+    assert out.shape == (b, s, cfg.d_model)
+    assert "mask" in calls and calls["mask"] is not None, \
+        "fused QKV path did not produce its mask under the GEMM"
+    want = philox_mask_ref(b, cfg.n_heads, s, s, _P, _SEED, 0)
+    np.testing.assert_array_equal(np.asarray(calls["mask"]),
+                                  np.asarray(want))
+
+
+def test_region3_fallback_bits(rng_key):
+    """A GEMM too small to host the RNG (paper Region 3) must fall back
+    to the standalone philox kernel — same bits, different producer."""
+    plan = _plan("qkv")
+    b, h, sq, sk = 1, 16, 1024, 128
+    x2d = jax.random.normal(rng_key, (64, 64), jnp.float32)
+    w = jax.random.normal(rng_key, (64, 64), jnp.float32)
+    y, mask, how = producer.gemm_with_mask(
+        x2d, w, plan, (b, h, sq, sk), 2, 9)
+    assert how == producer.HOW_STANDALONE
+    want = philox_mask_ref(
+        b, h, sq, sk, _P, int(plan.step_seed(9)), int(plan.salt(2)))
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(want))
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x2d @ w), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("remat", ["none", "block"])
+def test_forward_prev_gemm_pipeline_matches_xla_site(rng_key, remat):
+    """End-to-end: the carried-buffer pipeline (layer l+1's mask under
+    layer l's out-proj) must reproduce the per-layer XLA site exactly —
+    identical masks -> identical logits."""
+    cfg = _small_cfg(n_layers=3)
+    params = model_init(rng_key, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 64), 0,
+                                cfg.vocab_size)
+
+    def run(site):
+        rt = Runtime(plan=_plan(site), step=4, remat=remat)
+        logits, _ = jax.jit(
+            lambda pr, t: forward(pr, cfg, rt, t))(params, tokens)
+        return logits
+
+    np.testing.assert_array_equal(np.asarray(run("xla")),
+                                  np.asarray(run("prev_gemm")))
+
+
+def test_forward_qkv_site_pallas_runs(rng_key):
+    """Whole-model forward with the physically-fused QKV site."""
+    cfg = _small_cfg(n_layers=2)
+    params = model_init(rng_key, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (1, 128), 0,
+                                cfg.vocab_size)
+    rt = Runtime(plan=_plan("qkv"), step=0, attn_impl="pallas")
+    logits, _ = forward(params, cfg, rt, tokens)
+    assert logits.shape == (1, 128, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_mixed_pattern_prev_gemm_degrades(rng_key):
+    """A non-uniform block pattern cannot carry the buffer; prev_gemm
+    degrades to per-layer generation with the SAME bits."""
+    cfg = _small_cfg(
+        n_layers=2, local_window=32,
+        block_pattern=(AttentionKind.RECURRENT, AttentionKind.FULL))
+    params = model_init(rng_key, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 64), 0,
+                                cfg.vocab_size)
+
+    def run(site):
+        rt = Runtime(plan=_plan(site), step=1)
+        logits, _ = forward(params, cfg, rt, tokens)
+        return logits
+
+    np.testing.assert_array_equal(np.asarray(run("xla")),
+                                  np.asarray(run("prev_gemm")))
+
+
+@pytest.mark.parametrize("site,impl", [("qkv", "pallas"),
+                                       ("prev_gemm", "pallas")])
+def test_train_step_grads_through_fused_sites(rng_key, site, impl):
+    """Gradients must flow through the fused producer GEMMs (custom_vjp:
+    dgrad pair; the integer mask carries a float0 cotangent) — and the
+    loss must match the XLA site, which uses the same bits."""
+    from repro.config.base import (OptimizerConfig, RunConfig,
+                                   ShapeConfig, ShardingConfig, StepKind,
+                                   TrainConfig)
+    from repro.train.loop import init_train_state, make_train_step
+    cfg = _small_cfg()
+    shape = ShapeConfig("t", 128, 1, StepKind.TRAIN)
+    x = jax.random.randint(jax.random.PRNGKey(1), (1, 128), 0,
+                           cfg.vocab_size)
+    y = jax.random.randint(jax.random.PRNGKey(2), (1, 128), 0,
+                           cfg.vocab_size)
+
+    def one_step(site_, impl_):
+        run = RunConfig(
+            model=cfg, shape=shape,
+            dropout=DropoutPlanConfig(mode="overlap", p=_P, seed=_SEED,
+                                      site=site_),
+            sharding=ShardingConfig(remat="block", attn_impl=impl_),
+            train=TrainConfig(optimizer=OptimizerConfig()))
+        state = init_train_state(jax.random.PRNGKey(0), cfg)
+        state, m = jax.jit(make_train_step(cfg, run))(state, x, y)
+        return float(m["loss"]), state
+
+    loss_ref, _ = one_step("xla", "xla")
+    loss, state = one_step(site, impl)
+    # same mask bits; only the Pallas GEMM accumulation order differs
+    assert abs(loss - loss_ref) < 1e-4, (loss, loss_ref)
+    leaves = jax.tree_util.tree_leaves(state["master"])
+    assert all(bool(jnp.isfinite(l).all()) for l in leaves)
+
+
+def test_site_validation():
+    from repro.config.base import ShapeConfig, StepKind
+    from repro.config.base import RunConfig
+    from repro.train.loop import _validate_dropout_plan
+    cfg = _small_cfg()
+    shape = ShapeConfig("t", 64, 2, StepKind.TRAIN)
+    ok = RunConfig(model=cfg, shape=shape,
+                   dropout=DropoutPlanConfig(mode="overlap", site="qkv"))
+    _validate_dropout_plan(ok)
+    bad_site = RunConfig(model=cfg, shape=shape,
+                         dropout=DropoutPlanConfig(mode="overlap",
+                                                   site="nope"))
+    with pytest.raises(ValueError):
+        _validate_dropout_plan(bad_site)
+    bad_mode = RunConfig(model=cfg, shape=shape,
+                         dropout=DropoutPlanConfig(mode="fused",
+                                                   site="qkv"))
+    with pytest.raises(ValueError):
+        _validate_dropout_plan(bad_mode)
