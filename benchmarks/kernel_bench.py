@@ -77,56 +77,146 @@ def bench_gemm_rng() -> List[Row]:
     ]
 
 
-def bench_mask_sites() -> List[Row]:
-    """Producer-site ablation: the same packed mask generated at each of
-    the three scheduler sites ("xla" | "qkv" | "prev_gemm"), through the
-    real producer entry points. Also asserts the load-bearing invariant:
-    every site emits bit-identical bits."""
-    import numpy as np
+def _mask_site_cases(plan, B, H, S, D, FF):
+    """(site -> zero-arg callable) producing (y, mask, how) at each
+    producer site through the real entry points. The FFN sites host the
+    NEXT layer's mask under the block's largest GEMMs."""
+    from repro.core import producer
 
-    from repro.config.base import DropoutPlanConfig
-    from repro.core import dropout_rng, producer
-    from repro.core.overlap import plan_from_config
-
-    B, H, S, D = 1, 4, 256, 512
-    plan = plan_from_config(
-        DropoutPlanConfig(mode="overlap", p=0.1, seed=0))
     key = jax.random.PRNGKey(3)
     x2d = jax.random.normal(key, (B * S, D), jnp.float32)      # qkv GEMM
     w_qkv = jax.random.normal(key, (D, 3 * D), jnp.float32)
     out2d = jax.random.normal(key, (B * S, D), jnp.float32)    # out-proj
     w_o = jax.random.normal(key, (D, D), jnp.float32)
+    w_up = jax.random.normal(key, (D, 2 * FF), jnp.float32)    # gate+up
+    h2d = jax.random.normal(key, (B * S, FF), jnp.float32)
+    w_down = jax.random.normal(key, (FF, D), jnp.float32)
     layer, step = 1, 0
 
     def site_xla():
-        return plan.precompute_mask(B, H, S, S, layer, step)
+        return (None, plan.precompute_mask(B, H, S, S, layer, step),
+                "xla")
 
-    def site_qkv():
-        return producer.gemm_with_mask(
-            x2d, w_qkv, plan, (B, H, S, S), layer, step)
+    def make(a, w):
+        return lambda: producer.gemm_with_mask(
+            a, w, plan, (B, H, S, S), layer, step)
 
-    def site_prev():
-        return producer.gemm_with_mask(
-            out2d, w_o, plan, (B, H, S, S), layer, step)
+    return {
+        "xla": site_xla,
+        "qkv": make(x2d, w_qkv),
+        "prev_gemm": make(out2d, w_o),
+        "ffn_up": make(x2d, w_up),
+        "ffn_down": make(h2d, w_down),
+    }
 
-    m_xla = site_xla()
-    _, m_qkv, how_qkv = site_qkv()
-    _, m_prev, how_prev = site_prev()
-    np.testing.assert_array_equal(np.asarray(m_xla), np.asarray(m_qkv))
-    np.testing.assert_array_equal(np.asarray(m_xla), np.asarray(m_prev))
 
-    t_xla = _t(site_xla)
-    t_qkv = _t(site_qkv)
-    t_prev = _t(site_prev)
-    return [
-        ("site/xla", t_xla, "mask only (XLA producer)"),
-        ("site/qkv", t_qkv,
-         f"gemm+mask, how={how_qkv} (interpret; on TPU the RNG hides in "
-         "the MXU shadow)"),
-        ("site/prev_gemm", t_prev,
-         f"out-proj gemm+mask for layer l+1, how={how_prev}; "
-         "bits identical across all three sites"),
-    ]
+def bench_mask_sites() -> List[Row]:
+    """Producer-site ablation: the same packed mask generated at each of
+    the five scheduler sites ("xla" | "qkv" | "prev_gemm" | "ffn_up" |
+    "ffn_down"), through the real producer entry points. Also asserts
+    the load-bearing invariant: every site emits bit-identical bits."""
+    import numpy as np
+
+    from repro.config.base import DropoutPlanConfig
+    from repro.core.overlap import plan_from_config
+
+    B, H, S, D, FF = 1, 4, 256, 512, 1024
+    plan = plan_from_config(
+        DropoutPlanConfig(mode="overlap", p=0.1, seed=0))
+    cases = _mask_site_cases(plan, B, H, S, D, FF)
+
+    results = {s: fn() for s, fn in cases.items()}  # (y, mask, how)
+    for site, (_, m, _) in results.items():
+        np.testing.assert_array_equal(np.asarray(results["xla"][1]),
+                                      np.asarray(m))
+
+    rows = []
+    notes = {
+        "xla": "mask only (XLA producer)",
+        "qkv": "gemm+mask (interpret; on TPU the RNG hides in the MXU "
+               "shadow)",
+        "prev_gemm": "out-proj gemm+mask for layer l+1",
+        "ffn_up": "gate+up gemm+mask for layer l+1 (largest block GEMM)",
+        "ffn_down": "down-proj gemm+mask for layer l+1; bits identical "
+                    "across all five sites",
+    }
+    for site, fn in cases.items():
+        rows.append((f"site/{site}", _t(fn),
+                     f"how={results[site][2]}; {notes[site]}"))
+    return rows
+
+
+def bench_gemm_dtypes() -> List[Row]:
+    """Per-dtype fused GEMM+RNG host (f32 | bf16 | fp8 per-tile-scaled):
+    interpret-mode op-count trend + the fp8 error against the f32 GEMM."""
+    import numpy as np
+
+    from repro.kernels import quant
+    from repro.kernels.gemm_rng import gemm_with_rng, gemm_with_rng_fp8
+
+    M = K = N = 512
+    B, H, S = 1, 4, 256
+    key = jax.random.PRNGKey(5)
+    a = jax.random.normal(key, (M, K), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(6), (K, N), jnp.float32)
+    kw = dict(mask_batch=B, mask_heads=H, mask_sq=S, mask_sk=S, p=0.1,
+              seed=0, block_m=256, block_n=256, block_k=256,
+              mask_block_cols=256)
+
+    rows = [("gemm_dtype/f32", _t(lambda: gemm_with_rng(a, b, **kw)), "")]
+    ab, bb = a.astype(jnp.bfloat16), b.astype(jnp.bfloat16)
+    rows.append(("gemm_dtype/bf16",
+                 _t(lambda: gemm_with_rng(ab, bb, **kw)), ""))
+    if quant.have_fp8():
+        c8, m8 = gemm_with_rng_fp8(a, b, **kw)
+        c32, m32 = gemm_with_rng(a, b, **kw)
+        np.testing.assert_array_equal(np.asarray(m8), np.asarray(m32))
+        rel = float(jnp.linalg.norm(c8 - c32) / jnp.linalg.norm(c32))
+        rows.append(("gemm_dtype/fp8",
+                     _t(lambda: gemm_with_rng_fp8(a, b, **kw)),
+                     f"per-tile e4m3; rel_err_vs_f32={rel:.4f} "
+                     f"(bound {quant.quantize_error_bound():.2f}); "
+                     "mask bits identical"))
+    else:
+        rows.append(("gemm_dtype/fp8", 0.0,
+                     "SKIPPED: no float8_e4m3fn in this JAX build"))
+    return rows
+
+
+def block_json_records() -> list:
+    """Machine-readable per-site / per-dtype block records for
+    ``benchmarks/run.py --json`` (BENCH_block.json): the mask-site bench
+    across all five producer sites and the fused-GEMM host across
+    gemm_dtype in {f32, bf16, fp8}, so the perf trajectory is tracked
+    across PRs."""
+    from repro.config.base import DropoutPlanConfig
+    from repro.core.overlap import plan_from_config
+    from repro.kernels import quant
+
+    B, H, S, D, FF = 1, 4, 256, 512, 1024
+    records = []
+    plan = plan_from_config(
+        DropoutPlanConfig(mode="overlap", p=0.1, seed=0))
+    for site, fn in _mask_site_cases(plan, B, H, S, D, FF).items():
+        how = fn()[2]
+        records.append({
+            "group": "mask_site", "site": site, "dtype": "f32",
+            "how": how, "us_per_call": round(_t(fn), 1),
+            "shape": {"batch": B, "heads": H, "seq": S, "d_model": D,
+                      "d_ff": FF},
+        })
+    for name, us, derived in bench_gemm_dtypes():
+        dtype = name.split("/")[1]
+        rec = {"group": "gemm_dtype", "site": "qkv", "dtype": dtype,
+               "how": "gemm_rng", "us_per_call": round(us, 1),
+               "shape": {"m": 512, "n": 512, "k": 512}}
+        if dtype == "fp8" and "rel_err_vs_f32=" in derived:
+            rec["fp8_rel_err_vs_f32"] = float(
+                derived.split("rel_err_vs_f32=")[1].split(" ")[0])
+        if not quant.have_fp8() and dtype == "fp8":
+            rec["skipped"] = "no float8_e4m3fn"
+        records.append(rec)
+    return records
 
 
 def bench_wkv() -> List[Row]:

@@ -4,6 +4,13 @@ microbenches and the dry-run roofline table.
 Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--only substring]
+
+``--json PATH`` (canonically BENCH_block.json) instead emits the
+machine-readable per-site / per-dtype transformer-block record (mask-site
+bench across all five producer sites + fp8-vs-bf16 fused GEMM host) so
+the perf trajectory is tracked across PRs:
+
+    PYTHONPATH=src python -m benchmarks.run --json BENCH_block.json
 """
 from __future__ import annotations
 
@@ -53,17 +60,46 @@ def all_benches():
         ("tpu", paper_figures.bench_tpu_adaptation),
         ("kernel_attn", kernel_bench.bench_attention_modes),
         ("kernel_gemm_rng", kernel_bench.bench_gemm_rng),
+        ("kernel_gemm_dtypes", kernel_bench.bench_gemm_dtypes),
         ("kernel_mask_sites", kernel_bench.bench_mask_sites),
         ("kernel_wkv", kernel_bench.bench_wkv),
         ("roofline", bench_roofline_table),
     ]
 
 
+def write_block_json(path: str) -> None:
+    """Emit BENCH_block.json: per-site / per-dtype block timings."""
+    import platform
+
+    import jax
+
+    from benchmarks import kernel_bench
+    payload = {
+        "schema": "bench_block/v1",
+        "backend": jax.devices()[0].platform,
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "note": ("interpret-mode op-count trends on CPU; TPU wall time "
+                 "comes from the perf model / dry-run roofline"),
+        "records": kernel_bench.block_json_records(),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(payload['records'])} records to {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run only benches whose group matches")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the per-site/per-dtype block record "
+                         "(BENCH_block.json) and exit")
     args = ap.parse_args()
+    if args.json:
+        write_block_json(args.json)
+        return
     print("name,us_per_call,derived")
     for group, fn in all_benches():
         if args.only and args.only not in group:

@@ -13,9 +13,10 @@ The plan decides *where* attention-dropout RNG runs:
   mode "none"    — dropout disabled (inference / ablation).
 
 In overlap mode ``cfg.site`` selects WHICH producer GEMM hosts the RNG
-("xla" | "qkv" | "prev_gemm" — see DropoutPlanConfig); the scheduling
-logic lives in core/producer.py. The load-bearing invariant: every site
-emits bit-identical packed masks for the same (seed, salt, layer, step).
+("xla" | "qkv" | "prev_gemm" | "ffn_up" | "ffn_down" | "auto" — see
+DropoutPlanConfig); the scheduling logic lives in core/producer.py. The
+load-bearing invariant: every site emits bit-identical packed masks for
+the same (seed, salt, layer, step), whatever dtype the host GEMM runs in.
 
 Seeds fold (train_step, layer) into the Philox counters, so masks are
 deterministic for checkpoint-restart reproducibility and remat-safe.
@@ -28,7 +29,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.base import DropoutPlanConfig
+from repro.config.base import CARRIED_DROPOUT_SITES, DropoutPlanConfig
 from repro.core import dropout_rng
 
 # distinct salt streams so attention masks never collide with residual /
@@ -59,10 +60,17 @@ class DropoutPlan:
 
     @property
     def carried(self) -> bool:
-        """True when masks pipeline across layers (site="prev_gemm"):
-        the transformer scan threads a carried mask buffer."""
+        """True when masks pipeline across layers (site="prev_gemm" /
+        "ffn_up" / "ffn_down"): the transformer scan threads a carried
+        mask buffer — layer l+1's mask rides under one of layer l's
+        post-attention GEMMs."""
         return (self.enabled and self.overlapped
-                and self.site == "prev_gemm")
+                and self.site in CARRIED_DROPOUT_SITES)
+
+    @property
+    def gemm_dtype(self) -> str:
+        """Operand dtype of the fused producer GEMM hosting the RNG."""
+        return getattr(self.cfg, "gemm_dtype", "f32")
 
     def salt(self, layer_idx, stream: int = SALT_ATTN):
         """uint32 salt for (layer, stream). layer_idx may be traced (scan

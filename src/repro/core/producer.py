@@ -2,13 +2,16 @@
 mask is physically generated, and runs the producer GEMM when the site is
 kernel-fused.
 
-The paper hides dropout RNG under producer GEMMs (QKV projection, or the
-previous layer's GEMMs). This module is the single place that scheduling
-decision lives: the model passes it a producer GEMM plus the mask shape,
-and gets back the GEMM result, the packed mask, and a static tag saying
-where the bits actually came from:
+The paper hides dropout RNG under producer GEMMs (QKV projection, the
+previous layer's out-projection, or — in the regime the paper actually
+benchmarks — the FFN up/down projections, the largest GEMMs in the block).
+This module is the single place that scheduling decision lives: the model
+passes it a producer GEMM plus the mask shape, and gets back the GEMM
+result, the packed mask, and a static tag saying where the bits actually
+came from:
 
-  "gemm_rng"   — inside the fused GEMM+RNG Pallas kernel (MXU ∥ VPU)
+  "gemm_rng"   — inside the fused GEMM+RNG Pallas kernel (MXU ∥ VPU),
+                 f32/bf16 operands or the per-tile-scaled fp8(e4m3) path
   "standalone" — the standalone philox Pallas kernel (paper Region 3:
                  the GEMM could not host the RNG, the remainder runs
                  exposed — but still producer-side, before attention)
@@ -17,16 +20,30 @@ where the bits actually came from:
 
 Every producer is bit-identical for the same (seed, salt, layer, step) —
 the invariant the sites ablation and checkpoint-restart reproducibility
-rest on. Sharded fused projections (running the fused kernel inside
-shard_map) are a ROADMAP follow-on; with a sharding policy installed the
-scheduler currently degrades to the XLA producer.
+rest on — and the bits never depend on the host GEMM's dtype. Sharded
+fused projections (running the fused kernel inside shard_map) are a
+ROADMAP follow-on; with a sharding policy installed the scheduler
+currently degrades to the XLA producer.
+
+Scheduling decisions are static (they resolve at trace time), so they are
+recorded into a trace-event log (``drain_trace_events``) that the train
+loop surfaces — a silent Region-3 or philox_bits=8 fallback at a fused
+call site is a host-selection regression someone should see.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro.config.base import (
+    CARRIED_DROPOUT_SITES,
+    DROPOUT_SITES,
+    GEMM_DTYPES,
+    FFNKind,
+    ModelConfig,
+)
 from repro.core import dropout_rng
 from repro.core.overlap import DropoutPlan
 
@@ -38,7 +55,39 @@ HOW_XLA = "xla"
 _BLOCK_M_CAP = 256
 _BLOCK_N_CAP = 256
 _BLOCK_K_CAP = 512
+# the fused kernels' mask-column block (gemm_rng.py mask_block_cols)
+_MASK_COLS_CAP = 2048
+# the standalone philox kernel's column block
+_PHILOX_COLS_CAP = 512
 
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "fp8": 1}
+
+
+# --------------------------------------------------------------------------
+# trace-event log (static scheduling decisions, surfaced by train/loop.py)
+# --------------------------------------------------------------------------
+
+_TRACE_EVENTS: List[Tuple[str, str, str, str]] = []
+_TRACE_CAP = 256
+
+
+def _record(site: str, how: str, gemm_dtype: str, note: str = "") -> None:
+    if len(_TRACE_EVENTS) < _TRACE_CAP:
+        _TRACE_EVENTS.append((str(site), how, gemm_dtype, note))
+
+
+def drain_trace_events() -> List[Tuple[str, str, str, str]]:
+    """Return and clear the recorded (site, how, gemm_dtype, note)
+    scheduling decisions. Decisions are recorded at trace time — drain
+    after the first (tracing) call of a jit'd step."""
+    events = list(_TRACE_EVENTS)
+    _TRACE_EVENTS.clear()
+    return events
+
+
+# --------------------------------------------------------------------------
+# capability predicate (THE one guard, used by every call site)
+# --------------------------------------------------------------------------
 
 def _largest_divisor(dim: int, cap: int) -> int:
     for c in range(min(cap, dim), 0, -1):
@@ -60,16 +109,33 @@ def pick_gemm_blocks(m: int, n: int, k: int
     return bm, bn, bk
 
 
-def _kernel_capable(plan: DropoutPlan, sq: int, sk: int) -> bool:
-    """The Pallas producers implement the paper-faithful 32-bit Philox
-    scheme only; the beyond-paper 8-bit scheme stays with XLA."""
+def mask_kernel_unsupported_reason(plan: DropoutPlan, sq: int, sk: int,
+                                   fused: bool = True) -> Optional[str]:
+    """Why the Pallas mask producers cannot represent this plan/shape —
+    None when they can. The single predicate behind every call site
+    (qkv, prev_gemm, ffn_up, ffn_down, standalone fallback): the Pallas
+    kernels implement the paper-faithful 32-bit Philox scheme only, need
+    32-packable query rows, and tile the mask columns in 512-column
+    blocks; the GEMM-fused hosts (``fused=True``) additionally partition
+    the mask in 2048-column blocks. The standalone kernel
+    (``fused=False``) has no 2048 constraint."""
     if plan.cfg.philox_bits != 32:
-        return False
+        return f"philox_bits={plan.cfg.philox_bits} (XLA-only scheme)"
     if sq % 32:
-        return False
+        return f"sq={sq} not 32-packable"
     sq32 = sq // 32
-    return (sq32 % min(8, sq32) == 0) and (sk % min(512, sk) == 0)
+    if sq32 % min(8, sq32):
+        return f"sq32={sq32} breaks the packed-row tiling"
+    if sk % min(_PHILOX_COLS_CAP, sk):
+        return f"sk={sk} breaks the {_PHILOX_COLS_CAP}-column tiling"
+    if fused and sk % min(_MASK_COLS_CAP, sk):
+        return f"sk={sk} breaks the {_MASK_COLS_CAP}-column mask blocks"
+    return None
 
+
+# --------------------------------------------------------------------------
+# producers
+# --------------------------------------------------------------------------
 
 def standalone_packed_mask(plan: DropoutPlan, batch: int, n_heads: int,
                            sq: int, sk: int, layer_idx, step,
@@ -77,13 +143,19 @@ def standalone_packed_mask(plan: DropoutPlan, batch: int, n_heads: int,
     """Packed mask from a producer-side standalone generator: the philox
     Pallas kernel when it can represent the plan, else the XLA producer.
     Used for the Region-3 remainder and to bootstrap the first layer of
-    the prev_gemm pipeline (no previous GEMM exists yet)."""
+    the carried-site pipelines (no previous GEMM exists yet)."""
     seed = plan.step_seed(step)
     salt = plan.salt(layer_idx)
-    if use_kernel and _kernel_capable(plan, sq, sk):
+    reason = mask_kernel_unsupported_reason(plan, sq, sk, fused=False)
+    if use_kernel and reason is None:
         from repro.kernels import ops
         return ops.dropout_mask(batch, n_heads, sq, sk, plan.cfg.p,
                                 seed, salt, plan.cfg.philox_rounds)
+    if use_kernel and reason is not None:
+        # a fused call site asked for the kernel and silently lost it —
+        # make that visible (e.g. philox_bits=8 plans, odd shapes)
+        _record(plan.site, HOW_XLA, plan.gemm_dtype,
+                f"standalone fallback: {reason}")
     return dropout_rng.packed_mask(
         batch, n_heads, sq, sk, plan.cfg.p, seed, salt,
         plan.cfg.philox_rounds, plan.cfg.philox_bits)
@@ -97,6 +169,11 @@ def gemm_with_mask(x2d: jnp.ndarray, w2d: jnp.ndarray, plan: DropoutPlan,
     SK) produced at this GEMM. Returns (y2d, mask, how) with ``how`` a
     static tag (see module docstring).
 
+    ``plan.gemm_dtype`` selects the fused GEMM's operand precision:
+    "f32" | "bf16" run the standard fused kernel (f32 accumulation);
+    "fp8" runs the per-tile-scaled e4m3 kernel — same mask bits, GEMM
+    within the documented quantization error bound (kernels/quant.py).
+
     allow_fused=False forces the XLA producer (used when the GEMM itself
     must stay an XLA op: impl="xla", or a sharding policy is installed and
     the fused kernel cannot yet run shard-local).
@@ -104,28 +181,166 @@ def gemm_with_mask(x2d: jnp.ndarray, w2d: jnp.ndarray, plan: DropoutPlan,
     batch, n_heads, sq, sk = mask_shape
     m, kdim = x2d.shape
     n = w2d.shape[1]
+    gemm_dtype = plan.gemm_dtype
     blocks = pick_gemm_blocks(m, n, kdim) if allow_fused else None
-    if (not allow_fused or blocks is None
-            or not _kernel_capable(plan, sq, sk)
-            or sk % min(2048, sk) != 0):
+    reason = mask_kernel_unsupported_reason(plan, sq, sk)
+    fp8_ok = True
+    if gemm_dtype == "fp8":
+        from repro.kernels import quant
+        fp8_ok = quant.have_fp8()
+    if not allow_fused or blocks is None or reason is not None:
         y = x2d @ w2d
         mask = dropout_rng.packed_mask(
             batch, n_heads, sq, sk, plan.cfg.p, plan.step_seed(step),
             plan.salt(layer_idx), plan.cfg.philox_rounds,
             plan.cfg.philox_bits)
+        note = (reason or
+                ("fused disabled at call site" if not allow_fused
+                 else f"GEMM ({m},{n},{kdim}) does not tile"))
+        _record(plan.site, HOW_XLA, gemm_dtype, note)
         return y, mask, HOW_XLA
 
     from repro.kernels import ops
     bm, bn, bk = blocks
-    y, mask = ops.fused_qkv_gemm_rng(
-        x2d, w2d, mask_batch=batch, mask_heads=n_heads, mask_sq=sq,
-        mask_sk=sk, p=plan.cfg.p, seed=plan.step_seed(step),
-        salt=plan.salt(layer_idx), rounds=plan.cfg.philox_rounds,
-        block_m=bm, block_n=bn, block_k=bk)
+    seed = plan.step_seed(step)
+    salt = plan.salt(layer_idx)
+    if gemm_dtype == "fp8" and fp8_ok:
+        y, mask = ops.fused_gemm_rng_fp8(
+            x2d, w2d, mask_batch=batch, mask_heads=n_heads, mask_sq=sq,
+            mask_sk=sk, p=plan.cfg.p, seed=seed, salt=salt,
+            rounds=plan.cfg.philox_rounds, block_m=bm, block_n=bn,
+            block_k=bk)
+    else:
+        if gemm_dtype == "fp8":  # dtype requested but unavailable: gate
+            gemm_dtype = "f32"   # record what actually hosted the GEMM
+            _record(plan.site, HOW_GEMM, gemm_dtype,
+                    "fp8 unavailable in this JAX build; f32 host")
+        a = x2d.astype(jnp.bfloat16) if gemm_dtype == "bf16" else x2d
+        w = w2d.astype(jnp.bfloat16) if gemm_dtype == "bf16" else w2d
+        y, mask = ops.fused_qkv_gemm_rng(
+            a, w, mask_batch=batch, mask_heads=n_heads, mask_sq=sq,
+            mask_sk=sk, p=plan.cfg.p, seed=seed,
+            salt=salt, rounds=plan.cfg.philox_rounds,
+            block_m=bm, block_n=bn, block_k=bk)
+        if gemm_dtype == "bf16":
+            y = y.astype(x2d.dtype)
     if mask is None:
         # Region 3: the GEMM grid is too small to hide this much RNG;
         # the remainder runs exposed in the standalone kernel.
         mask = standalone_packed_mask(plan, batch, n_heads, sq, sk,
                                       layer_idx, step)
+        _record(plan.site, HOW_STANDALONE, gemm_dtype,
+                f"Region 3: GEMM ({m},{n},{kdim}) too small for "
+                f"{batch}x{n_heads}x{sq}x{sk} mask")
         return y, mask, HOW_STANDALONE
+    _record(plan.site, HOW_GEMM, gemm_dtype, "")
     return y, mask, HOW_GEMM
+
+
+# --------------------------------------------------------------------------
+# FFN hosting (site="ffn_up" / "ffn_down")
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FFNHost:
+    """Instruction to models/layers.ffn_apply to host the mask producer
+    under one of its GEMMs. ``layer_idx`` is the CONSUMER layer (the
+    transformer passes l+1: the mask rides the carried scan buffer to the
+    next attention layer)."""
+    plan: DropoutPlan
+    site: str                           # "ffn_up" | "ffn_down"
+    mask_shape: Tuple[int, int, int, int]
+    layer_idx: Any
+    step: Any
+    allow_fused: bool = True
+
+
+# --------------------------------------------------------------------------
+# block-aware host selection (site="auto")
+# --------------------------------------------------------------------------
+
+def block_gemm_shapes(cfg: ModelConfig, batch: int, seq: int
+                      ) -> Dict[str, Tuple[int, int, int]]:
+    """(m, n, k) of each candidate host GEMM in one transformer block.
+    FFN sites only exist for dense (non-MoE) blocks with a GEMM-shaped
+    FFN; carried feasibility is the caller's concern."""
+    d = cfg.d_model
+    toks = batch * seq
+    nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    shapes = {
+        "qkv": (toks, (nq + 2 * nkv) * hd, d),
+        "prev_gemm": (toks, d, nq * hd),
+    }
+    if cfg.moe is None and cfg.ffn in (FFNKind.SWIGLU, FFNKind.GEGLU,
+                                       FFNKind.GELU):
+        gated = cfg.ffn in (FFNKind.SWIGLU, FFNKind.GEGLU)
+        shapes["ffn_up"] = (toks, (2 if gated else 1) * cfg.d_ff, d)
+        shapes["ffn_down"] = (toks, d, cfg.d_ff)
+    return shapes
+
+
+def pick_host_site(cfg: ModelConfig, plan: DropoutPlan, batch: int,
+                   seq: int, fuse_ok: bool = True, hw=None) -> str:
+    """Resolve site="auto" to a concrete host. Candidates are the block's
+    GEMMs that (a) tile for the fused kernel, (b) can legally host this
+    plan's mask, and (c) — for carried sites — sit in a uniform-attention
+    stack. Ranked by the Region-1 headroom estimate
+    (perfmodel.gemm_host_headroom): the GEMM with the most RNG-hiding
+    shadow wins. Falls back to "xla" when nothing qualifies."""
+    if not (plan.enabled and plan.overlapped):
+        return "xla"
+    reason = mask_kernel_unsupported_reason(plan, seq, seq)
+    if not fuse_ok or reason is not None:
+        _record("auto", HOW_XLA, plan.gemm_dtype,
+                reason or "fused kernels unavailable "
+                          "(impl != pallas or sharded)")
+        return "xla"
+    from repro.perfmodel.hardware import TPU_V5E
+    from repro.perfmodel.model import gemm_host_headroom
+    hw = hw or TPU_V5E
+    uniform_attn = all(
+        k.value in ("full", "local") for k in cfg.layer_kinds())
+    mask_elems = float(batch) * cfg.n_heads * seq * seq
+    dtype_bytes = _DTYPE_BYTES.get(plan.gemm_dtype, 4)
+    scores: Dict[str, float] = {}
+    for site, (m, n, k) in block_gemm_shapes(cfg, batch, seq).items():
+        if site in CARRIED_DROPOUT_SITES and not uniform_attn:
+            continue
+        if pick_gemm_blocks(m, n, k) is None:
+            continue
+        scores[site] = gemm_host_headroom(
+            m, n, k, mask_elems, hw=hw, rounds=plan.cfg.philox_rounds,
+            dtype_bytes=dtype_bytes)
+    if not scores:
+        _record("auto", HOW_XLA, plan.gemm_dtype, "no tileable host GEMM")
+        return "xla"
+    best = max(scores, key=lambda s: scores[s])
+    _record("auto", HOW_GEMM, plan.gemm_dtype,
+            f"resolved to {best} (headroom "
+            f"{scores[best] * 1e6:+.2f}us)")
+    return best
+
+
+def resolve_plan(plan: Optional[DropoutPlan], cfg: ModelConfig,
+                 batch: int, seq: int,
+                 fuse_ok: bool = True) -> Optional[DropoutPlan]:
+    """Return a plan whose site is concrete: site="auto" resolves via
+    pick_host_site; every other plan passes through unchanged."""
+    if plan is None or plan.site != "auto":
+        return plan
+    site = pick_host_site(cfg, plan, batch, seq, fuse_ok=fuse_ok)
+    return DropoutPlan(dataclasses.replace(plan.cfg, site=site))
+
+
+def validate_site(site: str) -> None:
+    if site not in DROPOUT_SITES:
+        raise ValueError(
+            f"DropoutPlanConfig.site={site!r}; expected one of "
+            f"{DROPOUT_SITES}")
+
+
+def validate_gemm_dtype(gemm_dtype: str) -> None:
+    if gemm_dtype not in GEMM_DTYPES:
+        raise ValueError(
+            f"DropoutPlanConfig.gemm_dtype={gemm_dtype!r}; expected one "
+            f"of {GEMM_DTYPES}")

@@ -30,11 +30,35 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import quant
 from repro.kernels.philox_common import (
     packed_rows_tile,
     seed_salt_smem,
     threshold_from_p,
 )
+
+
+def _mask_layout(n_steps: int, mask_batch: int, mask_heads: int,
+                 sq32: int, mask_sk: int, mask_block_cols: int,
+                 max_mask_rows_per_block: int):
+    """Partition of the flattened packed mask (BH*SQ32, SK) over GEMM grid
+    steps. Returns (ck, n_cb, rb, n_rb_valid, n_valid_blocks,
+    mask_rows_alloc), or None when the GEMM grid cannot host the mask
+    within the row budget (the paper's Region 3). Shared by the f32/bf16
+    and fp8 fused kernels so both hosts produce the identical layout."""
+    mr = mask_batch * mask_heads * sq32          # valid packed rows
+    ck = min(mask_block_cols, mask_sk)
+    assert mask_sk % ck == 0
+    n_cb = mask_sk // ck
+    rows_per_block = max(1, n_steps // n_cb)
+    rb = -(-mr // rows_per_block)                # ceil
+    rb = -(-rb // 8) * 8                         # sublane multiple
+    n_rb_valid = -(-mr // rb)
+    n_valid_blocks = n_rb_valid * n_cb
+    if rb > max_mask_rows_per_block or n_valid_blocks > n_steps:
+        return None
+    mask_rows_alloc = (n_rb_valid + 1) * rb      # +1 dummy overflow block
+    return ck, n_cb, rb, n_rb_valid, n_valid_blocks, mask_rows_alloc
 
 
 def _mask_block_idx(s, n_valid_blocks: int, n_cb: int, n_rb_valid: int):
@@ -106,19 +130,12 @@ def gemm_with_rng(a: jnp.ndarray, b: jnp.ndarray, *,
 
     assert mask_sq % 32 == 0
     sq32 = mask_sq // 32
-    mr = mask_batch * mask_heads * sq32          # valid packed rows
-    ck = min(mask_block_cols, mask_sk)
-    assert mask_sk % ck == 0
-    n_cb = mask_sk // ck
-    rows_per_block = max(1, n_steps // n_cb)
-    rb = -(-mr // rows_per_block)                # ceil
-    rb = -(-rb // 8) * 8                         # sublane multiple
-    n_rb_valid = -(-mr // rb)
-    n_valid_blocks = n_rb_valid * n_cb
-    if rb > max_mask_rows_per_block or n_valid_blocks > n_steps:
+    layout = _mask_layout(n_steps, mask_batch, mask_heads, sq32, mask_sk,
+                          mask_block_cols, max_mask_rows_per_block)
+    if layout is None:
         # GEMM too small to hide this much RNG (paper Region 3): bail out.
         return _plain_gemm(a, b, bm, bn, bkk, interpret), None
-    mask_rows_alloc = (n_rb_valid + 1) * rb      # +1 dummy overflow block
+    ck, n_cb, rb, n_rb_valid, n_valid_blocks, mask_rows_alloc = layout
 
     static = (gm, gn, gk, bm, bn, bkk, n_cb, rb, ck, sq32,
               threshold_from_p(p), rounds, n_valid_blocks, n_rb_valid,
@@ -255,3 +272,235 @@ _plain_gemm_call.defvjp(_plain_gemm_fwd, _plain_gemm_bwd)
 def _plain_gemm(a, b, bm, bn, bkk, interpret):
     """Tiled matmul without the RNG side-channel (fallback / baseline)."""
     return _plain_gemm_call(a, b, (bm, bn, bkk, interpret))
+
+
+# --------------------------------------------------------------------------
+# fp8(e4m3) operand path with per-tile scales
+# --------------------------------------------------------------------------
+#
+# The paper's measured regime: the producer GEMM runs on quantized e4m3
+# operands (the serving precision on GH100) while the VPU still hides the
+# Philox chain in its shadow. Operands are quantized per GEMM tile — A per
+# (block_m, block_k), B per (block_k, block_n) — so every grid step reads
+# ONE scalar scale per operand from SMEM and rescales its f32 partial
+# product: acc += dot(a_q, b_q) * (a_scale[i,k] * b_scale[k,j]). The mask
+# work assignment is byte-for-byte the layout of the f32 kernel
+# (_mask_layout), keeping the counter-based bits identical across hosting
+# dtypes — determinism survives the re-scheduling (DASH, 2026).
+#
+# Gradients: quantization is straight-through (the residual stores the
+# UNQUANTIZED operands) and the dgrad pair runs in bf16 — the paper's
+# training arrangement, where only the forward GEMM is fp8.
+
+def _gemm_rng_fp8_kernel(s_ref, as_ref, bs_ref, a_ref, b_ref, c_ref,
+                         m_ref, acc_scr, *, n_cb: int, rb: int, ck: int,
+                         sq32: int, threshold: int, rounds: int,
+                         n_valid_blocks: int, n_rb_valid: int, out_dtype):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    kk = pl.program_id(2)
+    nk = pl.num_programs(2)
+    gn = pl.num_programs(1)
+
+    @pl.when(kk == 0)
+    def _zero():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # --- MXU stream: e4m3 tile product, per-tile rescale on the f32 acc
+    prod = jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_scr[...] += prod * (as_ref[i, kk] * bs_ref[kk, j])
+
+    # --- VPU stream: identical mask assignment to the f32 kernel --------
+    @pl.when(kk == 0)
+    def _rng():
+        s = i * gn + j
+        rb_idx, cb_idx = _mask_block_idx(s, n_valid_blocks, n_cb,
+                                         n_rb_valid)
+        m_ref[...] = packed_rows_tile(
+            rb_idx * rb, cb_idx * ck, sq32, s_ref[2], s_ref[0], s_ref[1],
+            threshold, rb, ck, rounds)
+
+    @pl.when(kk == nk - 1)
+    def _flush():
+        c_ref[...] = acc_scr[...].astype(out_dtype)
+
+
+def gemm_with_rng_fp8(a: jnp.ndarray, b: jnp.ndarray, *,
+                      mask_batch: int, mask_heads: int, mask_sq: int,
+                      mask_sk: int, p: float, seed: int, salt: int = 0,
+                      rounds: int = 7,
+                      block_m: int = 256, block_n: int = 256,
+                      block_k: int = 512, mask_block_cols: int = 2048,
+                      max_mask_rows_per_block: int = 256,
+                      interpret: bool = True,
+                      ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """C ~= a @ b computed on per-tile-scaled e4m3 operands, plus the
+    packed dropout keep-mask generated under the GEMM. The mask is
+    bit-identical to the f32 host's (same _mask_layout, same counters);
+    C matches the f32 GEMM within the documented e4m3 per-tile-scale
+    error bound (see kernels/quant.py). Returns (C, mask) — mask is None
+    in the paper's Region 3 (grid too small; caller falls back to the
+    standalone kernel). Differentiable: straight-through quantization
+    with a bf16 dgrad pair."""
+    if not quant.have_fp8():
+        raise NotImplementedError(
+            "fp8 path requires jnp.float8_e4m3fn; gate on "
+            "quant.have_fp8()")
+    m, kdim = a.shape
+    k2, n = b.shape
+    assert kdim == k2
+    bm, bn, bkk = min(block_m, m), min(block_n, n), min(block_k, kdim)
+    assert m % bm == 0 and n % bn == 0 and kdim % bkk == 0
+    gm, gn, gk = m // bm, n // bn, kdim // bkk
+    n_steps = gm * gn
+
+    assert mask_sq % 32 == 0
+    sq32 = mask_sq // 32
+    layout = _mask_layout(n_steps, mask_batch, mask_heads, sq32, mask_sk,
+                          mask_block_cols, max_mask_rows_per_block)
+    if layout is None:
+        # Region 3: still run the quantized GEMM, just without the mask.
+        return _plain_gemm_fp8_call(a, b, (bm, bn, bkk, interpret)), None
+    ck, n_cb, rb, n_rb_valid, n_valid_blocks, mask_rows_alloc = layout
+
+    static = (gm, gn, gk, bm, bn, bkk, n_cb, rb, ck, sq32,
+              threshold_from_p(p), rounds, n_valid_blocks, n_rb_valid,
+              mask_rows_alloc, mask_sk, interpret,
+              mask_batch, mask_heads)
+    return _gemm_rng_fp8_call(static, seed_salt_smem(seed, salt), a, b)
+
+
+def _gemm_rng_fp8_impl(static, sd, a, b):
+    (gm, gn, gk, bm, bn, bkk, n_cb, rb, ck, sq32, threshold, rounds,
+     n_valid_blocks, n_rb_valid, mask_rows_alloc, mask_sk,
+     interpret, mask_batch, mask_heads) = static
+    m, n = a.shape[0], b.shape[1]
+    a_q, a_s = quant.quantize_tiled(a, bm, bkk)      # scales (gm, gk)
+    b_q, b_s = quant.quantize_tiled(b, bkk, bn)      # scales (gk, gn)
+    kernel = functools.partial(
+        _gemm_rng_fp8_kernel, n_cb=n_cb, rb=rb, ck=ck, sq32=sq32,
+        threshold=threshold, rounds=rounds,
+        n_valid_blocks=n_valid_blocks, n_rb_valid=n_rb_valid,
+        out_dtype=a.dtype)
+
+    def _mask_index_map(i, j, kk, _gn=gn):
+        rb_idx, cb_idx = _mask_block_idx(i * _gn + j, n_valid_blocks,
+                                         n_cb, n_rb_valid)
+        return rb_idx, cb_idx
+
+    c, mask2d = pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bkk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bkk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((rb, ck), _mask_index_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), a.dtype),
+            jax.ShapeDtypeStruct((mask_rows_alloc, mask_sk), jnp.uint32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(sd, a_s, b_s, a_q, b_q)
+    mr = mask_batch * mask_heads * sq32
+    return c, mask2d[:mr].reshape(mask_batch, mask_heads, sq32, mask_sk)
+
+
+def _dgrad_pair_bf16(a, b, dc):
+    """bf16 dgrad pair for the fp8 forward: quantization is straight-
+    through (grads w.r.t. the unquantized operands), accumulation f32."""
+    dcb = dc.astype(jnp.bfloat16)
+    da = jax.lax.dot_general(
+        dcb, b.astype(jnp.bfloat16), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(a.dtype)
+    db = jax.lax.dot_general(
+        a.astype(jnp.bfloat16), dcb, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(b.dtype)
+    return da, db
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gemm_rng_fp8_call(static, sd, a, b):
+    return _gemm_rng_fp8_impl(static, sd, a, b)
+
+
+def _gemm_rng_fp8_fwd(static, sd, a, b):
+    return _gemm_rng_fp8_impl(static, sd, a, b), (a, b)
+
+
+def _gemm_rng_fp8_bwd(static, res, cts):
+    a, b = res
+    da, db = _dgrad_pair_bf16(a, b, cts[0])
+    dsd = np.zeros((3,), jax.dtypes.float0)
+    return dsd, da, db
+
+
+_gemm_rng_fp8_call.defvjp(_gemm_rng_fp8_fwd, _gemm_rng_fp8_bwd)
+
+
+def _plain_fp8_kernel(as_ref, bs_ref, a_ref, b_ref, c_ref, acc_scr, *,
+                      out_dtype):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _zero():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    prod = jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_scr[...] += prod * (as_ref[i, kk] * bs_ref[kk, j])
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _flush():
+        c_ref[...] = acc_scr[...].astype(out_dtype)
+
+
+def _plain_gemm_fp8_impl(a, b, static):
+    bm, bn, bkk, interpret = static
+    m, kdim = a.shape
+    _, n = b.shape
+    a_q, a_s = quant.quantize_tiled(a, bm, bkk)
+    b_q, b_s = quant.quantize_tiled(b, bkk, bn)
+    return pl.pallas_call(
+        functools.partial(_plain_fp8_kernel, out_dtype=a.dtype),
+        grid=(m // bm, n // bn, kdim // bkk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bkk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bkk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_s, b_s, a_q, b_q)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _plain_gemm_fp8_call(a, b, static):
+    return _plain_gemm_fp8_impl(a, b, static)
+
+
+def _plain_gemm_fp8_fwd(a, b, static):
+    return _plain_gemm_fp8_impl(a, b, static), (a, b)
+
+
+def _plain_gemm_fp8_bwd(static, res, dc):
+    a, b = res
+    return _dgrad_pair_bf16(a, b, dc)
+
+
+_plain_gemm_fp8_call.defvjp(_plain_gemm_fp8_fwd, _plain_gemm_fp8_bwd)

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_fwd
-from repro.kernels.gemm_rng import gemm_with_rng
+from repro.kernels.gemm_rng import gemm_with_rng, gemm_with_rng_fp8
 from repro.kernels.philox import philox_dropout_mask
 
 __all__ = [
@@ -19,8 +19,10 @@ __all__ = [
     "dropout_mask",
     "flash_attention",
     "flash_attention_fwd",
+    "fused_gemm_rng_fp8",
     "fused_qkv_gemm_rng",
     "gemm_with_rng",
+    "gemm_with_rng_fp8",
 ]
 
 
@@ -50,6 +52,25 @@ def fused_qkv_gemm_rng(x: jnp.ndarray, w_qkv: jnp.ndarray, *,
     training path folds (step, layer) in under the jit."""
     return gemm_with_rng(
         x, w_qkv, mask_batch=mask_batch, mask_heads=mask_heads,
+        mask_sq=mask_sq, mask_sk=mask_sk, p=p, seed=seed, salt=salt,
+        rounds=rounds, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=default_interpret())
+
+
+def fused_gemm_rng_fp8(x: jnp.ndarray, w: jnp.ndarray, *,
+                       mask_batch: int, mask_heads: int, mask_sq: int,
+                       mask_sk: int, p: float, seed, salt=0,
+                       rounds: int = 7, block_m: int = 256,
+                       block_n: int = 256, block_k: int = 512,
+                       ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Producer GEMM on per-tile-scaled e4m3 operands with the dropout
+    mask generated under it — the paper's measured FP8 serving regime.
+    The mask is bit-identical to the f32 host's; the GEMM matches f32
+    within the documented e4m3 error bound (kernels/quant.py). Falls back
+    to (plain fp8 GEMM, None) in Region 3. Differentiable (straight-
+    through quantization, bf16 dgrad)."""
+    return gemm_with_rng_fp8(
+        x, w, mask_batch=mask_batch, mask_heads=mask_heads,
         mask_sq=mask_sq, mask_sk=mask_sk, p=p, seed=seed, salt=salt,
         rounds=rounds, block_m=block_m, block_n=block_n, block_k=block_k,
         interpret=default_interpret())

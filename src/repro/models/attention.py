@@ -13,7 +13,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import shard_map
-from repro.config.base import AttentionKind, ModelConfig
+from repro.config.base import (
+    CARRIED_DROPOUT_SITES,
+    AttentionKind,
+    ModelConfig,
+)
 from repro.core.attention import attention_decode, attention_xla
 from repro.core.overlap import DropoutPlan
 from repro.distributed.sharding import constrain
@@ -111,7 +115,12 @@ def attn_apply(p, x, cfg: ModelConfig, *, kind: AttentionKind,
                     previous layer's out-proj GEMM); with ``emit_next``
                     the call returns (out, mask_next) where mask_next is
                     layer l+1's mask generated under THIS layer's
-                    out-projection. All sites emit bit-identical masks.
+                    out-projection. "ffn_up" / "ffn_down" also consume
+                    ``mask_in`` (carried), but the NEXT mask is emitted
+                    by the FFN half of the block (models/transformer.py
+                    routes it through layers.ffn_apply), so this call
+                    never emits for them. All sites emit bit-identical
+                    masks.
     Returns out, or (out, mask_next) when ``emit_next``.
     """
     b, s, _ = x.shape
@@ -130,7 +139,7 @@ def attn_apply(p, x, cfg: ModelConfig, *, kind: AttentionKind,
             p, x, cfg, positions, plan, layer_idx, step)
     else:
         q, k, v = _project_qkv(p, x, cfg, positions)
-        if overlap and site == "prev_gemm":
+        if overlap and site in CARRIED_DROPOUT_SITES:
             from repro.core import producer
             packed = mask_in if mask_in is not None else \
                 producer.standalone_packed_mask(

@@ -106,9 +106,20 @@ def ffn_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
             "b_down": jnp.zeros((d,), jnp.float32)}
 
 
-def ffn_apply(p, x, cfg: ModelConfig, shifted: Optional[jnp.ndarray] = None):
+def ffn_apply(p, x, cfg: ModelConfig, shifted: Optional[jnp.ndarray] = None,
+              host=None):
     """x (..., d_model). For RWKV channel-mix, ``shifted`` is the
-    token-shifted input."""
+    token-shifted input.
+
+    ``host`` (a core/producer.FFNHost) asks this FFN to physically host
+    the dropout-mask producer under one of its GEMMs — the paper's
+    "previous GEMM layers" site extended to the block's largest GEMMs:
+    "ffn_up" hosts under the gate+up projection (one concatenated GEMM
+    for gated FFNs), "ffn_down" under the down projection. With a host
+    the return value is (y, packed_mask); the bits are identical to every
+    other producer site."""
+    if host is not None:
+        return _ffn_apply_hosted(p, x, cfg, host, shifted)
     dt = x.dtype
     if cfg.ffn == FFNKind.SWIGLU:
         g = x @ p["w_gate"].astype(dt)
@@ -137,6 +148,64 @@ def ffn_apply(p, x, cfg: ModelConfig, shifted: Optional[jnp.ndarray] = None):
     h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
     h = constrain_ffn(h)
     return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)
+
+
+def _ffn_apply_hosted(p, x, cfg: ModelConfig, host,
+                      shifted: Optional[jnp.ndarray]):
+    """FFN forward with the mask producer hosted under the up or down
+    GEMM (producer.gemm_with_mask). Returns (y, packed_mask). FFN kinds
+    without a plain hostable GEMM (RWKV channel-mix) degrade to the
+    standalone producer — same bits, GEMM untouched."""
+    from repro.core import producer
+    dt = x.dtype
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+
+    def _host_gemm(a2d, w):
+        y2d, mask, _how = producer.gemm_with_mask(
+            a2d, w.astype(dt), host.plan, host.mask_shape,
+            host.layer_idx, host.step, allow_fused=host.allow_fused)
+        return y2d, mask
+
+    if cfg.ffn in (FFNKind.SWIGLU, FFNKind.GEGLU):
+        act = jax.nn.silu if cfg.ffn == FFNKind.SWIGLU else jax.nn.gelu
+        f = p["w_gate"].shape[1]
+        if host.site == "ffn_up":
+            # one concatenated gate+up GEMM — the block's largest host
+            w_gu = jnp.concatenate([p["w_gate"], p["w_up"]], axis=1)
+            gu, mask = _host_gemm(x2d, w_gu)
+            g, u = gu[:, :f], gu[:, f:]
+            h = act(g.astype(jnp.float32)).astype(dt) * u
+            h = constrain_ffn(h.reshape(*lead, f)).reshape(-1, f)
+            y2d = h @ p["w_down"].astype(dt)
+        else:
+            g = x2d @ p["w_gate"].astype(dt)
+            u = x2d @ p["w_up"].astype(dt)
+            h = act(g.astype(jnp.float32)).astype(dt) * u
+            h = constrain_ffn(h.reshape(*lead, f)).reshape(-1, f)
+            y2d, mask = _host_gemm(h, p["w_down"])
+        return y2d.reshape(*lead, -1), mask
+    if cfg.ffn == FFNKind.GELU:
+        f = p["w_up"].shape[1]
+        if host.site == "ffn_up":
+            h2d, mask = _host_gemm(x2d, p["w_up"])
+            h = h2d + p["b_up"].astype(dt)
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+            h = constrain_ffn(h.reshape(*lead, f)).reshape(-1, f)
+            y2d = h @ p["w_down"].astype(dt)
+        else:
+            h = x2d @ p["w_up"].astype(dt) + p["b_up"].astype(dt)
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+            h = constrain_ffn(h.reshape(*lead, f)).reshape(-1, f)
+            y2d, mask = _host_gemm(h, p["w_down"])
+        return (y2d + p["b_down"].astype(dt)).reshape(*lead, -1), mask
+    # no hostable plain GEMM (RWKV channel-mix): standalone producer,
+    # identical bits
+    b, h_, sq, sk = host.mask_shape
+    mask = producer.standalone_packed_mask(
+        host.plan, b, h_, sq, sk, host.layer_idx, host.step,
+        use_kernel=host.allow_fused)
+    return ffn_apply(p, x, cfg, shifted=shifted), mask
 
 
 def constrain_ffn(h):

@@ -173,8 +173,21 @@ def _mix_forward(p, x, cfg, rt: Runtime, kind, layer_idx,
     return rwkv_apply(p, x, cfg), None
 
 
-def _ffn_forward(p, x, cfg, rt: Runtime, tag):
-    """Returns (out, aux)."""
+def _ffn_forward(p, x, cfg, rt: Runtime, tag, layer_idx=0,
+                 host_site=None, mask_shape=None):
+    """Returns (out, aux, mask_next). ``host_site`` ("ffn_up"/"ffn_down")
+    asks the FFN to host the NEXT layer's mask producer under one of its
+    GEMMs (the carried-scan pipeline); blocks whose FFN has no hostable
+    GEMM (MoE, RWKV channel-mix) degrade to the standalone producer —
+    identical bits, uniform scan carry."""
+    from repro.core import producer
+    mask_next = None
+    host = None
+    if host_site is not None:
+        fuse_ok = rt.attn_impl == "pallas" and rt.policy is None
+        host = producer.FFNHost(
+            plan=rt.plan, site=host_site, mask_shape=mask_shape,
+            layer_idx=layer_idx + 1, step=rt.step, allow_fused=fuse_ok)
     if tag == "moe":
         y, aux = moe_mod.moe_apply(p["moe"], x, cfg, rt.policy,
                                    seq_dispatch=rt.moe_seq_dispatch)
@@ -182,24 +195,50 @@ def _ffn_forward(p, x, cfg, rt: Runtime, tag):
             y = y + ffn_apply(p["shared"], x, cfg)
         if "dense_res" in p:
             y = y + ffn_apply(p["dense_res"], x, cfg)
-        return y, aux
+        if host is not None:
+            # expert GEMMs are not hostable (permuted token layout);
+            # keep the carry alive with the standalone producer
+            b, h_, sq, sk = mask_shape
+            mask_next = producer.standalone_packed_mask(
+                rt.plan, b, h_, sq, sk, layer_idx + 1, rt.step,
+                use_kernel=host.allow_fused)
+        return y, aux, mask_next
     shifted = None
     if cfg.ffn == FFNKind.RWKV_CHANNEL:
         shifted = token_shift(x)
-    return ffn_apply(p["ffn"], x, cfg, shifted=shifted), jnp.float32(0.0)
+    if host is not None:
+        y, mask_next = ffn_apply(p["ffn"], x, cfg, shifted=shifted,
+                                 host=host)
+        return y, jnp.float32(0.0), mask_next
+    return (ffn_apply(p["ffn"], x, cfg, shifted=shifted),
+            jnp.float32(0.0), None)
 
 
 def block_apply(p, x, cfg, rt: Runtime, kind, tag, layer_idx,
                 mask_in=None, emit_next=False):
-    """Returns (x, aux, mask_next); mask_next carries the prev_gemm
-    pipeline buffer (None when the plan doesn't pipeline masks)."""
+    """Returns (x, aux, mask_next); mask_next carries the carried-site
+    pipeline buffer (None when the plan doesn't pipeline masks). With
+    site="prev_gemm" the next mask is emitted under attention's out-proj;
+    with site="ffn_up"/"ffn_down" it is emitted by the FFN half — the
+    block's largest GEMMs (the regime the paper benchmarks)."""
     x = constrain(x, "batch", "seq", "embed")
+    plan = rt.plan
+    site = (plan.site if (plan is not None and plan.enabled
+                          and plan.overlapped) else "xla")
+    ffn_hosts = emit_next and site in ("ffn_up", "ffn_down")
     h = norm_apply(p["norm_mix"], x, cfg)
     y, mask_next = _mix_forward(p["mix"], h, cfg, rt, kind, layer_idx,
-                                mask_in=mask_in, emit_next=emit_next)
+                                mask_in=mask_in,
+                                emit_next=emit_next and not ffn_hosts)
     x = x + y
     h2 = norm_apply(p["norm_ffn"], x, cfg)
-    f, aux = _ffn_forward(p, h2, cfg, rt, tag)
+    if ffn_hosts:
+        b, s = x.shape[0], x.shape[1]
+        f, aux, mask_next = _ffn_forward(
+            p, h2, cfg, rt, tag, layer_idx=layer_idx, host_site=site,
+            mask_shape=(b, cfg.n_heads, s, s))
+    else:
+        f, aux, _ = _ffn_forward(p, h2, cfg, rt, tag)
     return x + f, aux, mask_next
 
 
@@ -225,11 +264,12 @@ def unembed(params, cfg: ModelConfig, x):
 
 
 def _wants_carried_mask(cfg: ModelConfig, rt: Runtime) -> bool:
-    """The prev_gemm pipeline threads one (B, H, S//32, S) buffer through
-    the layer scan — which requires every scanned layer to be an
-    attention layer (uniform shapes + every layer both consumes and
-    produces a mask). Mixed patterns degrade to per-layer generation
-    inside attn_apply (same bits, no cross-layer carry)."""
+    """The carried-site pipelines (prev_gemm / ffn_up / ffn_down) thread
+    one (B, H, S//32, S) buffer through the layer scan — which requires
+    every scanned layer to be an attention layer (uniform shapes + every
+    layer both consumes and produces a mask). Mixed patterns degrade to
+    per-layer generation inside attn_apply (same bits, no cross-layer
+    carry)."""
     plan = rt.plan
     if plan is None or not plan.carried:
         return False
@@ -237,17 +277,36 @@ def _wants_carried_mask(cfg: ModelConfig, rt: Runtime) -> bool:
                for k in cfg.layer_kinds())
 
 
+def _resolve_auto_site(rt: Runtime, cfg: ModelConfig, x) -> Runtime:
+    """site="auto": let the producer scheduler pick the host GEMM for
+    this (model, shape) by Region-1 headroom, once per trace. The
+    returned Runtime carries a plan with a concrete site so the scan
+    compiles one static schedule."""
+    plan = rt.plan
+    if plan is None or plan.site != "auto":
+        return rt
+    from repro.core import producer
+    fuse_ok = rt.attn_impl == "pallas" and rt.policy is None
+    resolved = producer.resolve_plan(plan, cfg, x.shape[0], x.shape[1],
+                                     fuse_ok=fuse_ok)
+    return dataclasses.replace(rt, plan=resolved)
+
+
 def forward(params, cfg: ModelConfig, rt: Runtime, inputs
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Training/eval forward. inputs: tokens (B,S) or embeds (B,S,D).
     Returns (logits f32 (B,S,V), aux_loss).
 
-    With site="prev_gemm" the scan carry additionally threads the packed
-    mask buffer: layer l+1's attention mask is generated under layer l's
-    out-proj GEMM (paper's "previous GEMM layers" site). Layer 0 has no
-    producer GEMM before it, so its mask bootstraps from the standalone
-    producer — the cross-layer analogue of the Region-3 remainder."""
+    With a carried site ("prev_gemm" / "ffn_up" / "ffn_down") the scan
+    carry additionally threads the packed mask buffer: layer l+1's
+    attention mask is generated under layer l's out-proj GEMM or FFN
+    up/down GEMM (paper's "previous GEMM layers" site — the FFN GEMMs are
+    the block's largest hosts). Layer 0 has no producer GEMM before it,
+    so its mask bootstraps from the standalone producer — the cross-layer
+    analogue of the Region-3 remainder. site="auto" resolves to a
+    concrete host here, once per trace."""
     x = embed_inputs(params, cfg, inputs, rt)
+    rt = _resolve_auto_site(rt, cfg, x)
     aux_total = jnp.float32(0.0)
     carry_mask = _wants_carried_mask(cfg, rt)
     mask_buf = None
@@ -352,7 +411,7 @@ def _layer_prefill(p, x, cfg, rt, kind, tag, layer_idx, capacity):
     h2 = norm_apply(p["norm_ffn"], x, cfg)
     if kind == AttentionKind.WKV:
         cache["shift_cm"] = h2[:, -1, :]
-    f, _ = _ffn_forward(p, h2, cfg, rt, tag)
+    f, _, _ = _ffn_forward(p, h2, cfg, rt, tag)
     return x + f, cache
 
 
@@ -376,7 +435,7 @@ def _layer_decode(p, x1, cache, cfg, rt, kind, tag):
         update = dict(update)
         update["shift_cm"] = h2[:, 0, :]
     if tag == "moe":
-        f, _ = _ffn_forward(p, h2, cfg, rt, tag)
+        f, _, _ = _ffn_forward(p, h2, cfg, rt, tag)
     else:
         sh = (shifted_cm[:, None, :].astype(h2.dtype)
               if cfg.ffn == FFNKind.RWKV_CHANNEL else None)

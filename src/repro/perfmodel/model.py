@@ -104,6 +104,28 @@ def kernel_times(shape: BlockShape, hw: Hardware = GH100,
     return {"gemm": t_gemm, "attn": t_attn, "rng": t_rng}
 
 
+def gemm_host_headroom(m: int, n: int, k: int, mask_elems: float,
+                       hw: Hardware = GH100, rounds: int = 7,
+                       dtype_bytes: int = 2) -> float:
+    """Region-1 headroom (seconds) of ONE candidate host GEMM (m, n, k)
+    for a mask of ``mask_elems`` score elements.
+
+    The paper's Fig. 5f composition, reduced to a single GEMM: while the
+    GEMM runs (stretched by gemm_interference), the RNG progresses at
+    1/rng_interference rate. Headroom = RNG work completable in the
+    GEMM's shadow minus the RNG work needed. Positive → the mask hides
+    fully under this GEMM (Region 1); negative → its magnitude is the
+    exposed Region-3 remainder. The producer scheduler ranks candidate
+    host sites by this number (core/producer.pick_host_site)."""
+    flops = 2.0 * m * n * k
+    gemm_bytes = (m * k + k * n) * dtype_bytes + m * n * 4.0
+    t_gemm = max(flops / hw.mma_flops, gemm_bytes / hw.hbm_bw)
+    t_rng = max(mask_elems * rng_ops_per_elem(rounds) / hw.nonmma_ops,
+                mask_elems / 8.0 / hw.hbm_bw)
+    hidden = (t_gemm * hw.gemm_interference) / hw.rng_interference
+    return hidden - t_rng
+
+
 def baseline_block_time(shape: BlockShape, hw: Hardware = GH100,
                         rounds: int = 7) -> float:
     """GEMMs + attention-with-fused-RNG (Fig. 5h). RNG shares the

@@ -12,6 +12,7 @@ unit. Microbatching accumulates grads over a lax.scan.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -19,12 +20,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import ModelConfig, OptimizerConfig, RunConfig
+from repro.core import producer
 from repro.core.overlap import DropoutPlan, plan_from_config
 from repro.distributed.sharding import ShardingPolicy, use_policy
 from repro.models import Runtime, decode_step, forward, model_init
 from repro.optim import adamw_init, adamw_update
 
 AUX_WEIGHT = 0.01
+
+log = logging.getLogger("repro.train")
 
 
 def init_train_state(key, cfg: ModelConfig) -> Dict[str, Any]:
@@ -44,22 +48,32 @@ def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
     return jnp.mean(lse - picked)
 
 
-_DROPOUT_SITES = ("xla", "qkv", "prev_gemm")
-
-
 def _validate_dropout_plan(run: RunConfig) -> None:
     """The producer-site knob only makes sense for decoupled RNG: fused
     mode generates bits inside attention, so there is no producer GEMM to
     host them. Catch the bad combo at step-build time, not mid-scan."""
     d = run.dropout
-    if d.site not in _DROPOUT_SITES:
-        raise ValueError(
-            f"DropoutPlanConfig.site={d.site!r}; expected one of "
-            f"{_DROPOUT_SITES}")
+    producer.validate_site(d.site)
+    producer.validate_gemm_dtype(getattr(d, "gemm_dtype", "f32"))
     if d.site != "xla" and d.mode == "fused":
         raise ValueError(
             f"site={d.site!r} requires mode='overlap' (fused mode has no "
             "producer-GEMM site)")
+
+
+def _log_producer_decisions(context: str) -> None:
+    """Surface the static mask-producer scheduling decisions recorded
+    during tracing (core/producer.py trace events). The HOW_* fallback
+    tags are the observable: a fused call site silently degrading to the
+    XLA producer (Region 3 shrinkage, philox_bits=8, lost tiling) is a
+    host-selection regression this log makes visible."""
+    events = producer.drain_trace_events()
+    if not events:
+        return
+    for site, how, gemm_dtype, note in sorted(set(events)):
+        log.info("%s: dropout mask producer site=%s how=%s "
+                 "gemm_dtype=%s%s", context, site, how, gemm_dtype,
+                 f" ({note})" if note else "")
 
 
 def make_train_step(cfg: ModelConfig, run: RunConfig,
@@ -122,6 +136,9 @@ def make_train_step(cfg: ModelConfig, run: RunConfig,
             step, compute_dtype)
         new_state = {"master": master, "opt": opt, "step": step + 1}
         metrics = {"loss": loss, "ce": ce, "aux": aux, **om}
+        # runs at trace time (once per jit cache entry): surface the
+        # static producer-site decisions made while tracing the forward
+        _log_producer_decisions(f"train_step[site={run.dropout.site}]")
         return new_state, metrics
 
     return train_step

@@ -1,0 +1,128 @@
+"""fp8(e4m3) fused GEMM+RNG: quantize -> GEMM -> dequant round trip
+within the documented per-tile-scale error bound (kernels/quant.py),
+mask bits identical to the f32 host, gradients through the custom_vjp
+(bf16 dgrad, straight-through quantization), Region-3 fallback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import quant
+from repro.kernels.gemm_rng import gemm_with_rng, gemm_with_rng_fp8
+from repro.kernels.ref import gemm_ref, philox_mask_ref
+
+pytestmark = pytest.mark.skipif(
+    not quant.have_fp8(), reason="no float8_e4m3fn in this JAX build")
+
+_BOUND = quant.quantize_error_bound()
+
+
+def _rel_err(got, want):
+    got = np.asarray(got, np.float64)
+    want = np.asarray(want, np.float64)
+    return np.linalg.norm(got - want) / max(np.linalg.norm(want), 1e-12)
+
+
+def test_quantize_dequantize_round_trip(rng_key):
+    """Elementwise: per-tile-scaled e4m3 keeps every value within 2**-4
+    relative error of f32 (3-bit mantissa, amax scaling)."""
+    x = jax.random.normal(rng_key, (256, 128), jnp.float32)
+    q, scale = quant.quantize_tiled(x, 64, 64)
+    assert q.dtype == quant.fp8_dtype()
+    assert scale.shape == (4, 2)
+    back = quant.dequantize_tiled(q, scale, 64, 64)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    # bound: |x_hat - x| <= 2**-4 * (tile amax) per element
+    tile_amax = np.max(np.abs(np.asarray(x)))
+    assert float(err.max()) <= 2.0 ** -4 * tile_amax
+    # a zero tile must round-trip exactly
+    z, zs = quant.quantize_tiled(jnp.zeros((64, 64)), 64, 64)
+    np.testing.assert_array_equal(
+        np.asarray(quant.dequantize_tiled(z, zs, 64, 64)), 0.0)
+
+
+@pytest.mark.parametrize("dims", [(256, 128, 256), (512, 512, 512)])
+def test_fp8_gemm_error_bound(rng_key, dims):
+    """quantize -> GEMM -> (implicit) dequant lands within the documented
+    Frobenius-relative bound of the f32 reference."""
+    m, k, n = dims
+    a = jax.random.normal(rng_key, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(9), (k, n), jnp.float32)
+    c, mask = gemm_with_rng_fp8(
+        a, b, mask_batch=2, mask_heads=2, mask_sq=64, mask_sk=128,
+        p=0.25, seed=4, salt=2, block_m=128, block_n=128, block_k=128,
+        mask_block_cols=128)
+    assert mask is not None
+    rel = _rel_err(c, gemm_ref(a, b))
+    assert 0.0 < rel < _BOUND, rel
+
+
+def test_fp8_mask_bits_match_f32_host(rng_key):
+    """The mask must not depend on the host GEMM's dtype: fp8 and f32
+    hosts, same (seed, salt) -> identical packed words."""
+    a = jax.random.normal(rng_key, (256, 256), jnp.float32)
+    b = jax.random.normal(rng_key, (256, 256), jnp.float32)
+    kw = dict(mask_batch=1, mask_heads=4, mask_sq=64, mask_sk=128,
+              p=0.1, seed=11, salt=6, block_m=128, block_n=128,
+              block_k=128, mask_block_cols=128)
+    _, m8 = gemm_with_rng_fp8(a, b, **kw)
+    _, m32 = gemm_with_rng(a, b, **kw)
+    want = philox_mask_ref(1, 4, 64, 128, 0.1, 11, salt=6)
+    np.testing.assert_array_equal(np.asarray(m8), np.asarray(m32))
+    np.testing.assert_array_equal(np.asarray(m8), np.asarray(want))
+
+
+def test_fp8_grads_flow(rng_key):
+    """custom_vjp: bf16 dgrad pair, straight-through quantization. Grads
+    must be finite and close to the exact-GEMM grads."""
+    a = jax.random.normal(rng_key, (128, 128), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(7), (128, 128), jnp.float32)
+
+    def loss(a_, b_):
+        c, _ = gemm_with_rng_fp8(
+            a_, b_, mask_batch=1, mask_heads=2, mask_sq=64, mask_sk=128,
+            p=0.1, seed=3, block_m=128, block_n=128, block_k=128,
+            mask_block_cols=128)
+        return jnp.sum(jnp.square(c))
+
+    da, db = jax.grad(loss, argnums=(0, 1))(a, b)
+    assert bool(jnp.isfinite(da).all() and jnp.isfinite(db).all())
+    # reference grads of sum((a@b)^2): bf16 dgrad + fp8 fwd error budget
+    c = a @ b
+    da_ref = (2.0 * c) @ b.T
+    db_ref = a.T @ (2.0 * c)
+    assert _rel_err(da, da_ref) < 0.1
+    assert _rel_err(db, db_ref) < 0.1
+
+
+def test_fp8_region3_fallback(rng_key):
+    """Grid too small for the mask: (quantized GEMM, None), still within
+    the error bound."""
+    a = jax.random.normal(rng_key, (128, 128), jnp.float32)
+    b = jax.random.normal(rng_key, (128, 128), jnp.float32)
+    c, mask = gemm_with_rng_fp8(
+        a, b, mask_batch=8, mask_heads=16, mask_sq=2048, mask_sk=2048,
+        p=0.1, seed=0, block_m=128, block_n=128, block_k=128)
+    assert mask is None
+    assert _rel_err(c, gemm_ref(a, b)) < _BOUND
+
+
+def test_producer_routes_fp8(rng_key):
+    """plan.gemm_dtype="fp8" routes gemm_with_mask through the fp8 fused
+    kernel: same bits, quantized GEMM."""
+    from repro.config.base import DropoutPlanConfig
+    from repro.core import producer
+    from repro.core.overlap import plan_from_config
+    plan = plan_from_config(DropoutPlanConfig(
+        mode="overlap", p=0.25, seed=5, site="qkv", gemm_dtype="fp8"))
+    b, h, s = 1, 2, 128
+    x2d = jax.random.normal(rng_key, (b * s, 64), jnp.float32)
+    w = jax.random.normal(rng_key, (64, 192), jnp.float32)
+    y, mask, how = producer.gemm_with_mask(
+        x2d, w, plan, (b, h, s, s), 3, 7)
+    assert how == producer.HOW_GEMM
+    want = philox_mask_ref(
+        b, h, s, s, 0.25, int(plan.step_seed(7)), int(plan.salt(3)))
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(want))
+    rel = _rel_err(y, x2d @ w)
+    assert 0.0 < rel < _BOUND, rel

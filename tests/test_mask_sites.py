@@ -1,8 +1,9 @@
-"""Producer-site RNG scheduler: the three sites ("xla" | "qkv" |
-"prev_gemm") must emit bit-identical packed masks for the same
-(seed, salt, layer, step), the fused-QKV model path must physically
-produce its mask via gemm_with_rng, and the Region-3 fallback must hand
-the remainder to the standalone kernel without changing a bit."""
+"""Producer-site RNG scheduler: every site ("xla" | "qkv" | "prev_gemm"
+| "ffn_up" | "ffn_down" | "auto") must emit bit-identical packed masks
+for the same (seed, salt, layer, step) — whatever dtype hosts the GEMM —
+the fused-QKV model path must physically produce its mask via
+gemm_with_rng, and the Region-3 fallback must hand the remainder to the
+standalone kernel without changing a bit."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,12 +12,14 @@ import pytest
 from repro.config.base import (
     AttentionKind,
     DropoutPlanConfig,
+    FFNKind,
     ModelConfig,
 )
 from repro.core import dropout_rng, producer
 from repro.core.overlap import plan_from_config
 from repro.kernels.ref import philox_mask_ref
 from repro.models.attention import attn_apply, attn_init
+from repro.models.layers import ffn_apply, ffn_init
 from repro.models.transformer import Runtime, forward, model_init
 
 _P = 0.25
@@ -37,9 +40,13 @@ def _small_cfg(**kw):
     return ModelConfig(**base)
 
 
-@pytest.mark.parametrize("site", ["xla", "qkv", "prev_gemm"])
+@pytest.mark.parametrize("site", ["xla", "qkv", "prev_gemm", "ffn_up",
+                                  "ffn_down", "auto"])
 def test_sites_bit_identical(rng_key, site):
-    """Same (seed, salt, layer, step) -> same bits, wherever produced."""
+    """Same (seed, salt, layer, step) -> same bits, wherever produced —
+    including the FFN-hosted sites (through the real ffn_apply hosting
+    path) and the auto-resolved site."""
+    cfg = _small_cfg()
     plan = _plan(site)
     b, h, s = 2, 2, 128
     layer, step = 3, 7
@@ -53,12 +60,28 @@ def test_sites_bit_identical(rng_key, site):
         _, got, how = producer.gemm_with_mask(
             x2d, w, plan, (b, h, s, s), layer, step)
         assert how == producer.HOW_GEMM
-    else:
+    elif site == "prev_gemm":
         # prev_gemm: the mask rides under the PREVIOUS layer's out-proj
         out2d = jax.random.normal(rng_key, (b * s, 64), jnp.float32)
         w_o = jax.random.normal(rng_key, (64, 64), jnp.float32)
         _, got, _ = producer.gemm_with_mask(
             out2d, w_o, plan, (b, h, s, s), layer, step)
+    elif site in ("ffn_up", "ffn_down"):
+        # the mask rides under the previous layer's FFN up/down GEMM,
+        # through the real hosting path in layers.ffn_apply
+        fp = ffn_init(rng_key, cfg)
+        x = jax.random.normal(rng_key, (b, s, cfg.d_model), jnp.float32)
+        host = producer.FFNHost(plan=plan, site=site,
+                                mask_shape=(b, h, s, s),
+                                layer_idx=layer, step=step)
+        y, got = ffn_apply(fp, x, cfg, host=host)
+        assert y.shape == x.shape
+    else:  # auto: resolve, then produce at the chosen host GEMM
+        resolved = producer.resolve_plan(plan, cfg, b, s, fuse_ok=True)
+        assert resolved.site in producer.DROPOUT_SITES
+        assert resolved.site != "auto"
+        got = producer.standalone_packed_mask(
+            resolved, b, h, s, s, layer, step)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
@@ -110,23 +133,66 @@ def test_region3_fallback_bits(rng_key):
 
 
 @pytest.mark.parametrize("remat", ["none", "block"])
-def test_forward_prev_gemm_pipeline_matches_xla_site(rng_key, remat):
-    """End-to-end: the carried-buffer pipeline (layer l+1's mask under
-    layer l's out-proj) must reproduce the per-layer XLA site exactly —
-    identical masks -> identical logits."""
+@pytest.mark.parametrize("site", ["prev_gemm", "ffn_up", "ffn_down",
+                                  "auto"])
+def test_forward_carried_pipeline_matches_xla_site(rng_key, site, remat):
+    """End-to-end: every carried-buffer pipeline (layer l+1's mask under
+    layer l's out-proj or FFN up/down GEMM) and the auto-resolved host
+    must reproduce the per-layer XLA site exactly — identical masks ->
+    identical logits."""
     cfg = _small_cfg(n_layers=3)
     params = model_init(rng_key, cfg)
     tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 64), 0,
                                 cfg.vocab_size)
 
-    def run(site):
-        rt = Runtime(plan=_plan(site), step=4, remat=remat)
+    def run(site_):
+        rt = Runtime(plan=_plan(site_), step=4, remat=remat)
         logits, _ = jax.jit(
             lambda pr, t: forward(pr, cfg, rt, t))(params, tokens)
         return logits
 
     np.testing.assert_array_equal(np.asarray(run("xla")),
-                                  np.asarray(run("prev_gemm")))
+                                  np.asarray(run(site)))
+
+
+@pytest.mark.parametrize("site", ["ffn_up", "ffn_down", "auto"])
+def test_forward_ffn_sites_pallas_match_xla(rng_key, site):
+    """The physically-fused FFN hosts (impl="pallas": flash attention +
+    fused producer GEMMs) must match the XLA producer site under the same
+    impl bit-for-bit on logits (f32 host GEMM, same mask bits — only the
+    mask's physical producer moves)."""
+    cfg = _small_cfg(n_layers=2)
+    params = model_init(rng_key, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (1, 128), 0,
+                                cfg.vocab_size)
+
+    def run(site_):
+        rt = Runtime(plan=_plan(site_), step=0, attn_impl="pallas")
+        logits, _ = forward(params, cfg, rt, tokens)
+        return logits
+
+    np.testing.assert_array_equal(np.asarray(run("xla")),
+                                  np.asarray(run(site)))
+
+
+def test_forward_ffn_site_geglu_and_gelu(rng_key):
+    """FFN hosting covers the GEGLU gate+up concat and the plain-GELU
+    single up GEMM, not just SwiGLU."""
+    for ffn in (FFNKind.GEGLU, FFNKind.GELU):
+        cfg = _small_cfg(n_layers=2, ffn=ffn)
+        params = model_init(rng_key, cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 64), 0,
+                                    cfg.vocab_size)
+
+        def run(site):
+            rt = Runtime(plan=_plan(site), step=2)
+            logits, _ = forward(params, cfg, rt, tokens)
+            return logits
+
+        np.testing.assert_array_equal(np.asarray(run("xla")),
+                                      np.asarray(run("ffn_up")))
+        np.testing.assert_array_equal(np.asarray(run("xla")),
+                                      np.asarray(run("ffn_down")))
 
 
 def test_forward_qkv_site_pallas_runs(rng_key):
@@ -161,7 +227,10 @@ def test_mixed_pattern_prev_gemm_degrades(rng_key):
 
 
 @pytest.mark.parametrize("site,impl", [("qkv", "pallas"),
-                                       ("prev_gemm", "pallas")])
+                                       ("prev_gemm", "pallas"),
+                                       ("ffn_up", "pallas"),
+                                       ("ffn_down", "pallas"),
+                                       ("auto", "pallas")])
 def test_train_step_grads_through_fused_sites(rng_key, site, impl):
     """Gradients must flow through the fused producer GEMMs (custom_vjp:
     dgrad pair; the integer mask carries a float0 cotangent) — and the
@@ -215,3 +284,95 @@ def test_site_validation():
                                                    site="qkv"))
     with pytest.raises(ValueError):
         _validate_dropout_plan(bad_mode)
+    for site in ("ffn_up", "ffn_down", "auto"):
+        _validate_dropout_plan(RunConfig(
+            model=cfg, shape=shape,
+            dropout=DropoutPlanConfig(mode="overlap", site=site)))
+    bad_dtype = RunConfig(model=cfg, shape=shape,
+                          dropout=DropoutPlanConfig(mode="overlap",
+                                                    site="qkv",
+                                                    gemm_dtype="int4"))
+    with pytest.raises(ValueError):
+        _validate_dropout_plan(bad_dtype)
+
+
+def test_auto_site_picks_largest_headroom():
+    """site="auto" must pick the FFN up GEMM for a gated-FFN dense block
+    (the block's largest GEMM = most Region-1 headroom) and degrade to
+    "xla" when the fused kernels are unavailable."""
+    cfg = _small_cfg()
+    plan = _plan("auto")
+    assert producer.pick_host_site(cfg, plan, 2, 128) == "ffn_up"
+    assert producer.pick_host_site(cfg, plan, 2, 128,
+                                   fuse_ok=False) == "xla"
+    # philox_bits=8 is an XLA-only scheme: auto must not pick a kernel
+    assert producer.pick_host_site(cfg, _plan("auto", philox_bits=8),
+                                   2, 128) == "xla"
+
+
+def test_standalone_kernel_keeps_512_only_shapes():
+    """The fused hosts partition mask columns in 2048 blocks, but the
+    standalone philox kernel only needs 512 — a 512-aligned sk that
+    misses 2048 alignment must stay on the standalone kernel, not
+    degrade to XLA."""
+    plan = _plan("qkv")
+    sq, sk = 128, 2560  # 2560 % 512 == 0, 2560 % 2048 != 0
+    assert producer.mask_kernel_unsupported_reason(
+        plan, sq, sk, fused=False) is None
+    assert producer.mask_kernel_unsupported_reason(
+        plan, sq, sk, fused=True) is not None
+    producer.drain_trace_events()
+    got = producer.standalone_packed_mask(plan, 1, 1, sq, sk, 0, 0,
+                                          use_kernel=True)
+    # no fallback event: the standalone kernel itself produced the bits
+    assert not producer.drain_trace_events()
+    want = philox_mask_ref(1, 1, sq, sk, _P, int(plan.step_seed(0)),
+                           int(plan.salt(0)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fallback_tags_are_observable():
+    """Satellite bugfix: a fused call site silently losing its kernel
+    (e.g. a philox_bits=8 plan) must leave a trace event carrying the
+    HOW_* tag so train/loop logging can surface the regression."""
+    producer.drain_trace_events()
+    plan8 = _plan("qkv", philox_bits=8)
+    b, h, s = 1, 2, 128
+    x2d = jnp.ones((b * s, 64), jnp.float32)
+    w = jnp.ones((64, 192), jnp.float32)
+    _, _, how = producer.gemm_with_mask(
+        x2d, w, plan8, (b, h, s, s), 0, 0)
+    assert how == producer.HOW_XLA
+    events = producer.drain_trace_events()
+    assert any(e[1] == producer.HOW_XLA and "philox_bits=8" in e[3]
+               for e in events), events
+    # the standalone producer records the same loss at fused call sites
+    producer.standalone_packed_mask(plan8, b, h, s, s, 0, 0,
+                                    use_kernel=True)
+    events = producer.drain_trace_events()
+    assert any("philox_bits=8" in e[3] for e in events), events
+
+
+def test_trace_events_logged_from_train_loop(rng_key, caplog):
+    """The train loop surfaces the producer decisions as log records."""
+    import logging
+
+    from repro.config.base import (RunConfig, ShapeConfig, ShardingConfig,
+                                   StepKind, TrainConfig)
+    from repro.train.loop import init_train_state, make_train_step
+    cfg = _small_cfg()
+    run = RunConfig(
+        model=cfg, shape=ShapeConfig("t", 128, 1, StepKind.TRAIN),
+        dropout=DropoutPlanConfig(mode="overlap", p=_P, seed=_SEED,
+                                  site="ffn_up"),
+        sharding=ShardingConfig(attn_impl="pallas"),
+        train=TrainConfig())
+    x = jax.random.randint(jax.random.PRNGKey(1), (1, 128), 0,
+                           cfg.vocab_size)
+    y = jax.random.randint(jax.random.PRNGKey(2), (1, 128), 0,
+                           cfg.vocab_size)
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    with caplog.at_level(logging.INFO, logger="repro.train"):
+        jax.jit(make_train_step(cfg, run))(state, x, y)
+    assert any("dropout mask producer" in r.message
+               for r in caplog.records), caplog.records
