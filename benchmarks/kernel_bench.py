@@ -219,6 +219,30 @@ def block_json_records() -> list:
     return records
 
 
+def block_schedule_summaries() -> dict:
+    """Resolved per-layer dropout schedules for the bench block shape —
+    embedded in BENCH_block.json so every perf record is attributable to
+    the concrete host assignments that produced it across PRs."""
+    from repro.config.base import (AttentionKind, DropoutPlanConfig,
+                                   ModelConfig)
+    from repro.core.schedule import compile_schedule
+
+    B, H, S, D, FF = 1, 4, 256, 512, 1024
+    cfg = ModelConfig(
+        name="bench-block", family="dense", n_layers=2, d_model=D,
+        n_heads=H, n_kv_heads=H, d_ff=FF, vocab_size=256,
+        head_dim=D // H, block_pattern=(AttentionKind.FULL,),
+        attn_dropout=0.1)
+    out = {}
+    for site in ("xla", "qkv", "prev_gemm", "ffn_up", "ffn_down",
+                 "auto"):
+        sched = compile_schedule(
+            cfg, DropoutPlanConfig(mode="overlap", p=0.1, site=site),
+            B, S, attn_impl="pallas")
+        out[site] = sched.summary()
+    return out
+
+
 def bench_wkv() -> List[Row]:
     """Chunked WKV vs naive recurrence (throughput substrate for rwkv6)."""
     from repro.models.rwkv import wkv_chunked, wkv_step

@@ -75,13 +75,16 @@ def write_block_json(path: str) -> None:
 
     from benchmarks import kernel_bench
     payload = {
-        "schema": "bench_block/v1",
+        "schema": "bench_block/v2",
         "backend": jax.devices()[0].platform,
         "python": platform.python_version(),
         "jax": jax.__version__,
         "note": ("interpret-mode op-count trends on CPU; TPU wall time "
                  "comes from the perf model / dry-run roofline"),
         "records": kernel_bench.block_json_records(),
+        # the compiled per-layer schedule behind each site's records —
+        # perf numbers stay attributable to concrete host assignments
+        "schedules": kernel_bench.block_schedule_summaries(),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

@@ -4,6 +4,11 @@ dropout_rng — counter-based Philox mask generation (XLA path), bit-exact
               with the Pallas kernels.
 overlap     — DropoutPlan: decides where RNG runs (fused vs overlapped
               with producer GEMMs) and threads seeds/salts.
+schedule    — compile_schedule: plan → compile → execute; freezes every
+              per-layer host assignment into a hashable DropoutSchedule
+              ahead of trace (mixed-pattern carries, shard-local hosts).
+producer    — the physical mask producers the schedule's HOW_* tags
+              select (fused GEMM+RNG, standalone kernel, XLA ops).
 attention   — attention cores consuming the plan (chunked XLA, Pallas
               flash, decode).
 """
@@ -13,9 +18,17 @@ from repro.core.attention import (
     attention_xla,
 )
 from repro.core.overlap import DropoutPlan, plan_from_config
+from repro.core.schedule import (
+    DropoutSchedule,
+    HostAssignment,
+    compile_schedule,
+)
 
 __all__ = [
     "DropoutPlan",
+    "DropoutSchedule",
+    "HostAssignment",
+    "compile_schedule",
     "plan_from_config",
     "attention_decode",
     "attention_pallas",

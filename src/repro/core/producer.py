@@ -1,49 +1,47 @@
-"""Producer-site RNG scheduler — decides WHERE each layer's packed dropout
-mask is physically generated, and runs the producer GEMM when the site is
-kernel-fused.
+"""Producer-site RNG executors — the physical mask producers behind the
+compiled DropoutSchedule (core/schedule.py).
 
 The paper hides dropout RNG under producer GEMMs (QKV projection, the
 previous layer's out-projection, or — in the regime the paper actually
 benchmarks — the FFN up/down projections, the largest GEMMs in the block).
-This module is the single place that scheduling decision lives: the model
-passes it a producer GEMM plus the mask shape, and gets back the GEMM
-result, the packed mask, and a static tag saying where the bits actually
-came from:
+Since the schedule redesign, the DECISION of where each layer's mask is
+generated is made once, ahead of trace, by ``compile_schedule``; this
+module holds the shared capability predicates the compiler consults and
+the executors the model calls with the planned ``how``:
 
   "gemm_rng"   — inside the fused GEMM+RNG Pallas kernel (MXU ∥ VPU),
                  f32/bf16 operands or the per-tile-scaled fp8(e4m3) path
   "standalone" — the standalone philox Pallas kernel (paper Region 3:
                  the GEMM could not host the RNG, the remainder runs
                  exposed — but still producer-side, before attention)
-  "xla"        — XLA-generated bits (non-Pallas path / sharded path /
-                 8-bit Philox scheme, which only the XLA producer knows)
+  "xla"        — XLA-generated bits (non-Pallas path / 8-bit Philox
+                 scheme, which only the XLA producer knows)
+
+With a sharding policy installed, the kernel producers run SHARD-LOCAL
+inside ``compat.shard_map``: each shard generates its (b_loc, h_loc)
+tile of the mask plane under its slice of the host GEMM. The Philox
+counter scheme is position-based (philox_common.global_bh), so
+shard-local bits equal the global mask's slice exactly.
 
 Every producer is bit-identical for the same (seed, salt, layer, step) —
 the invariant the sites ablation and checkpoint-restart reproducibility
-rest on — and the bits never depend on the host GEMM's dtype. Sharded
-fused projections (running the fused kernel inside shard_map) are a
-ROADMAP follow-on; with a sharding policy installed the scheduler
-currently degrades to the XLA producer.
+rest on — and the bits never depend on the host GEMM's dtype.
 
-Scheduling decisions are static (they resolve at trace time), so they are
-recorded into a trace-event log (``drain_trace_events``) that the train
-loop surfaces — a silent Region-3 or philox_bits=8 fallback at a fused
-call site is a host-selection regression someone should see.
+Scheduling telemetry lives on the compiled schedule itself
+(``DropoutSchedule.records`` / ``explain``), not in a mutable module
+global: records attached to the artifact cannot double-count under jit
+retraces and are trace-safe by construction.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
-from repro.config.base import (
-    CARRIED_DROPOUT_SITES,
-    DROPOUT_SITES,
-    GEMM_DTYPES,
-    FFNKind,
-    ModelConfig,
-)
+from repro.compat import shard_map
+from repro.config.base import FFNKind, ModelConfig
 from repro.core import dropout_rng
 from repro.core.overlap import DropoutPlan
 
@@ -64,29 +62,7 @@ _DTYPE_BYTES = {"f32": 4, "bf16": 2, "fp8": 1}
 
 
 # --------------------------------------------------------------------------
-# trace-event log (static scheduling decisions, surfaced by train/loop.py)
-# --------------------------------------------------------------------------
-
-_TRACE_EVENTS: List[Tuple[str, str, str, str]] = []
-_TRACE_CAP = 256
-
-
-def _record(site: str, how: str, gemm_dtype: str, note: str = "") -> None:
-    if len(_TRACE_EVENTS) < _TRACE_CAP:
-        _TRACE_EVENTS.append((str(site), how, gemm_dtype, note))
-
-
-def drain_trace_events() -> List[Tuple[str, str, str, str]]:
-    """Return and clear the recorded (site, how, gemm_dtype, note)
-    scheduling decisions. Decisions are recorded at trace time — drain
-    after the first (tracing) call of a jit'd step."""
-    events = list(_TRACE_EVENTS)
-    _TRACE_EVENTS.clear()
-    return events
-
-
-# --------------------------------------------------------------------------
-# capability predicate (THE one guard, used by every call site)
+# capability predicates (shared with the schedule compiler)
 # --------------------------------------------------------------------------
 
 def _largest_divisor(dim: int, cap: int) -> int:
@@ -134,107 +110,264 @@ def mask_kernel_unsupported_reason(plan: DropoutPlan, sq: int, sk: int,
 
 
 # --------------------------------------------------------------------------
+# shard-local execution context
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardExec:
+    """Live mesh context for shard-local producers, rebuilt from the
+    installed ShardingPolicy at execute time (the compiled schedule
+    carries only the hashable ShardInfo distillation)."""
+    mesh: Any
+    batch_axes: Tuple[str, ...]
+    head_axes: Tuple[str, ...]
+    batch_shards: int
+    head_shards: int
+
+    def _spec_axes(self, axes: Tuple[str, ...]):
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    @property
+    def b_spec(self):
+        return self._spec_axes(self.batch_axes)
+
+    @property
+    def h_spec(self):
+        return self._spec_axes(self.head_axes)
+
+
+def shard_exec(policy, batch: int, n_heads: int) -> Optional[ShardExec]:
+    """Shard-local context for a (batch, n_heads) mask plane under
+    ``policy``, or None when no mesh axis divides either dim (the
+    schedule then plans XLA production and GSPMD shards it)."""
+    if policy is None:
+        return None
+    from repro.distributed.sharding import mask_plane_shards
+    (b_axes, nb), (h_axes, nh) = mask_plane_shards(policy, batch,
+                                                   n_heads)
+    if nb * nh == 1:
+        return None
+    return ShardExec(mesh=policy.mesh, batch_axes=b_axes, head_axes=h_axes,
+                     batch_shards=nb, head_shards=nh)
+
+
+def _flat_axis_index(axes: Tuple[str, ...], mesh) -> jnp.ndarray:
+    """Flattened (row-major) index of this shard along ``axes``."""
+    idx = jnp.zeros((), jnp.uint32)
+    for a in axes:
+        idx = idx * jnp.uint32(mesh.shape[a]) + jax.lax.axis_index(
+            a).astype(jnp.uint32)
+    return idx
+
+
+# --------------------------------------------------------------------------
 # producers
 # --------------------------------------------------------------------------
 
 def standalone_packed_mask(plan: DropoutPlan, batch: int, n_heads: int,
                            sq: int, sk: int, layer_idx, step,
-                           use_kernel: bool = True) -> jnp.ndarray:
+                           use_kernel: bool = True,
+                           policy=None) -> jnp.ndarray:
     """Packed mask from a producer-side standalone generator: the philox
     Pallas kernel when it can represent the plan, else the XLA producer.
-    Used for the Region-3 remainder and to bootstrap the first layer of
-    the carried-site pipelines (no previous GEMM exists yet)."""
+    Used for the Region-3 remainder and to bootstrap the first consumer
+    of the carried-site pipelines (no previous GEMM exists yet). With a
+    policy installed the kernel runs shard-local (per-shard (b, h) tile,
+    identical bits)."""
     seed = plan.step_seed(step)
     salt = plan.salt(layer_idx)
     reason = mask_kernel_unsupported_reason(plan, sq, sk, fused=False)
     if use_kernel and reason is None:
         from repro.kernels import ops
-        return ops.dropout_mask(batch, n_heads, sq, sk, plan.cfg.p,
-                                seed, salt, plan.cfg.philox_rounds)
-    if use_kernel and reason is not None:
-        # a fused call site asked for the kernel and silently lost it —
-        # make that visible (e.g. philox_bits=8 plans, odd shapes)
-        _record(plan.site, HOW_XLA, plan.gemm_dtype,
-                f"standalone fallback: {reason}")
+        shard = shard_exec(policy, batch, n_heads)
+        if shard is None:
+            return ops.dropout_mask(batch, n_heads, sq, sk, plan.cfg.p,
+                                    seed, salt, plan.cfg.philox_rounds)
+        from jax.sharding import PartitionSpec as P
+        b_loc = batch // shard.batch_shards
+        h_loc = n_heads // shard.head_shards
+
+        def body(sd_, sl_):
+            b0 = _flat_axis_index(shard.batch_axes, shard.mesh) \
+                * jnp.uint32(b_loc)
+            h0 = _flat_axis_index(shard.head_axes, shard.mesh) \
+                * jnp.uint32(h_loc)
+            off = b0 * jnp.uint32(n_heads) + h0
+            return ops.dropout_mask(
+                b_loc, h_loc, sq, sk, plan.cfg.p, sd_, sl_,
+                plan.cfg.philox_rounds, heads_global=n_heads,
+                bh_offset=off)
+
+        return shard_map(
+            body, mesh=shard.mesh, in_specs=(P(), P()),
+            out_specs=P(shard.b_spec, shard.h_spec, None, None),
+            check_vma=False,
+        )(jnp.asarray(seed, jnp.uint32), jnp.asarray(salt, jnp.uint32))
     return dropout_rng.packed_mask(
         batch, n_heads, sq, sk, plan.cfg.p, seed, salt,
         plan.cfg.philox_rounds, plan.cfg.philox_bits)
 
 
+def _fused_gemm_call(x2d, w2d, plan, mask_shape, seed, salt, blocks,
+                     gemm_dtype, heads_global=0, bh_offset=0):
+    """One fused GEMM+RNG kernel invocation in the plan's host dtype.
+    Returns (y2d, mask-or-None, effective_dtype)."""
+    from repro.kernels import ops
+    batch, n_heads, sq, sk = mask_shape
+    bm, bn, bk = blocks
+    if gemm_dtype == "fp8":
+        from repro.kernels import quant
+        if quant.have_fp8():
+            y, mask = ops.fused_gemm_rng_fp8(
+                x2d, w2d, mask_batch=batch, mask_heads=n_heads,
+                mask_sq=sq, mask_sk=sk, p=plan.cfg.p, seed=seed,
+                salt=salt, rounds=plan.cfg.philox_rounds, block_m=bm,
+                block_n=bn, block_k=bk, heads_global=heads_global,
+                bh_offset=bh_offset)
+            return y, mask, "fp8"
+        gemm_dtype = "f32"      # fp8 unavailable in this build: f32 host
+    a = x2d.astype(jnp.bfloat16) if gemm_dtype == "bf16" else x2d
+    w = w2d.astype(jnp.bfloat16) if gemm_dtype == "bf16" else w2d
+    y, mask = ops.fused_qkv_gemm_rng(
+        a, w, mask_batch=batch, mask_heads=n_heads, mask_sq=sq,
+        mask_sk=sk, p=plan.cfg.p, seed=seed, salt=salt,
+        rounds=plan.cfg.philox_rounds, block_m=bm, block_n=bn,
+        block_k=bk, heads_global=heads_global, bh_offset=bh_offset)
+    if gemm_dtype == "bf16":
+        y = y.astype(x2d.dtype)
+    return y, mask, gemm_dtype
+
+
 def gemm_with_mask(x2d: jnp.ndarray, w2d: jnp.ndarray, plan: DropoutPlan,
                    mask_shape: Tuple[int, int, int, int], layer_idx, step,
-                   allow_fused: bool = True
+                   allow_fused: bool = True, how: Optional[str] = None,
+                   policy=None
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, str]:
     """y = x2d @ w2d with the packed mask for ``mask_shape`` = (B, H, SQ,
-    SK) produced at this GEMM. Returns (y2d, mask, how) with ``how`` a
-    static tag (see module docstring).
+    SK) produced at this GEMM. Returns (y2d, mask, how) with ``how`` the
+    realized producer tag (see module docstring).
 
+    ``how`` is the schedule's planned producer (HOW_GEMM /
+    HOW_STANDALONE / HOW_XLA); None derives it locally from the same
+    capability predicates the compiler uses (direct calls, benches).
     ``plan.gemm_dtype`` selects the fused GEMM's operand precision:
     "f32" | "bf16" run the standard fused kernel (f32 accumulation);
     "fp8" runs the per-tile-scaled e4m3 kernel — same mask bits, GEMM
     within the documented quantization error bound (kernels/quant.py).
 
+    With ``policy`` installed and a kernel ``how``, the fused call runs
+    shard-local: GEMM rows follow the batch shards, the mask tile
+    follows the (batch, heads) shards, bits match the global mask's
+    slice exactly (position-based counters).
+
     allow_fused=False forces the XLA producer (used when the GEMM itself
-    must stay an XLA op: impl="xla", or a sharding policy is installed and
-    the fused kernel cannot yet run shard-local).
-    """
+    must stay an XLA op: impl="xla")."""
     batch, n_heads, sq, sk = mask_shape
     m, kdim = x2d.shape
     n = w2d.shape[1]
     gemm_dtype = plan.gemm_dtype
-    blocks = pick_gemm_blocks(m, n, kdim) if allow_fused else None
-    reason = mask_kernel_unsupported_reason(plan, sq, sk)
-    fp8_ok = True
-    if gemm_dtype == "fp8":
-        from repro.kernels import quant
-        fp8_ok = quant.have_fp8()
-    if not allow_fused or blocks is None or reason is not None:
+    if how is None:
+        blocks = pick_gemm_blocks(m, n, kdim) if allow_fused else None
+        reason = mask_kernel_unsupported_reason(plan, sq, sk)
+        how = (HOW_GEMM if (blocks is not None and reason is None)
+               else HOW_XLA)
+    if how == HOW_XLA:
         y = x2d @ w2d
         mask = dropout_rng.packed_mask(
             batch, n_heads, sq, sk, plan.cfg.p, plan.step_seed(step),
             plan.salt(layer_idx), plan.cfg.philox_rounds,
             plan.cfg.philox_bits)
-        note = (reason or
-                ("fused disabled at call site" if not allow_fused
-                 else f"GEMM ({m},{n},{kdim}) does not tile"))
-        _record(plan.site, HOW_XLA, gemm_dtype, note)
         return y, mask, HOW_XLA
 
-    from repro.kernels import ops
-    bm, bn, bk = blocks
+    shard = shard_exec(policy, batch, n_heads)
+    if shard is not None:
+        return _gemm_with_mask_sharded(x2d, w2d, plan, mask_shape,
+                                       layer_idx, step, shard)
+
+    blocks = pick_gemm_blocks(m, n, kdim)
+    if blocks is None:
+        # planned a kernel host on an untileable GEMM — only reachable
+        # from direct calls that bypass the compiler; degrade like it
+        # would have planned
+        return gemm_with_mask(x2d, w2d, plan, mask_shape, layer_idx,
+                              step, how=HOW_XLA)
     seed = plan.step_seed(step)
     salt = plan.salt(layer_idx)
-    if gemm_dtype == "fp8" and fp8_ok:
-        y, mask = ops.fused_gemm_rng_fp8(
-            x2d, w2d, mask_batch=batch, mask_heads=n_heads, mask_sq=sq,
-            mask_sk=sk, p=plan.cfg.p, seed=seed, salt=salt,
-            rounds=plan.cfg.philox_rounds, block_m=bm, block_n=bn,
-            block_k=bk)
-    else:
-        if gemm_dtype == "fp8":  # dtype requested but unavailable: gate
-            gemm_dtype = "f32"   # record what actually hosted the GEMM
-            _record(plan.site, HOW_GEMM, gemm_dtype,
-                    "fp8 unavailable in this JAX build; f32 host")
-        a = x2d.astype(jnp.bfloat16) if gemm_dtype == "bf16" else x2d
-        w = w2d.astype(jnp.bfloat16) if gemm_dtype == "bf16" else w2d
-        y, mask = ops.fused_qkv_gemm_rng(
-            a, w, mask_batch=batch, mask_heads=n_heads, mask_sq=sq,
-            mask_sk=sk, p=plan.cfg.p, seed=seed,
-            salt=salt, rounds=plan.cfg.philox_rounds,
-            block_m=bm, block_n=bn, block_k=bk)
-        if gemm_dtype == "bf16":
-            y = y.astype(x2d.dtype)
+    y, mask, _dt = _fused_gemm_call(x2d, w2d, plan, mask_shape, seed,
+                                    salt, blocks, gemm_dtype)
     if mask is None:
         # Region 3: the GEMM grid is too small to hide this much RNG;
-        # the remainder runs exposed in the standalone kernel.
+        # the remainder runs exposed in the standalone kernel. The
+        # schedule plans this (HOW_STANDALONE); the kernel's own layout
+        # check stays authoritative at run time.
         mask = standalone_packed_mask(plan, batch, n_heads, sq, sk,
                                       layer_idx, step)
-        _record(plan.site, HOW_STANDALONE, gemm_dtype,
-                f"Region 3: GEMM ({m},{n},{kdim}) too small for "
-                f"{batch}x{n_heads}x{sq}x{sk} mask")
         return y, mask, HOW_STANDALONE
-    _record(plan.site, HOW_GEMM, gemm_dtype, "")
     return y, mask, HOW_GEMM
+
+
+def _gemm_with_mask_sharded(x2d, w2d, plan, mask_shape, layer_idx, step,
+                            shard: ShardExec
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray, str]:
+    """Shard-local fused GEMM+RNG: each shard runs the Pallas kernel on
+    its batch rows of the GEMM and generates its (b_loc, h_loc) tile of
+    the mask plane (global-position counters, bit-exact slices). The
+    GEMM result is replicated across head-only mesh axes — those shards
+    redundantly compute identical rows, which the fsdp training layout
+    (batch over every axis) never hits."""
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels import ops
+    batch, n_heads, sq, sk = mask_shape
+    b_loc = batch // shard.batch_shards
+    h_loc = n_heads // shard.head_shards
+    m, kdim = x2d.shape
+    n = w2d.shape[1]
+    m_loc = m // shard.batch_shards
+    blocks = pick_gemm_blocks(m_loc, n, kdim)
+    # Region 3 is a static property of (local GEMM grid, local mask):
+    # decide the realized producer here so the returned tag matches
+    # what the body actually does (the unsharded path's semantics)
+    fused = False
+    if blocks is not None:
+        from repro.kernels.gemm_rng import mask_layout_feasible
+        bm, bn, _bk = blocks
+        fused = mask_layout_feasible((m_loc // bm) * (n // bn), b_loc,
+                                     h_loc, sq, sk)
+    seed = jnp.asarray(plan.step_seed(step), jnp.uint32)
+    salt = jnp.asarray(plan.salt(layer_idx), jnp.uint32)
+    xs = P(shard.b_spec, None)
+    ms = P(shard.b_spec, shard.h_spec, None, None)
+
+    def body(x_, w_, sd_, sl_):
+        b0 = _flat_axis_index(shard.batch_axes, shard.mesh) \
+            * jnp.uint32(b_loc)
+        h0 = _flat_axis_index(shard.head_axes, shard.mesh) \
+            * jnp.uint32(h_loc)
+        off = b0 * jnp.uint32(n_heads) + h0
+        local_shape = (b_loc, h_loc, sq, sk)
+        if fused:
+            y, mask, _dt = _fused_gemm_call(
+                x_, w_, plan, local_shape, sd_, sl_, blocks,
+                plan.gemm_dtype, heads_global=n_heads, bh_offset=off)
+        else:
+            y = x_ @ w_ if blocks is None else _fused_gemm_call(
+                x_, w_, plan, local_shape, sd_, sl_, blocks,
+                plan.gemm_dtype, heads_global=n_heads, bh_offset=off)[0]
+            mask = None
+        if mask is None:        # Region 3, shard-local remainder
+            mask = ops.dropout_mask(
+                b_loc, h_loc, sq, sk, plan.cfg.p, sd_, sl_,
+                plan.cfg.philox_rounds, heads_global=n_heads,
+                bh_offset=off)
+        return y, mask
+
+    y, mask = shard_map(
+        body, mesh=shard.mesh, in_specs=(xs, P(None, None), P(), P()),
+        out_specs=(xs, ms), check_vma=False,
+    )(x2d, w2d, seed, salt)
+    return y, mask, HOW_GEMM if fused else HOW_STANDALONE
 
 
 # --------------------------------------------------------------------------
@@ -245,14 +378,16 @@ def gemm_with_mask(x2d: jnp.ndarray, w2d: jnp.ndarray, plan: DropoutPlan,
 class FFNHost:
     """Instruction to models/layers.ffn_apply to host the mask producer
     under one of its GEMMs. ``layer_idx`` is the CONSUMER layer (the
-    transformer passes l+1: the mask rides the carried scan buffer to the
-    next attention layer)."""
+    transformer passes the next attention layer: the mask rides the
+    carried scan buffer there). ``how`` is the schedule's planned
+    producer for the emission; ``policy`` enables shard-local runs."""
     plan: DropoutPlan
     site: str                           # "ffn_up" | "ffn_down"
     mask_shape: Tuple[int, int, int, int]
     layer_idx: Any
     step: Any
-    allow_fused: bool = True
+    how: str = HOW_GEMM
+    policy: Any = None
 
 
 # --------------------------------------------------------------------------
@@ -279,68 +414,43 @@ def block_gemm_shapes(cfg: ModelConfig, batch: int, seq: int
     return shapes
 
 
-def pick_host_site(cfg: ModelConfig, plan: DropoutPlan, batch: int,
-                   seq: int, fuse_ok: bool = True, hw=None) -> str:
-    """Resolve site="auto" to a concrete host. Candidates are the block's
-    GEMMs that (a) tile for the fused kernel, (b) can legally host this
-    plan's mask, and (c) — for carried sites — sit in a uniform-attention
-    stack. Ranked by the Region-1 headroom estimate
-    (perfmodel.gemm_host_headroom): the GEMM with the most RNG-hiding
-    shadow wins. Falls back to "xla" when nothing qualifies."""
-    if not (plan.enabled and plan.overlapped):
-        return "xla"
-    reason = mask_kernel_unsupported_reason(plan, seq, seq)
-    if not fuse_ok or reason is not None:
-        _record("auto", HOW_XLA, plan.gemm_dtype,
-                reason or "fused kernels unavailable "
-                          "(impl != pallas or sharded)")
-        return "xla"
+def rank_host_sites(cfg: ModelConfig, plan: DropoutPlan, batch: int,
+                    seq: int, hw=None, batch_shards: int = 1
+                    ) -> Tuple[Tuple[str, float], ...]:
+    """Tileable candidate host GEMMs ranked by the Region-1 headroom
+    estimate (perfmodel.rank_host_gemms), best first. ``batch_shards``
+    shrinks the GEMM rows to the per-shard size when the host will run
+    shard-local."""
     from repro.perfmodel.hardware import TPU_V5E
-    from repro.perfmodel.model import gemm_host_headroom
-    hw = hw or TPU_V5E
-    uniform_attn = all(
-        k.value in ("full", "local") for k in cfg.layer_kinds())
+    from repro.perfmodel.model import rank_host_gemms
     mask_elems = float(batch) * cfg.n_heads * seq * seq
     dtype_bytes = _DTYPE_BYTES.get(plan.gemm_dtype, 4)
-    scores: Dict[str, float] = {}
+    shapes = {}
     for site, (m, n, k) in block_gemm_shapes(cfg, batch, seq).items():
-        if site in CARRIED_DROPOUT_SITES and not uniform_attn:
-            continue
-        if pick_gemm_blocks(m, n, k) is None:
-            continue
-        scores[site] = gemm_host_headroom(
-            m, n, k, mask_elems, hw=hw, rounds=plan.cfg.philox_rounds,
-            dtype_bytes=dtype_bytes)
-    if not scores:
-        _record("auto", HOW_XLA, plan.gemm_dtype, "no tileable host GEMM")
+        m_loc = m // batch_shards
+        if pick_gemm_blocks(m_loc, n, k) is not None:
+            shapes[site] = (m_loc, n, k)
+    if not shapes:
+        return ()
+    return rank_host_gemms(shapes, mask_elems, hw=hw or TPU_V5E,
+                           rounds=plan.cfg.philox_rounds,
+                           dtype_bytes=dtype_bytes)
+
+
+def pick_host_site(cfg: ModelConfig, plan: DropoutPlan, batch: int,
+                   seq: int, fuse_ok: bool = True, hw=None,
+                   batch_shards: int = 1) -> str:
+    """Resolve site="auto" to a concrete host. Candidates are the block's
+    GEMMs that (a) tile for the fused kernel and (b) can legally host
+    this plan's mask — carried sites qualify for ANY pattern with
+    attention layers now that the schedule routes masks to the next
+    attention layer. Ranked by Region-1 headroom: the GEMM with the most
+    RNG-hiding shadow wins. Falls back to "xla" when nothing qualifies."""
+    if not (plan.enabled and plan.overlapped):
         return "xla"
-    best = max(scores, key=lambda s: scores[s])
-    _record("auto", HOW_GEMM, plan.gemm_dtype,
-            f"resolved to {best} (headroom "
-            f"{scores[best] * 1e6:+.2f}us)")
-    return best
-
-
-def resolve_plan(plan: Optional[DropoutPlan], cfg: ModelConfig,
-                 batch: int, seq: int,
-                 fuse_ok: bool = True) -> Optional[DropoutPlan]:
-    """Return a plan whose site is concrete: site="auto" resolves via
-    pick_host_site; every other plan passes through unchanged."""
-    if plan is None or plan.site != "auto":
-        return plan
-    site = pick_host_site(cfg, plan, batch, seq, fuse_ok=fuse_ok)
-    return DropoutPlan(dataclasses.replace(plan.cfg, site=site))
-
-
-def validate_site(site: str) -> None:
-    if site not in DROPOUT_SITES:
-        raise ValueError(
-            f"DropoutPlanConfig.site={site!r}; expected one of "
-            f"{DROPOUT_SITES}")
-
-
-def validate_gemm_dtype(gemm_dtype: str) -> None:
-    if gemm_dtype not in GEMM_DTYPES:
-        raise ValueError(
-            f"DropoutPlanConfig.gemm_dtype={gemm_dtype!r}; expected one "
-            f"of {GEMM_DTYPES}")
+    if not fuse_ok or mask_kernel_unsupported_reason(
+            plan, seq, seq) is not None:
+        return "xla"
+    ranked = rank_host_sites(cfg, plan, batch, seq, hw=hw,
+                             batch_shards=batch_shards)
+    return ranked[0][0] if ranked else "xla"

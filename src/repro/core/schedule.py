@@ -1,0 +1,552 @@
+"""Compiled per-layer dropout schedule: plan → compile → execute.
+
+The paper's claim is that dropout RNG can hide under *any* producer GEMM
+with headroom. A one-string knob (``DropoutPlanConfig.site``) resolved
+lazily inside the trace cannot express that: mixed-pattern stacks
+(Griffin's (R, R, A)) need per-layer consumer routing, sharded meshes
+need per-shard host planning, and serving-side mask reuse needs a stable
+mask identity — all static decisions, all previously scattered through
+trace-time branches in ``models/transformer.py`` / ``models/layers.py``.
+
+``compile_schedule`` makes every one of those decisions ONCE, ahead of
+trace, and freezes them into a hashable ``DropoutSchedule``: one
+``HostAssignment`` per layer recording which layer's mask is consumed,
+which GEMM site hosts its production, which physical producer realizes
+it (fused kernel / standalone kernel / XLA ops), whether production runs
+shard-local, and — when the fused kernel was NOT chosen — why. The model
+executes by schedule lookup; ``DropoutPlanConfig.site`` survives as
+sugar that compiles to a uniform schedule. ``explain()`` renders the
+whole plan for dry-runs and train-loop logs, so a silent Region-3 or
+philox_bits=8 fallback is visible before a single step runs.
+
+Scheduling follows the deterministic ahead-of-trace style of DASH
+(arXiv 2601.21824) and the schedule/execution split argued by the
+CUTLASS FlashAttention-2 case study (arXiv 2312.11918).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+from repro.config.base import (
+    CARRIED_DROPOUT_SITES,
+    AttentionKind,
+    DropoutPlanConfig,
+    FFNKind,
+    ModelConfig,
+)
+from repro.core import producer
+from repro.core.overlap import DropoutPlan
+
+HOW_GEMM = producer.HOW_GEMM
+HOW_STANDALONE = producer.HOW_STANDALONE
+HOW_XLA = producer.HOW_XLA
+
+_ATTN = (AttentionKind.FULL, AttentionKind.LOCAL)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardInfo:
+    """Hashable distillation of the sharding policy's mask-plane layout:
+    how many ways the mask's (b, h) dims split, and over which mesh axes.
+    Derived once by ``shard_info``; the execution layer rebuilds the live
+    mesh context from the installed policy (meshes don't hash)."""
+    batch_shards: int = 1
+    head_shards: int = 1
+    batch_axes: Tuple[str, ...] = ()
+    head_axes: Tuple[str, ...] = ()
+    policy_installed: bool = False
+
+    @property
+    def active(self) -> bool:
+        """True when shard-local production is worthwhile: some mask dim
+        actually splits over the mesh."""
+        return self.batch_shards * self.head_shards > 1
+
+
+def shard_info(policy, batch: int, n_heads: int) -> ShardInfo:
+    """Distill a ShardingPolicy into the mask plane's shard layout."""
+    if policy is None:
+        return ShardInfo()
+    from repro.distributed.sharding import mask_plane_shards
+    (b_axes, nb), (h_axes, nh) = mask_plane_shards(policy, batch,
+                                                   n_heads)
+    return ShardInfo(batch_shards=nb, head_shards=nh, batch_axes=b_axes,
+                     head_axes=h_axes, policy_installed=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class HostAssignment:
+    """One layer's slot in the compiled schedule.
+
+    Consumption side (this layer's OWN mask):
+      consumes — this layer applies attention-score dropout at all
+      site     — producer site class ("xla" | "qkv" | carried sites |
+                 "standalone" for the bootstrap / non-carried remainder)
+      producer — layer index hosting this layer's mask: ``layer`` for
+                 in-layer sites, the previous attention layer for
+                 carried sites, -1 for the standalone bootstrap
+      how      — planned physical producer (HOW_GEMM / HOW_STANDALONE /
+                 HOW_XLA)
+      sharded  — production runs shard-local inside compat.shard_map
+      reason   — why ``how`` degraded from the fused kernel ("" = fused
+                 or the site never targets the kernel)
+
+    Emission side (a DOWNSTREAM layer's mask hosted by this block):
+      emit_site   — which of this block's GEMMs hosts it (None = none)
+      emit_stride — consumer layer = this layer + emit_stride (0 = none)
+      emit_how    — planned physical producer of the emission
+      emit_reason — why the emission degraded ("" = fused)
+    """
+    layer: int
+    kind: str
+    consumes: bool = False
+    site: str = "none"
+    producer: int = -1
+    how: str = HOW_XLA
+    sharded: bool = False
+    reason: str = ""
+    emit_site: Optional[str] = None
+    emit_stride: int = 0
+    emit_how: str = ""
+    emit_reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class DropoutSchedule:
+    """Frozen, hashable artifact of ``compile_schedule``. Equality and
+    hash cover every scheduling decision, so the schedule can key jit
+    caches and serving-side mask caches, and "same inputs → same
+    schedule" is testable as plain object equality."""
+    model: str
+    plan: DropoutPlanConfig          # original plan (site may be "auto")
+    resolved_site: str               # concrete site after resolution
+    batch: int
+    seq: int
+    attn_impl: str
+    shard: ShardInfo
+    carried: bool
+    assignments: Tuple[HostAssignment, ...]
+    headroom: Tuple[Tuple[str, float], ...] = ()   # auto-ranking table
+
+    # ---------------------------------------------------------- lookup
+    @property
+    def active(self) -> bool:
+        """Overlap-mode plan with at least one mask consumer."""
+        return any(a.consumes for a in self.assignments)
+
+    @property
+    def sharded(self) -> bool:
+        return any(a.sharded for a in self.assignments)
+
+    @property
+    def first_consumer(self) -> int:
+        for a in self.assignments:
+            if a.consumes:
+                return a.layer
+        return -1
+
+    def for_layer(self, layer: int) -> HostAssignment:
+        return self.assignments[layer]
+
+    def mask_key(self, layer: int, step: int) -> Tuple[int, ...]:
+        """Canonical identity of one layer-step packed mask: (seed,
+        salt, layer, step) plus the plan knobs the bits depend on (keep
+        threshold, Philox rounds/width). Two schedules agreeing on this
+        key generate bit-identical masks whatever site/how/shard
+        produced them — the invariant serving-side mask reuse keys on;
+        plans differing only in host site or GEMM dtype share keys."""
+        from repro.kernels.philox_common import threshold_from_p
+        plan = DropoutPlan(self.plan)
+        return (int(plan.step_seed(int(step))),
+                int(plan.salt(int(layer))), int(layer), int(step),
+                threshold_from_p(self.plan.p), self.plan.philox_rounds,
+                self.plan.philox_bits)
+
+    # ------------------------------------------------------- telemetry
+    def records(self) -> Tuple[Tuple[str, str, str, str], ...]:
+        """Deduplicated (site, how, gemm_dtype, note) scheduling records
+        — the compiled replacement for the old mutable trace-event
+        global: attached to the artifact, identical across retraces."""
+        dtype = self.plan.gemm_dtype
+        seen, out = set(), []
+        for a in self.assignments:
+            rows = []
+            if a.consumes:
+                rows.append((a.site, a.how, dtype, a.reason))
+            if a.emit_site is not None:
+                rows.append((a.emit_site, a.emit_how, dtype,
+                             a.emit_reason))
+            for r in rows:
+                if r not in seen:
+                    seen.add(r)
+                    out.append(r)
+        return tuple(out)
+
+    def explain(self) -> str:
+        """Human-readable rendering of every per-layer decision — logged
+        by the train loop and printed by launch/dryrun.py so fallbacks
+        are visible before any step runs."""
+        p = self.plan
+        head = (f"dropout schedule: model={self.model} "
+                f"batch={self.batch} seq={self.seq} mode={p.mode} "
+                f"p={p.p} site={p.site}")
+        if p.site != self.resolved_site:
+            head += f" -> {self.resolved_site}"
+        head += (f" gemm_dtype={p.gemm_dtype} impl={self.attn_impl} "
+                 f"carried={'yes' if self.carried else 'no'}")
+        lines = [head]
+        if self.shard.policy_installed:
+            s = self.shard
+            lines.append(
+                f"  sharding: mask plane (b x h) = "
+                f"{s.batch_shards} x {s.head_shards} shards "
+                f"(batch axes {list(s.batch_axes)}, "
+                f"head axes {list(s.head_axes)}) -> "
+                + ("shard-local producers" if self.sharded
+                   else "replicated/XLA producers"))
+        for site, hr in self.headroom:
+            lines.append(f"  auto candidate {site}: "
+                         f"headroom {hr * 1e6:+.2f}us")
+        if not self.active:
+            lines.append("  inert: no attention-score dropout to "
+                         "schedule")
+            return "\n".join(lines)
+        for a in self.assignments:
+            if not a.consumes:
+                lines.append(f"  L{a.layer:<3d} {a.kind:<9s} -")
+                continue
+            src = ("bootstrap" if a.producer < 0
+                   else f"L{a.producer}" if a.producer != a.layer
+                   else "in-layer")
+            row = (f"  L{a.layer:<3d} {a.kind:<9s} "
+                   f"mask<-{src}:{a.site} how={a.how}")
+            if a.sharded:
+                row += " shard-local"
+            if a.reason:
+                row += f" ({a.reason})"
+            if a.emit_site is not None:
+                tgt = a.layer + a.emit_stride
+                tgt_s = f"L{tgt}" if tgt < len(self.assignments) \
+                    else "dropped"
+                row += (f" | emits->{tgt_s} under {a.emit_site} "
+                        f"how={a.emit_how}")
+                if a.emit_reason:
+                    row += f" ({a.emit_reason})"
+            lines.append(row)
+        return "\n".join(lines)
+
+    def summary(self) -> Dict:
+        """Machine-readable digest for BENCH_block.json / dry-run
+        reports: per-layer host assignments plus the knobs that chose
+        them, so perf records are attributable across PRs."""
+        return {
+            "model": self.model,
+            "site": self.plan.site,
+            "resolved_site": self.resolved_site,
+            "gemm_dtype": self.plan.gemm_dtype,
+            "philox_bits": self.plan.philox_bits,
+            "attn_impl": self.attn_impl,
+            "batch": self.batch,
+            "seq": self.seq,
+            "carried": self.carried,
+            "sharded": self.sharded,
+            "shards": [self.shard.batch_shards, self.shard.head_shards],
+            "layers": [
+                {"layer": a.layer, "kind": a.kind, "site": a.site,
+                 "producer": a.producer, "how": a.how,
+                 "sharded": a.sharded,
+                 **({"reason": a.reason} if a.reason else {}),
+                 **({"emit_site": a.emit_site,
+                     "emit_to": a.layer + a.emit_stride,
+                     "emit_how": a.emit_how} if a.emit_site else {})}
+                for a in self.assignments if a.consumes
+            ],
+        }
+
+
+# --------------------------------------------------------------------------
+# compilation
+# --------------------------------------------------------------------------
+
+def _next_attn_stride(kinds: Tuple[AttentionKind, ...], period: int,
+                      l: int) -> int:
+    """Distance from layer l to the next attention layer in the periodic
+    extension of the block pattern. For the last attention layer this
+    walks past n_layers (the scan compiles one body, so the tail
+    emission happens and is dropped — same as the uniform case)."""
+    for d in range(1, period + 1):
+        if kinds[(l + d) % period] in _ATTN:
+            return d
+    return 0
+
+
+def _host_gemm_shape(cfg: ModelConfig, batch: int, seq: int,
+                     site: str) -> Optional[Tuple[int, int, int]]:
+    """(m, n, k) of the GEMM class hosting ``site``, or None when the
+    block has no such GEMM (MoE / RWKV channel-mix FFNs)."""
+    shapes = producer.block_gemm_shapes(cfg, batch, seq)
+    return shapes.get(site)
+
+
+def _fused_capability(plan: DropoutPlan, cfg: ModelConfig, batch: int,
+                      seq: int, site: str, shard: ShardInfo,
+                      attn_impl: str) -> Tuple[str, bool, str]:
+    """Decide (how, sharded, reason) for hosting one mask under the
+    ``site`` GEMM of one block — the single ahead-of-trace capability
+    judgment replacing the old in-trace fuse_ok/allow_fused threading.
+
+    Shard-aware: with a policy installed the fused kernel runs
+    shard-local on the per-shard (b_loc, h_loc) mask slice and the
+    per-shard GEMM rows, so capability (tiling, Region 3) is judged on
+    LOCAL shapes. The position-based counter scheme keeps shard-local
+    bits exactly equal to the global mask's slice."""
+    if attn_impl != "pallas":
+        return HOW_XLA, False, "impl != pallas (no fused kernels)"
+    reason = producer.mask_kernel_unsupported_reason(plan, seq, seq)
+    if reason is not None:
+        return HOW_XLA, False, reason
+    if shard.policy_installed and not shard.active:
+        return HOW_XLA, False, "mask (b, h) not shardable on this mesh"
+    sharded = shard.policy_installed
+    b_loc = batch // shard.batch_shards
+    h_loc = cfg.n_heads // shard.head_shards
+    gemm = _host_gemm_shape(cfg, batch, seq, site)
+    if gemm is None:
+        return (HOW_STANDALONE, sharded,
+                f"no hostable {site} GEMM in this block")
+    m, n, k = gemm
+    m_loc = m // shard.batch_shards      # GEMM rows follow the batch
+    blocks = producer.pick_gemm_blocks(m_loc, n, k)
+    if blocks is None:
+        return (HOW_XLA, False,
+                f"GEMM ({m_loc},{n},{k}) does not tile")
+    from repro.kernels.gemm_rng import mask_layout_feasible
+    bm, bn, _ = blocks
+    n_steps = (m_loc // bm) * (n // bn)
+    if not mask_layout_feasible(n_steps, b_loc, h_loc, seq, seq):
+        return (HOW_STANDALONE, sharded,
+                f"Region 3: GEMM ({m_loc},{n},{k}) too small for "
+                f"{b_loc}x{h_loc}x{seq}x{seq} mask")
+    if plan.gemm_dtype == "fp8":
+        from repro.kernels import quant
+        if not quant.have_fp8():
+            # still the fused host, but the executor runs it in f32 —
+            # keep that attribution visible in records()/explain()
+            return (HOW_GEMM, sharded,
+                    "fp8 unavailable in this JAX build; f32 host")
+    return HOW_GEMM, sharded, ""
+
+
+def _standalone_capability(plan: DropoutPlan, shard: ShardInfo,
+                           seq: int, attn_impl: str
+                           ) -> Tuple[str, bool, str]:
+    """(how, sharded, reason) for a standalone (bootstrap / Region-3 /
+    non-carried) producer."""
+    if attn_impl != "pallas":
+        return HOW_XLA, False, "impl != pallas (no fused kernels)"
+    reason = producer.mask_kernel_unsupported_reason(plan, seq, seq,
+                                                     fused=False)
+    if reason is not None:
+        return HOW_XLA, False, reason
+    if shard.policy_installed and not shard.active:
+        return HOW_XLA, False, "mask (b, h) not shardable on this mesh"
+    return HOW_STANDALONE, shard.policy_installed, ""
+
+
+@functools.lru_cache(maxsize=256)
+def _compile(cfg: ModelConfig, plan_cfg: DropoutPlanConfig, batch: int,
+             seq: int, shard: ShardInfo, attn_impl: str,
+             hw) -> DropoutSchedule:
+    plan = DropoutPlan(plan_cfg)
+    kinds = cfg.layer_kinds()
+    period = len(cfg.block_pattern)
+    attn_layers = [i for i, k in enumerate(kinds) if k in _ATTN]
+    overlap = plan_cfg.enabled and plan_cfg.mode == "overlap"
+
+    inert = DropoutSchedule(
+        model=cfg.name, plan=plan_cfg, resolved_site=plan_cfg.site,
+        batch=batch, seq=seq, attn_impl=attn_impl, shard=shard,
+        carried=False,
+        assignments=tuple(
+            HostAssignment(layer=i, kind=kinds[i].value)
+            for i in range(cfg.n_layers)))
+    if not overlap or not attn_layers:
+        return inert
+
+    # -------- resolve site="auto" by Region-1 headroom, per model/shape
+    site = plan_cfg.site
+    headroom: Tuple[Tuple[str, float], ...] = ()
+    if site == "auto":
+        site, headroom = _resolve_auto(cfg, plan, batch, seq, shard,
+                                       attn_impl, hw)
+
+    carried = site in CARRIED_DROPOUT_SITES
+    moe_first_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+
+    asgs = []
+    for l in range(cfg.n_layers):
+        kind = kinds[l]
+        if kind not in _ATTN:
+            asgs.append(HostAssignment(layer=l, kind=kind.value))
+            continue
+        if site == "xla":
+            asgs.append(HostAssignment(
+                layer=l, kind=kind.value, consumes=True, site="xla",
+                producer=l, how=HOW_XLA))
+            continue
+        if site == "qkv":
+            how, sh, reason = _fused_capability(
+                plan, cfg, batch, seq, "qkv", shard, attn_impl)
+            asgs.append(HostAssignment(
+                layer=l, kind=kind.value, consumes=True, site="qkv",
+                producer=l, how=how, sharded=sh and how != HOW_XLA,
+                reason=reason))
+            continue
+        # ---- carried sites: mask from the previous attention layer ----
+        prev = max((a for a in attn_layers if a < l), default=-1)
+        stride = _next_attn_stride(kinds, period, l)
+        emit_site = site
+        # the host GEMM lives in THIS block; MoE blocks have no hostable
+        # dense FFN (permuted token layout), dense blocks always have an
+        # out-projection
+        block_is_moe = cfg.moe is not None and l >= moe_first_dense
+        if emit_site in ("ffn_up", "ffn_down") and (
+                block_is_moe or cfg.ffn == FFNKind.RWKV_CHANNEL):
+            e_how, e_sh, e_reason = _standalone_capability(
+                plan, shard, seq, attn_impl)
+            e_reason = (e_reason or
+                        ("MoE expert GEMMs not hostable"
+                         if block_is_moe else
+                         "RWKV channel-mix has no hostable GEMM"))
+        else:
+            e_how, e_sh, e_reason = _fused_capability(
+                plan, cfg, batch, seq, emit_site, shard, attn_impl)
+        if prev < 0:
+            b_how, b_sh, b_reason = _standalone_capability(
+                plan, shard, seq, attn_impl)
+            asgs.append(HostAssignment(
+                layer=l, kind=kind.value, consumes=True,
+                site="standalone", producer=-1, how=b_how,
+                sharded=b_sh and b_how != HOW_XLA,
+                reason=b_reason or "bootstrap: no producer GEMM before "
+                                   "the first attention layer",
+                emit_site=emit_site, emit_stride=stride, emit_how=e_how,
+                emit_reason=e_reason))
+        else:
+            # my mask was emitted by ``prev`` under the same host class
+            p_asg = asgs[prev]
+            asgs.append(HostAssignment(
+                layer=l, kind=kind.value, consumes=True, site=site,
+                producer=prev, how=p_asg.emit_how,
+                sharded=p_asg.emit_how != HOW_XLA and shard.policy_installed
+                and shard.active,
+                reason=p_asg.emit_reason,
+                emit_site=emit_site, emit_stride=stride, emit_how=e_how,
+                emit_reason=e_reason))
+
+    sched = DropoutSchedule(
+        model=cfg.name, plan=plan_cfg, resolved_site=site, batch=batch,
+        seq=seq, attn_impl=attn_impl, shard=shard, carried=carried,
+        assignments=tuple(asgs), headroom=headroom)
+    _check_scan_periodicity(cfg, sched)
+    return sched
+
+
+def _resolve_auto(cfg: ModelConfig, plan: DropoutPlan, batch: int,
+                  seq: int, shard: ShardInfo, attn_impl: str, hw):
+    """site="auto": rank the block's candidate host GEMMs by Region-1
+    headroom (producer.rank_host_sites → perfmodel.rank_host_gemms) and
+    take the best one the fused kernel can actually realize; degrade to
+    "xla" when none qualifies."""
+    if attn_impl != "pallas":
+        return "xla", ()
+    if producer.mask_kernel_unsupported_reason(plan, seq, seq) is not None:
+        return "xla", ()
+    if shard.policy_installed and not shard.active:
+        return "xla", ()
+    ranked = producer.rank_host_sites(cfg, plan, batch, seq, hw=hw,
+                                      batch_shards=shard.batch_shards)
+    return (ranked[0][0], ranked) if ranked else ("xla", ())
+
+
+def _scan_static_key(a: HostAssignment):
+    """The parts of an assignment the scan body actually branches on.
+    Consumption of a carried mask and of the standalone bootstrap are
+    the same code path (read the carry buffer), so the bootstrap's
+    special consumption fields are not a periodicity violation — the
+    emission side and the in-layer consumption sites must match
+    exactly."""
+    carries = a.site in CARRIED_DROPOUT_SITES or a.site == "standalone"
+    return (a.kind, a.consumes, "carry" if carries else a.site,
+            None if carries else a.how,
+            None if carries else a.sharded,
+            a.emit_site, a.emit_stride, a.emit_how, a.emit_reason)
+
+
+def _check_scan_periodicity(cfg: ModelConfig, sched: DropoutSchedule):
+    """The layer scan compiles ONE body per stack, indexed by the first
+    instance's assignments — every later instance of the same unit
+    position must have compiled to the same static decision. Holds by
+    construction (assignments derive from periodic static data); this
+    assert keeps it an invariant rather than a coincidence."""
+    from repro.models.transformer import build_stacks
+    for spec in build_stacks(cfg):
+        ul = len(spec.unit)
+        for j in range(ul):
+            ref = sched.for_layer(spec.base + j)
+            for pos in range(1, spec.count):
+                inst = sched.for_layer(spec.base + pos * ul + j)
+                assert _scan_static_key(inst) == _scan_static_key(ref), (
+                    "non-periodic schedule inside a scanned stack:\n"
+                    f"{ref}\nvs\n{inst}")
+
+
+def compile_schedule(model_cfg: ModelConfig, plan, batch: int, seq: int,
+                     *, policy=None, attn_impl: str = "xla",
+                     hw=None) -> DropoutSchedule:
+    """Compile the per-layer dropout schedule for one (model, plan,
+    shape, mesh/sharding) cell — the plan→compile→execute entry point.
+
+    ``plan`` is a DropoutPlanConfig or DropoutPlan (site may be "auto");
+    ``policy`` the installed ShardingPolicy or None; ``attn_impl`` the
+    kernel availability knob ("pallas" enables the fused producers).
+    Pure function of static data — results are cached, so the in-trace
+    sugar path (models/transformer.forward compiling on first use) and
+    the explicit launch-time call return the identical object.
+    """
+    plan_cfg = plan.cfg if isinstance(plan, DropoutPlan) else plan
+    if plan_cfg is None:
+        raise ValueError("compile_schedule requires a dropout plan")
+    shard = shard_info(policy, batch, model_cfg.n_heads)
+    return _compile(model_cfg, plan_cfg, batch, seq, shard, attn_impl,
+                    hw)
+
+
+def inline_assignment(model_cfg: ModelConfig, plan: DropoutPlan,
+                      batch: int, seq: int, *, policy=None,
+                      attn_impl: str = "xla") -> HostAssignment:
+    """Single-layer sugar for direct ``attn_apply`` calls made without a
+    compiled schedule (tests, microbenches): the first consumer's
+    assignment of a uniform schedule, minus the carry (a lone call has
+    no scan buffer, so carried sites degrade to the standalone producer
+    with identical bits)."""
+    sched = compile_schedule(model_cfg, plan.cfg, batch, seq,
+                             policy=policy, attn_impl=attn_impl)
+    if not sched.active:
+        return HostAssignment(layer=0, kind="full")
+    asg = sched.for_layer(sched.first_consumer)
+    if asg.site in CARRIED_DROPOUT_SITES:
+        how, sh, reason = _standalone_capability(
+            plan, sched.shard, seq, attn_impl)
+        asg = dataclasses.replace(
+            asg, site="standalone", how=how,
+            sharded=sh and how != HOW_XLA,
+            reason=reason or "no scan carry outside the model")
+    return asg
+
+
+def clear_cache() -> None:
+    """Drop compiled schedules (tests exercising determinism)."""
+    _compile.cache_clear()

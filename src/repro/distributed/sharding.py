@@ -136,6 +136,31 @@ class ShardingPolicy:
         return NamedSharding(self.mesh, self.spec(logical_axes, shape))
 
 
+def mask_plane_shards(policy: Optional["ShardingPolicy"], batch: int,
+                      n_heads: int):
+    """How a (batch, n_heads) dropout-mask plane splits under ``policy``:
+    ((batch_axes, n_batch_shards), (head_axes, n_head_shards)), axes as
+    tuples of mesh-axis names (empty = replicated). The single source for
+    the schedule compiler's ShardInfo and the producer's shard-local
+    execution context — both must agree or the compiled plan and the
+    executed shard_map specs drift apart. Derived through ``spec`` so a
+    mesh axis claimed by the batch rule is never reused for heads (the
+    same cross-dim conflict resolution every activation layout gets)."""
+    if policy is None:
+        return ((), 1), ((), 1)
+    spec = policy.spec(("batch", "heads"), (batch, n_heads))
+
+    def one(axes):
+        axes = (() if axes is None
+                else (axes,) if isinstance(axes, str) else tuple(axes))
+        n = 1
+        for a in axes:
+            n *= policy.mesh.shape[a]
+        return axes, n
+
+    return one(spec[0]), one(spec[1])
+
+
 @contextlib.contextmanager
 def use_policy(policy: Optional[ShardingPolicy]):
     prev = getattr(_state, "policy", None)

@@ -61,6 +61,20 @@ def _mask_layout(n_steps: int, mask_batch: int, mask_heads: int,
     return ck, n_cb, rb, n_rb_valid, n_valid_blocks, mask_rows_alloc
 
 
+def mask_layout_feasible(n_steps: int, mask_batch: int, mask_heads: int,
+                         sq: int, mask_sk: int,
+                         mask_block_cols: int = 2048,
+                         max_mask_rows_per_block: int = 256) -> bool:
+    """True when a GEMM grid of ``n_steps`` (i, j) tiles can host the
+    (mask_batch, mask_heads, sq, mask_sk) mask — i.e. NOT the paper's
+    Region 3. The exact predicate the fused kernels apply at trace time,
+    exposed so core/schedule.py can plan the Region-3 fallback ahead of
+    trace instead of discovering it mid-scan."""
+    return _mask_layout(n_steps, mask_batch, mask_heads, sq // 32,
+                        mask_sk, mask_block_cols,
+                        max_mask_rows_per_block) is not None
+
+
 def _mask_block_idx(s, n_valid_blocks: int, n_cb: int, n_rb_valid: int):
     """Block coords for GEMM step s: valid steps get their own block;
     overflow steps share the dummy trailing row-block."""
@@ -73,7 +87,8 @@ def _mask_block_idx(s, n_valid_blocks: int, n_cb: int, n_rb_valid: int):
 def _gemm_rng_kernel(s_ref, a_ref, b_ref, c_ref, m_ref, acc_scr, *,
                      n_cb: int, rb: int, ck: int, sq32: int,
                      threshold: int, rounds: int,
-                     n_valid_blocks: int, n_rb_valid: int, out_dtype):
+                     n_valid_blocks: int, n_rb_valid: int, out_dtype,
+                     heads_local: int, heads_global: int):
     i = pl.program_id(0)
     j = pl.program_id(1)
     kk = pl.program_id(2)
@@ -97,7 +112,8 @@ def _gemm_rng_kernel(s_ref, a_ref, b_ref, c_ref, m_ref, acc_scr, *,
                                          n_rb_valid)
         m_ref[...] = packed_rows_tile(
             rb_idx * rb, cb_idx * ck, sq32, s_ref[2], s_ref[0], s_ref[1],
-            threshold, rb, ck, rounds)
+            threshold, rb, ck, rounds, heads_local=heads_local,
+            heads_global=heads_global, bh_offset=s_ref[3])
 
     @pl.when(kk == nk - 1)
     def _flush():
@@ -112,13 +128,17 @@ def gemm_with_rng(a: jnp.ndarray, b: jnp.ndarray, *,
                   block_k: int = 512, mask_block_cols: int = 2048,
                   max_mask_rows_per_block: int = 256,
                   interpret: bool = True,
+                  heads_global: int = 0, bh_offset=0,
                   ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """C = a @ b, plus the packed dropout keep-mask (B, H, SQ//32, SK)
     generated under the GEMM. Returns (C, mask) — mask is None when the
     GEMM grid cannot host the mask work (caller falls back to the
     standalone kernel; the paper's Region 3). ``seed``/``salt`` may be
     python ints or traced uint32 scalars (the training path folds the
-    step/layer in); they ride into the kernel as a (3,) SMEM operand.
+    step/layer in); they ride into the kernel as a (4,) SMEM operand.
+    ``heads_global``/``bh_offset`` (see philox_common.global_bh) make the
+    call shard-local: the mask is the (mask_batch, mask_heads) tile of
+    the global plane starting at flattened (b*H + h) = bh_offset.
     """
     m, kdim = a.shape
     k2, n = b.shape
@@ -140,20 +160,22 @@ def gemm_with_rng(a: jnp.ndarray, b: jnp.ndarray, *,
     static = (gm, gn, gk, bm, bn, bkk, n_cb, rb, ck, sq32,
               threshold_from_p(p), rounds, n_valid_blocks, n_rb_valid,
               mask_rows_alloc, mask_sk, interpret,
-              mask_batch, mask_heads)
-    return _gemm_rng_call(static, seed_salt_smem(seed, salt), a, b)
+              mask_batch, mask_heads, heads_global or mask_heads)
+    return _gemm_rng_call(static,
+                          seed_salt_smem(seed, salt, bh_offset), a, b)
 
 
 def _gemm_rng_impl(static, sd, a, b):
     (gm, gn, gk, bm, bn, bkk, n_cb, rb, ck, sq32, threshold, rounds,
      n_valid_blocks, n_rb_valid, mask_rows_alloc, mask_sk,
-     interpret, mask_batch, mask_heads) = static
+     interpret, mask_batch, mask_heads, heads_global) = static
     m, n = a.shape[0], b.shape[1]
     kernel = functools.partial(
         _gemm_rng_kernel, n_cb=n_cb, rb=rb, ck=ck, sq32=sq32,
         threshold=threshold, rounds=rounds,
         n_valid_blocks=n_valid_blocks, n_rb_valid=n_rb_valid,
-        out_dtype=a.dtype)
+        out_dtype=a.dtype, heads_local=mask_heads,
+        heads_global=heads_global)
 
     def _mask_index_map(i, j, kk, _gn=gn):
         rb_idx, cb_idx = _mask_block_idx(i * _gn + j, n_valid_blocks,
@@ -211,7 +233,7 @@ def _dgrad_pair(a, b, dc):
 def _gemm_rng_bwd(static, res, cts):
     a, b = res
     da, db = _dgrad_pair(a, b, cts[0])
-    dsd = np.zeros((3,), jax.dtypes.float0)
+    dsd = np.zeros((4,), jax.dtypes.float0)
     return dsd, da, db
 
 
@@ -295,7 +317,8 @@ def _plain_gemm(a, b, bm, bn, bkk, interpret):
 def _gemm_rng_fp8_kernel(s_ref, as_ref, bs_ref, a_ref, b_ref, c_ref,
                          m_ref, acc_scr, *, n_cb: int, rb: int, ck: int,
                          sq32: int, threshold: int, rounds: int,
-                         n_valid_blocks: int, n_rb_valid: int, out_dtype):
+                         n_valid_blocks: int, n_rb_valid: int, out_dtype,
+                         heads_local: int, heads_global: int):
     i = pl.program_id(0)
     j = pl.program_id(1)
     kk = pl.program_id(2)
@@ -320,7 +343,8 @@ def _gemm_rng_fp8_kernel(s_ref, as_ref, bs_ref, a_ref, b_ref, c_ref,
                                          n_rb_valid)
         m_ref[...] = packed_rows_tile(
             rb_idx * rb, cb_idx * ck, sq32, s_ref[2], s_ref[0], s_ref[1],
-            threshold, rb, ck, rounds)
+            threshold, rb, ck, rounds, heads_local=heads_local,
+            heads_global=heads_global, bh_offset=s_ref[3])
 
     @pl.when(kk == nk - 1)
     def _flush():
@@ -335,6 +359,7 @@ def gemm_with_rng_fp8(a: jnp.ndarray, b: jnp.ndarray, *,
                       block_k: int = 512, mask_block_cols: int = 2048,
                       max_mask_rows_per_block: int = 256,
                       interpret: bool = True,
+                      heads_global: int = 0, bh_offset=0,
                       ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """C ~= a @ b computed on per-tile-scaled e4m3 operands, plus the
     packed dropout keep-mask generated under the GEMM. The mask is
@@ -368,14 +393,15 @@ def gemm_with_rng_fp8(a: jnp.ndarray, b: jnp.ndarray, *,
     static = (gm, gn, gk, bm, bn, bkk, n_cb, rb, ck, sq32,
               threshold_from_p(p), rounds, n_valid_blocks, n_rb_valid,
               mask_rows_alloc, mask_sk, interpret,
-              mask_batch, mask_heads)
-    return _gemm_rng_fp8_call(static, seed_salt_smem(seed, salt), a, b)
+              mask_batch, mask_heads, heads_global or mask_heads)
+    return _gemm_rng_fp8_call(static,
+                              seed_salt_smem(seed, salt, bh_offset), a, b)
 
 
 def _gemm_rng_fp8_impl(static, sd, a, b):
     (gm, gn, gk, bm, bn, bkk, n_cb, rb, ck, sq32, threshold, rounds,
      n_valid_blocks, n_rb_valid, mask_rows_alloc, mask_sk,
-     interpret, mask_batch, mask_heads) = static
+     interpret, mask_batch, mask_heads, heads_global) = static
     m, n = a.shape[0], b.shape[1]
     a_q, a_s = quant.quantize_tiled(a, bm, bkk)      # scales (gm, gk)
     b_q, b_s = quant.quantize_tiled(b, bkk, bn)      # scales (gk, gn)
@@ -383,7 +409,8 @@ def _gemm_rng_fp8_impl(static, sd, a, b):
         _gemm_rng_fp8_kernel, n_cb=n_cb, rb=rb, ck=ck, sq32=sq32,
         threshold=threshold, rounds=rounds,
         n_valid_blocks=n_valid_blocks, n_rb_valid=n_rb_valid,
-        out_dtype=a.dtype)
+        out_dtype=a.dtype, heads_local=mask_heads,
+        heads_global=heads_global)
 
     def _mask_index_map(i, j, kk, _gn=gn):
         rb_idx, cb_idx = _mask_block_idx(i * _gn + j, n_valid_blocks,
@@ -440,7 +467,7 @@ def _gemm_rng_fp8_fwd(static, sd, a, b):
 def _gemm_rng_fp8_bwd(static, res, cts):
     a, b = res
     da, db = _dgrad_pair_bf16(a, b, cts[0])
-    dsd = np.zeros((3,), jax.dtypes.float0)
+    dsd = np.zeros((4,), jax.dtypes.float0)
     return dsd, da, db
 
 

@@ -31,11 +31,16 @@ def default_interpret() -> bool:
 
 
 def dropout_mask(batch: int, n_heads: int, sq: int, sk: int, p: float,
-                 seed, salt=0, rounds: int = 7) -> jnp.ndarray:
+                 seed, salt=0, rounds: int = 7, heads_global: int = 0,
+                 bh_offset=0) -> jnp.ndarray:
     """Standalone-RNG kernel: packed keep-bits (B, H, SQ//32, SK).
-    ``seed``/``salt`` may be python ints or traced uint32 scalars."""
+    ``seed``/``salt`` may be python ints or traced uint32 scalars.
+    ``heads_global``/``bh_offset`` select a shard-local (b, h) tile of
+    the global mask plane (bit-identical to slicing the full mask)."""
     return philox_dropout_mask(batch, n_heads, sq, sk, p, seed, salt,
-                               rounds, interpret=default_interpret())
+                               rounds, interpret=default_interpret(),
+                               heads_global=heads_global,
+                               bh_offset=bh_offset)
 
 
 def fused_qkv_gemm_rng(x: jnp.ndarray, w_qkv: jnp.ndarray, *,
@@ -43,6 +48,7 @@ def fused_qkv_gemm_rng(x: jnp.ndarray, w_qkv: jnp.ndarray, *,
                        mask_sk: int, p: float, seed, salt=0,
                        rounds: int = 7, block_m: int = 256,
                        block_n: int = 256, block_k: int = 512,
+                       heads_global: int = 0, bh_offset=0,
                        ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """QKV projection with the dropout mask for the *following* attention
     layer generated under the GEMM (the paper's Fig. 4 overlap topology).
@@ -54,7 +60,8 @@ def fused_qkv_gemm_rng(x: jnp.ndarray, w_qkv: jnp.ndarray, *,
         x, w_qkv, mask_batch=mask_batch, mask_heads=mask_heads,
         mask_sq=mask_sq, mask_sk=mask_sk, p=p, seed=seed, salt=salt,
         rounds=rounds, block_m=block_m, block_n=block_n, block_k=block_k,
-        interpret=default_interpret())
+        interpret=default_interpret(), heads_global=heads_global,
+        bh_offset=bh_offset)
 
 
 def fused_gemm_rng_fp8(x: jnp.ndarray, w: jnp.ndarray, *,
@@ -62,6 +69,7 @@ def fused_gemm_rng_fp8(x: jnp.ndarray, w: jnp.ndarray, *,
                        mask_sk: int, p: float, seed, salt=0,
                        rounds: int = 7, block_m: int = 256,
                        block_n: int = 256, block_k: int = 512,
+                       heads_global: int = 0, bh_offset=0,
                        ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Producer GEMM on per-tile-scaled e4m3 operands with the dropout
     mask generated under it — the paper's measured FP8 serving regime.
@@ -73,4 +81,5 @@ def fused_gemm_rng_fp8(x: jnp.ndarray, w: jnp.ndarray, *,
         x, w, mask_batch=mask_batch, mask_heads=mask_heads,
         mask_sq=mask_sq, mask_sk=mask_sk, p=p, seed=seed, salt=salt,
         rounds=rounds, block_m=block_m, block_n=block_n, block_k=block_k,
-        interpret=default_interpret())
+        interpret=default_interpret(), heads_global=heads_global,
+        bh_offset=bh_offset)

@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.philox_common import (
+    global_bh,
     packed_tile_from_counters,
     seed_salt_smem,
     threshold_from_p,
@@ -31,8 +32,9 @@ from repro.kernels.philox_common import (
 
 
 def _philox_kernel(s_ref, o_ref, *, rows32_blk: int, bk: int,
-                   threshold, rounds: int):
-    bh = pl.program_id(0)
+                   threshold, rounds: int, heads_local: int,
+                   heads_global: int):
+    bh = global_bh(pl.program_id(0), heads_local, heads_global, s_ref[3])
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     q32_start = qi * rows32_blk
@@ -45,10 +47,11 @@ def _philox_kernel(s_ref, o_ref, *, rows32_blk: int, bk: int,
 @functools.partial(
     jax.jit,
     static_argnames=("batch", "n_heads", "sq", "sk", "p", "rounds",
-                     "rows32_blk", "bk", "interpret"))
+                     "rows32_blk", "bk", "interpret", "heads_global"))
 def _philox_dropout_mask(sd, *, batch: int, n_heads: int, sq: int, sk: int,
                          p: float, rounds: int, rows32_blk: int, bk: int,
-                         interpret: bool) -> jnp.ndarray:
+                         interpret: bool,
+                         heads_global: int) -> jnp.ndarray:
     sq32 = sq // 32
     rows32_blk = min(rows32_blk, sq32)
     bk = min(bk, sk)
@@ -58,7 +61,8 @@ def _philox_dropout_mask(sd, *, batch: int, n_heads: int, sq: int, sk: int,
     out = pl.pallas_call(
         functools.partial(
             _philox_kernel, rows32_blk=rows32_blk, bk=bk,
-            threshold=thr, rounds=rounds),
+            threshold=thr, rounds=rounds, heads_local=n_heads,
+            heads_global=heads_global),
         grid=grid,
         in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)],
         out_specs=pl.BlockSpec(
@@ -73,15 +77,23 @@ def _philox_dropout_mask(sd, *, batch: int, n_heads: int, sq: int, sk: int,
 def philox_dropout_mask(batch: int, n_heads: int, sq: int, sk: int,
                         p: float, seed, salt=0,
                         rounds: int = 7, rows32_blk: int = 8,
-                        bk: int = 512, interpret: bool = True) -> jnp.ndarray:
+                        bk: int = 512, interpret: bool = True,
+                        heads_global: int = 0,
+                        bh_offset=0) -> jnp.ndarray:
     """Packed keep-mask (B, H, SQ//32, SK) uint32 from the canonical
     counter scheme. ``seed``/``salt`` may be python ints or traced uint32
     scalars. Defaults: (8, 512) blocks = 16 KiB VMEM per step —
     deliberately tiny so the kernel can be co-scheduled against a GEMM
     without VMEM pressure (the paper's 6%/7% RF/SMEM carve-out analogue).
+
+    ``heads_global``/``bh_offset`` make the call shard-local: the output
+    is the (batch, n_heads) tile of the global (B, H_global) mask plane
+    starting at flattened index ``bh_offset`` — bit-identical to slicing
+    the whole-mask call (see philox_common.global_bh).
     """
     assert sq % 32 == 0, "sq must be a multiple of 32 (bit packing)"
     return _philox_dropout_mask(
-        seed_salt_smem(seed, salt), batch=batch, n_heads=n_heads, sq=sq,
-        sk=sk, p=p, rounds=rounds, rows32_blk=rows32_blk, bk=bk,
-        interpret=interpret)
+        seed_salt_smem(seed, salt, bh_offset), batch=batch,
+        n_heads=n_heads, sq=sq, sk=sk, p=p, rounds=rounds,
+        rows32_blk=rows32_blk, bk=bk, interpret=interpret,
+        heads_global=heads_global or n_heads)

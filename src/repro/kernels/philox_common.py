@@ -117,18 +117,38 @@ def split_seed(seed) -> Tuple:
     return seed.astype(jnp.uint32), jnp.zeros((), jnp.uint32)
 
 
-def seed_salt_smem(seed, salt) -> jnp.ndarray:
-    """(3,) uint32 [key_lo, key_hi, salt] — the SMEM operand of the
-    dynamic-seed kernels (training folds the step/layer into seed/salt as
-    traced scalars, so they must enter the kernel as data, not literals).
+def seed_salt_smem(seed, salt, bh_offset=0) -> jnp.ndarray:
+    """(4,) uint32 [key_lo, key_hi, salt, bh_offset] — the SMEM operand of
+    the dynamic-seed kernels (training folds the step/layer into seed/salt
+    as traced scalars, so they must enter the kernel as data, not
+    literals). ``bh_offset`` is the global flattened (b*H + h) index of
+    this producer's first mask row — 0 for a whole-mask producer; shard-
+    local producers pass their shard's offset so the counters, and hence
+    the bits, match the global mask's slice exactly.
     """
     k0, k1 = split_seed(seed)
-    if isinstance(salt, (int, np.integer)):
-        s = jnp.full((), int(salt) & 0xFFFFFFFF, jnp.uint32)
-    else:
-        s = salt.astype(jnp.uint32)
+    s = as_u32(np.uint32(int(salt) & 0xFFFFFFFF)
+               if isinstance(salt, (int, np.integer)) else salt)
+    off = as_u32(np.uint32(int(bh_offset) & 0xFFFFFFFF)
+                 if isinstance(bh_offset, (int, np.integer)) else bh_offset)
     return jnp.stack([jnp.asarray(k0, jnp.uint32),
-                      jnp.asarray(k1, jnp.uint32), s])
+                      jnp.asarray(k1, jnp.uint32),
+                      jnp.asarray(s, jnp.uint32),
+                      jnp.asarray(off, jnp.uint32)])
+
+
+def global_bh(local_bh, heads_local: int, heads_global: int, bh_offset):
+    """Map a shard-local flattened (b, h) index to the global flattened
+    counter index: shards own a (b_loc, h_loc) tile of the (B, H) mask
+    plane, so  global = offset + local_b * H_global + local_h.  With
+    heads_local == heads_global and offset 0 this is the identity —
+    whole-mask producers take that path untouched."""
+    if heads_local == heads_global:
+        return as_u32(local_bh) + as_u32(bh_offset)
+    lb = as_u32(local_bh)
+    hl = np.uint32(heads_local)
+    return (as_u32(bh_offset) + (lb // hl) * np.uint32(heads_global)
+            + lb % hl)
 
 
 def tile_random_u32(q_start, k_start, bh, salt, k0, k1,
@@ -195,13 +215,19 @@ def packed_tile_from_counters(q32_start, k_start, bh, salt, k0, k1,
 
 def packed_rows_tile(r_start, k_start, sq32: int, salt, k0, k1, threshold,
                      rows: int, bk: int, rounds: int = 7,
-                     iota_fn=None) -> jnp.ndarray:
+                     iota_fn=None, heads_local: int = 0,
+                     heads_global: int = 0, bh_offset=0) -> jnp.ndarray:
     """Packed mask words for ``rows`` packed-rows of the *flattened* 2D mask
     layout (BH*SQ32, SK), starting at global packed-row ``r_start`` and
     column ``k_start``. Rows may cross (b, h) boundaries: the head index is
     recovered per-row as r // SQ32 and the packed-row within the head as
     r % SQ32. Used by the GEMM-fused kernel, whose work assignment follows
     the GEMM grid rather than the attention layout.
+
+    ``heads_local``/``heads_global``/``bh_offset`` (see ``global_bh``)
+    remap the recovered (b, h) index when the producer runs shard-local
+    on a (b_loc, h_loc) tile of the mask plane; the defaults (0, 0, 0)
+    keep the whole-mask identity mapping.
 
     Bit-exact with packed_tile_from_counters / philox_mask_ref.
     """
@@ -214,6 +240,9 @@ def packed_rows_tile(r_start, k_start, sq32: int, salt, k0, k1, threshold,
     r_glob = as_u32(r_start) + r_local
     q32 = r_glob % np.uint32(sq32)
     bh = r_glob // np.uint32(sq32)
+    if heads_local:
+        bh = global_bh(bh, heads_local, heads_global or heads_local,
+                       bh_offset)
     x1 = q32 * np.uint32(8) + t               # q//4
     kk = as_u32(k_start) + iota_fn((rows * 8, bk), 1)
     w0, w1, w2, w3 = philox4x32(kk, x1, bh, salt, k0, k1, rounds)

@@ -33,6 +33,7 @@ from repro.config import (  # noqa: E402
     list_archs,
 )
 from repro.config.base import StepKind  # noqa: E402
+from repro.core.schedule import compile_schedule  # noqa: E402
 from repro.distributed.sharding import (  # noqa: E402
     LAYOUT_PRESETS,
     ShardingPolicy,
@@ -222,6 +223,14 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         "compile_seconds": compile_s,
         "model_flops_per_device": model_flops / n_dev,
     }
+    if shape.kind == StepKind.TRAIN:
+        # the compiled dropout schedule for this cell: every per-layer
+        # host assignment and fallback, visible before any step runs
+        sched = compile_schedule(
+            cfg, run.dropout, shape.global_batch, shape.seq_len,
+            policy=policy, attn_impl=run.sharding.attn_impl)
+        meta["dropout_schedule"] = sched.summary()
+        meta["dropout_explain"] = sched.explain()
     return compiled, meta
 
 
@@ -237,6 +246,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         hlo_text=hlo_text)
     mem = analysis.memory_stats(compiled)
     report = {**meta, "memory": mem, "roofline": roof.to_dict()}
+    if verbose and "dropout_explain" in meta:
+        print(meta["dropout_explain"])
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} x {meta['mesh']}: "
               f"compile={meta['compile_seconds']:.1f}s "

@@ -3,17 +3,93 @@ continuous batched loop (greedy sampling).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
         --batch 4 --prompt-len 64 --max-new 32
+
+``--verify-replays N`` additionally demonstrates the serving-side
+packed-mask reuse path: speculative-decoding verification re-scores the
+same positions the draft already sampled, so its dropout masks are
+replays of already-generated (seed, salt, layer, step) identities — the
+``PackedMaskCache`` below serves them without running any RNG.
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import time
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import get_arch
+from repro.core.schedule import DropoutSchedule, compile_schedule
 from repro.models import Runtime, model_init, prefill, decode_step
+
+
+class PackedMaskCache:
+    """Packed-dropout-mask reuse across speculative-decoding verification
+    replays.
+
+    The compiled ``DropoutSchedule`` owns mask identity: two requests
+    agreeing on ``schedule.mask_key(layer, step)`` = (seed, salt, layer,
+    step) consume bit-identical packed masks, whatever site/kernel/shard
+    produced them. Verification steps replay exactly the keys the draft
+    pass generated, so keying this LRU on the schedule's identity makes
+    every verification mask fetch a cache hit — RNG skipped entirely
+    (the ROADMAP serving-side reuse item)."""
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self._entries: "collections.OrderedDict[Tuple[int, int, int, int], jnp.ndarray]" = (
+            collections.OrderedDict())
+
+    def get_or_create(self, schedule: DropoutSchedule, layer: int,
+                      step: int,
+                      mask_shape: Tuple[int, int, int, int]) -> jnp.ndarray:
+        """The packed mask for (layer, step) under ``schedule``'s plan —
+        generated on first use, replayed from the cache afterwards."""
+        key = schedule.mask_key(layer, step)
+        hit = self._entries.get(key)
+        if hit is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return hit
+        self.misses += 1
+        b, h, sq, sk = mask_shape
+        # the producer's standalone path owns the kernel-vs-XLA choice
+        # (capability predicate, philox_bits) — same bits either way
+        from repro.core import producer
+        from repro.core.overlap import DropoutPlan
+        mask = producer.standalone_packed_mask(
+            DropoutPlan(schedule.plan), b, h, sq, sk, layer, step)
+        self._entries[key] = mask
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+        return mask
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries)}
+
+
+def verify_replay_demo(cfg, sched: DropoutSchedule, batch: int,
+                       seq: int, steps, replays: int) -> PackedMaskCache:
+    """Simulate speculative-decoding verification: the draft pass
+    generates each (layer, step) mask once; every verification replay
+    re-fetches the same identities and must hit the cache (RNG skipped).
+    Returns the cache so the caller can report the hit rate."""
+    cache = PackedMaskCache()
+    consumers = [a.layer for a in sched.assignments if a.consumes]
+    shape = (batch, cfg.n_heads, seq, seq)
+    for step in steps:                       # draft pass: masks created
+        for layer in consumers:
+            cache.get_or_create(sched, layer, step, shape)
+    for _ in range(replays):                 # verification: pure replay
+        for step in steps:
+            for layer in consumers:
+                cache.get_or_create(sched, layer, step, shape)
+    return cache
 
 
 def main() -> None:
@@ -25,6 +101,9 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--verify-replays", type=int, default=0,
+                    help="demo the packed-mask reuse cache with N "
+                         "speculative-verification replays")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, reduced=args.reduced)
@@ -83,6 +162,21 @@ def main() -> None:
           f"({args.batch * n_dec / t_dec:,.0f} tok/s aggregate)")
     out = jnp.stack(generated, axis=1)
     print(f"[serve] sample tokens (seq 0): {out[0][:16].tolist()}")
+
+    if args.verify_replays and cfg.attn_dropout > 0.0:
+        from repro.config import DropoutPlanConfig
+        sched = compile_schedule(
+            cfg, DropoutPlanConfig(mode="overlap", p=cfg.attn_dropout,
+                                   seed=args.seed),
+            args.batch, args.prompt_len)
+        cache = verify_replay_demo(cfg, sched, args.batch,
+                                   args.prompt_len,
+                                   steps=range(4),
+                                   replays=args.verify_replays)
+        st = cache.stats()
+        total = st["hits"] + st["misses"]
+        print(f"[serve] mask-reuse cache: {st['hits']}/{total} fetches "
+              f"served without RNG ({st['entries']} masks resident)")
 
 
 if __name__ == "__main__":

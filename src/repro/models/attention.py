@@ -78,11 +78,13 @@ def _project_qkv(p, x, cfg: ModelConfig, positions):
 
 
 def _project_qkv_fused(p, x, cfg: ModelConfig, positions, plan,
-                       layer_idx, step):
+                       layer_idx, step, how=None, policy=None):
     """Fused QKV projection: one concatenated GEMM with this layer's
     packed dropout mask physically generated under it (the paper's
-    ``qkv+RNG`` site, kernel-realized). Returns (q, k, v, packed, how) —
-    ``how`` is the producer tag ("gemm_rng" | "standalone" | "xla")."""
+    ``qkv+RNG`` site, kernel-realized; shard-local under a policy).
+    ``how`` is the schedule's planned producer. Returns
+    (q, k, v, packed, how) — ``how`` the realized producer tag
+    ("gemm_rng" | "standalone" | "xla")."""
     from repro.core import producer
     b, s, d = x.shape
     nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -91,7 +93,8 @@ def _project_qkv_fused(p, x, cfg: ModelConfig, positions, plan,
         [p["w_q"].astype(dt), p["w_k"].astype(dt), p["w_v"].astype(dt)],
         axis=1)
     y2d, packed, how = producer.gemm_with_mask(
-        x.reshape(b * s, d), w_qkv, plan, (b, nq, s, s), layer_idx, step)
+        x.reshape(b * s, d), w_qkv, plan, (b, nq, s, s), layer_idx, step,
+        how=how, policy=policy)
     y = y2d.reshape(b, s, -1)
     q = y[..., :nq * hd]
     k = y[..., nq * hd:(nq + nkv) * hd]
@@ -104,47 +107,62 @@ def attn_apply(p, x, cfg: ModelConfig, *, kind: AttentionKind,
                plan: Optional[DropoutPlan], layer_idx, step,
                chunk_q: int = 1024, probs_dtype=None,
                impl: str = "xla", policy=None,
-               mask_in=None, emit_next: bool = False):
+               mask_in=None, emit_next: bool = False, asg=None):
     """Training / prefill forward (full sequence). x (B, S, D).
 
-    The dropout plan's ``site`` picks the mask producer (core/producer.py):
-      "xla"       — XLA bits generated next to the QKV GEMM (default)
-      "qkv"       — bits generated INSIDE the fused QKV-GEMM kernel when
-                    impl="pallas" (Region-3 fallback: standalone kernel)
-      "prev_gemm" — ``mask_in`` carries this layer's mask (made under the
-                    previous layer's out-proj GEMM); with ``emit_next``
-                    the call returns (out, mask_next) where mask_next is
-                    layer l+1's mask generated under THIS layer's
-                    out-projection. "ffn_up" / "ffn_down" also consume
-                    ``mask_in`` (carried), but the NEXT mask is emitted
-                    by the FFN half of the block (models/transformer.py
-                    routes it through layers.ffn_apply), so this call
-                    never emits for them. All sites emit bit-identical
-                    masks.
+    ``asg`` — this layer's HostAssignment from the compiled
+    DropoutSchedule (core/schedule.py) — names the mask producer:
+      site "xla"        — XLA bits generated next to the QKV GEMM
+      site "qkv"        — bits generated under the fused QKV-GEMM kernel
+                          (asg.how records the planned realization;
+                          shard-local when a policy is installed)
+      carried sites /   — ``mask_in`` carries this layer's mask (made
+      "standalone"        under the previous attention layer's host GEMM
+                          or the standalone bootstrap); with
+                          ``emit_next`` and asg.emit_site="prev_gemm"
+                          the call returns (out, mask_next) where
+                          mask_next is the NEXT attention layer's mask
+                          (layer_idx + asg.emit_stride) generated under
+                          THIS layer's out-projection. "ffn_up" /
+                          "ffn_down" emissions happen in the FFN half
+                          (models/transformer.py routes them through
+                          layers.ffn_apply), so this call passes the
+                          carry through for them.
+    All sites emit bit-identical masks. Direct calls may omit ``asg``;
+    a single-layer assignment is compiled on the spot (sugar).
     Returns out, or (out, mask_next) when ``emit_next``.
     """
     b, s, _ = x.shape
     positions = jnp.arange(s, dtype=jnp.int32)
     local = cfg.local_window if kind == AttentionKind.LOCAL else 0
     overlap = plan is not None and plan.enabled and plan.overlapped
-    site = plan.site if overlap else "xla"
-    # fused kernels run shard-local only for the unsharded case today;
-    # sharded fused projections are a ROADMAP follow-on
-    fuse_ok = impl == "pallas" and policy is None
+    if overlap and asg is None:
+        from repro.core import schedule as schedule_mod
+        asg = schedule_mod.inline_assignment(cfg, plan, b, s,
+                                             policy=policy,
+                                             attn_impl=impl)
+    site = asg.site if overlap else "xla"
 
     # --- the paper's overlap site: mask produced at a producer GEMM ---
     packed = None
-    if overlap and site == "qkv" and fuse_ok:
+    if overlap and site == "qkv":
         q, k, v, packed, _how = _project_qkv_fused(
-            p, x, cfg, positions, plan, layer_idx, step)
+            p, x, cfg, positions, plan, layer_idx, step, how=asg.how,
+            policy=policy)
     else:
         q, k, v = _project_qkv(p, x, cfg, positions)
-        if overlap and site in CARRIED_DROPOUT_SITES:
+        if overlap and (site in CARRIED_DROPOUT_SITES
+                        or site == "standalone"):
             from repro.core import producer
-            packed = mask_in if mask_in is not None else \
-                producer.standalone_packed_mask(
+            packed = mask_in
+            if packed is None:
+                # bootstrap / direct call without a scan carry: the
+                # standalone producer makes the identical bits in-layer
+                use_kernel = asg.how == producer.HOW_STANDALONE
+                packed = producer.standalone_packed_mask(
                     plan, b, cfg.n_heads, s, s, layer_idx, step,
-                    use_kernel=fuse_ok)
+                    use_kernel=use_kernel,
+                    policy=policy if asg.sharded else None)
         elif overlap:
             packed = plan.precompute_mask(b, cfg.n_heads, s, s,
                                           layer_idx, step)
@@ -160,13 +178,16 @@ def attn_apply(p, x, cfg: ModelConfig, *, kind: AttentionKind,
     out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
     out = constrain(out, "batch", None, "heads")
     w_o = p["w_o"].astype(x.dtype)
-    if emit_next and overlap and site == "prev_gemm":
-        # cross-layer pipelining: the NEXT layer's mask rides under this
-        # layer's out-projection (the paper's "previous GEMM layers" site)
+    if emit_next and overlap and asg.emit_site == "prev_gemm":
+        # cross-layer pipelining: the NEXT attention layer's mask rides
+        # under this layer's out-projection (the paper's "previous GEMM
+        # layers" site; emit_stride skips non-attention layers in mixed
+        # Griffin-style patterns)
         from repro.core import producer
         y2d, mask_next, _how = producer.gemm_with_mask(
             out.reshape(b * s, -1), w_o, plan, (b, cfg.n_heads, s, s),
-            layer_idx + 1, step, allow_fused=fuse_ok)
+            layer_idx + asg.emit_stride, step, how=asg.emit_how,
+            policy=policy)
         return y2d.reshape(b, s, -1), mask_next
     y = out @ w_o
     return (y, mask_in) if emit_next else y

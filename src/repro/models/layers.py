@@ -164,7 +164,7 @@ def _ffn_apply_hosted(p, x, cfg: ModelConfig, host,
     def _host_gemm(a2d, w):
         y2d, mask, _how = producer.gemm_with_mask(
             a2d, w.astype(dt), host.plan, host.mask_shape,
-            host.layer_idx, host.step, allow_fused=host.allow_fused)
+            host.layer_idx, host.step, how=host.how, policy=host.policy)
         return y2d, mask
 
     if cfg.ffn in (FFNKind.SWIGLU, FFNKind.GEGLU):
@@ -204,7 +204,8 @@ def _ffn_apply_hosted(p, x, cfg: ModelConfig, host,
     b, h_, sq, sk = host.mask_shape
     mask = producer.standalone_packed_mask(
         host.plan, b, h_, sq, sk, host.layer_idx, host.step,
-        use_kernel=host.allow_fused)
+        use_kernel=host.how == producer.HOW_STANDALONE,
+        policy=host.policy)
     return ffn_apply(p, x, cfg, shifted=shifted), mask
 
 

@@ -52,7 +52,12 @@ from repro.models.rwkv import (
 
 @dataclasses.dataclass
 class Runtime:
-    """Per-call execution context threaded through the model."""
+    """Per-call execution context threaded through the model.
+
+    ``schedule`` carries the compiled DropoutSchedule
+    (core/schedule.py). When None and a plan is set, ``forward``
+    compiles one from the plan's site sugar at trace time — same cached
+    artifact the launch layer would have compiled explicitly."""
     plan: Optional[DropoutPlan] = None
     step: Any = 0
     compute_dtype: Any = jnp.float32
@@ -62,6 +67,7 @@ class Runtime:
     probs_dtype: Any = None        # None -> f32; bf16 = §Perf knob
     moe_seq_dispatch: bool = False
     attn_impl: str = "xla"         # xla | pallas
+    schedule: Optional[Any] = None  # compiled DropoutSchedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,16 +163,16 @@ def model_init(key, cfg: ModelConfig) -> Dict[str, Any]:
 # --------------------------------------------------------------------------
 
 def _mix_forward(p, x, cfg, rt: Runtime, kind, layer_idx,
-                 mask_in=None, emit_next=False):
-    """Returns (y, mask_next). mask_next threads the prev_gemm pipeline;
-    it is None unless ``emit_next`` (site="prev_gemm" carried buffer)."""
+                 mask_in=None, emit_next=False, asg=None):
+    """Returns (y, mask_next). mask_next threads the carried-mask
+    pipeline; it is None unless ``emit_next`` (carried scan buffer)."""
     if kind in (AttentionKind.FULL, AttentionKind.LOCAL):
         y = attn_apply(p, x, cfg, kind=kind, plan=rt.plan,
                        layer_idx=layer_idx, step=rt.step,
                        chunk_q=rt.chunk_q,
                        probs_dtype=rt.probs_dtype or jnp.float32,
                        impl=rt.attn_impl, policy=rt.policy,
-                       mask_in=mask_in, emit_next=emit_next)
+                       mask_in=mask_in, emit_next=emit_next, asg=asg)
         return y if emit_next else (y, None)
     if kind == AttentionKind.RECURRENT:
         return rglru_apply(p, x, cfg), None
@@ -174,20 +180,22 @@ def _mix_forward(p, x, cfg, rt: Runtime, kind, layer_idx,
 
 
 def _ffn_forward(p, x, cfg, rt: Runtime, tag, layer_idx=0,
-                 host_site=None, mask_shape=None):
-    """Returns (out, aux, mask_next). ``host_site`` ("ffn_up"/"ffn_down")
-    asks the FFN to host the NEXT layer's mask producer under one of its
+                 asg=None, mask_shape=None):
+    """Returns (out, aux, mask_next). When the schedule assigns this
+    block an FFN emission (asg.emit_site "ffn_up"/"ffn_down"), the FFN
+    hosts the NEXT attention layer's mask producer under one of its
     GEMMs (the carried-scan pipeline); blocks whose FFN has no hostable
-    GEMM (MoE, RWKV channel-mix) degrade to the standalone producer —
-    identical bits, uniform scan carry."""
+    GEMM (MoE, RWKV channel-mix) were planned HOW_STANDALONE/HOW_XLA by
+    the compiler — identical bits, uniform scan carry."""
     from repro.core import producer
     mask_next = None
     host = None
-    if host_site is not None:
-        fuse_ok = rt.attn_impl == "pallas" and rt.policy is None
+    if (asg is not None and mask_shape is not None
+            and asg.emit_site in ("ffn_up", "ffn_down")):
         host = producer.FFNHost(
-            plan=rt.plan, site=host_site, mask_shape=mask_shape,
-            layer_idx=layer_idx + 1, step=rt.step, allow_fused=fuse_ok)
+            plan=rt.plan, site=asg.emit_site, mask_shape=mask_shape,
+            layer_idx=layer_idx + asg.emit_stride, step=rt.step,
+            how=asg.emit_how, policy=rt.policy)
     if tag == "moe":
         y, aux = moe_mod.moe_apply(p["moe"], x, cfg, rt.policy,
                                    seq_dispatch=rt.moe_seq_dispatch)
@@ -197,11 +205,13 @@ def _ffn_forward(p, x, cfg, rt: Runtime, tag, layer_idx=0,
             y = y + ffn_apply(p["dense_res"], x, cfg)
         if host is not None:
             # expert GEMMs are not hostable (permuted token layout);
-            # keep the carry alive with the standalone producer
+            # keep the carry alive with the standalone producer, as
+            # the schedule planned (host.how)
             b, h_, sq, sk = mask_shape
             mask_next = producer.standalone_packed_mask(
-                rt.plan, b, h_, sq, sk, layer_idx + 1, rt.step,
-                use_kernel=host.allow_fused)
+                rt.plan, b, h_, sq, sk, host.layer_idx, rt.step,
+                use_kernel=host.how == producer.HOW_STANDALONE,
+                policy=rt.policy)
         return y, aux, mask_next
     shifted = None
     if cfg.ffn == FFNKind.RWKV_CHANNEL:
@@ -215,30 +225,35 @@ def _ffn_forward(p, x, cfg, rt: Runtime, tag, layer_idx=0,
 
 
 def block_apply(p, x, cfg, rt: Runtime, kind, tag, layer_idx,
-                mask_in=None, emit_next=False):
+                asg=None, mask_in=None, emit=False):
     """Returns (x, aux, mask_next); mask_next carries the carried-site
-    pipeline buffer (None when the plan doesn't pipeline masks). With
-    site="prev_gemm" the next mask is emitted under attention's out-proj;
-    with site="ffn_up"/"ffn_down" it is emitted by the FFN half — the
-    block's largest GEMMs (the regime the paper benchmarks)."""
+    pipeline buffer (None when the plan doesn't pipeline masks). ``asg``
+    is this block's HostAssignment from the compiled schedule: with
+    emit_site="prev_gemm" the next consumer's mask is emitted under
+    attention's out-proj; with "ffn_up"/"ffn_down" by the FFN half — the
+    block's largest GEMMs (the regime the paper benchmarks).
+    Non-attention blocks (Griffin R layers, RWKV mixers) pass the carry
+    through untouched — the mixed-pattern pipeline the per-layer
+    schedule exists for."""
     x = constrain(x, "batch", "seq", "embed")
-    plan = rt.plan
-    site = (plan.site if (plan is not None and plan.enabled
-                          and plan.overlapped) else "xla")
-    ffn_hosts = emit_next and site in ("ffn_up", "ffn_down")
+    is_attn = kind in (AttentionKind.FULL, AttentionKind.LOCAL)
+    ffn_hosts = (emit and is_attn and asg is not None
+                 and asg.emit_site in ("ffn_up", "ffn_down"))
     h = norm_apply(p["norm_mix"], x, cfg)
-    y, mask_next = _mix_forward(p["mix"], h, cfg, rt, kind, layer_idx,
-                                mask_in=mask_in,
-                                emit_next=emit_next and not ffn_hosts)
+    y, mask_next = _mix_forward(
+        p["mix"], h, cfg, rt, kind, layer_idx, mask_in=mask_in,
+        emit_next=emit and is_attn and not ffn_hosts, asg=asg)
     x = x + y
     h2 = norm_apply(p["norm_ffn"], x, cfg)
     if ffn_hosts:
         b, s = x.shape[0], x.shape[1]
         f, aux, mask_next = _ffn_forward(
-            p, h2, cfg, rt, tag, layer_idx=layer_idx, host_site=site,
+            p, h2, cfg, rt, tag, layer_idx=layer_idx, asg=asg,
             mask_shape=(b, cfg.n_heads, s, s))
     else:
         f, aux, _ = _ffn_forward(p, h2, cfg, rt, tag)
+    if emit and not is_attn:
+        mask_next = mask_in        # carry rides through mixer-only blocks
     return x + f, aux, mask_next
 
 
@@ -263,69 +278,64 @@ def unembed(params, cfg: ModelConfig, x):
     return constrain(logits, "batch", None, "vocab")
 
 
-def _wants_carried_mask(cfg: ModelConfig, rt: Runtime) -> bool:
-    """The carried-site pipelines (prev_gemm / ffn_up / ffn_down) thread
-    one (B, H, S//32, S) buffer through the layer scan — which requires
-    every scanned layer to be an attention layer (uniform shapes + every
-    layer both consumes and produces a mask). Mixed patterns degrade to
-    per-layer generation inside attn_apply (same bits, no cross-layer
-    carry)."""
-    plan = rt.plan
-    if plan is None or not plan.carried:
-        return False
-    return all(k in (AttentionKind.FULL, AttentionKind.LOCAL)
-               for k in cfg.layer_kinds())
-
-
-def _resolve_auto_site(rt: Runtime, cfg: ModelConfig, x) -> Runtime:
-    """site="auto": let the producer scheduler pick the host GEMM for
-    this (model, shape) by Region-1 headroom, once per trace. The
-    returned Runtime carries a plan with a concrete site so the scan
-    compiles one static schedule."""
-    plan = rt.plan
-    if plan is None or plan.site != "auto":
-        return rt
-    from repro.core import producer
-    fuse_ok = rt.attn_impl == "pallas" and rt.policy is None
-    resolved = producer.resolve_plan(plan, cfg, x.shape[0], x.shape[1],
-                                     fuse_ok=fuse_ok)
-    return dataclasses.replace(rt, plan=resolved)
-
-
 def forward(params, cfg: ModelConfig, rt: Runtime, inputs
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Training/eval forward. inputs: tokens (B,S) or embeds (B,S,D).
     Returns (logits f32 (B,S,V), aux_loss).
 
-    With a carried site ("prev_gemm" / "ffn_up" / "ffn_down") the scan
-    carry additionally threads the packed mask buffer: layer l+1's
-    attention mask is generated under layer l's out-proj GEMM or FFN
-    up/down GEMM (paper's "previous GEMM layers" site — the FFN GEMMs are
-    the block's largest hosts). Layer 0 has no producer GEMM before it,
-    so its mask bootstraps from the standalone producer — the cross-layer
-    analogue of the Region-3 remainder. site="auto" resolves to a
-    concrete host here, once per trace."""
+    Mask production follows the compiled DropoutSchedule (rt.schedule,
+    or compiled here from the plan's site sugar — static data only, so
+    this happens once per trace and hits the compile cache). With a
+    carried site ("prev_gemm" / "ffn_up" / "ffn_down") the scan carry
+    additionally threads the packed mask buffer: the next attention
+    layer's mask is generated under the current attention block's
+    out-proj or FFN up/down GEMM (paper's "previous GEMM layers" site —
+    the FFN GEMMs are the block's largest hosts). In mixed Griffin-style
+    patterns the buffer rides through the recurrent blocks untouched and
+    the emission targets the *next attention layer* (asg.emit_stride).
+    The first consumer has no producer GEMM before it, so its mask
+    bootstraps from the standalone producer — the cross-layer analogue
+    of the Region-3 remainder."""
     x = embed_inputs(params, cfg, inputs, rt)
-    rt = _resolve_auto_site(rt, cfg, x)
+    sched = rt.schedule
+    if sched is not None and (sched.batch, sched.seq) != (x.shape[0],
+                                                          x.shape[1]):
+        sched = None               # stale artifact: recompile for shape
+    if sched is None and rt.plan is not None:
+        from repro.core import schedule as schedule_mod
+        sched = schedule_mod.compile_schedule(
+            cfg, rt.plan.cfg, x.shape[0], x.shape[1], policy=rt.policy,
+            attn_impl=rt.attn_impl)
+    active = sched is not None and sched.active
+    carry_mask = active and sched.carried
     aux_total = jnp.float32(0.0)
-    carry_mask = _wants_carried_mask(cfg, rt)
     mask_buf = None
     if carry_mask:
         from repro.core import producer
+        basg = sched.for_layer(sched.first_consumer)
         b, s = x.shape[0], x.shape[1]
         mask_buf = producer.standalone_packed_mask(
-            rt.plan, b, cfg.n_heads, s, s, 0, rt.step,
-            use_kernel=(rt.attn_impl == "pallas" and rt.policy is None))
+            rt.plan, b, cfg.n_heads, s, s, sched.first_consumer, rt.step,
+            use_kernel=basg.how == producer.HOW_STANDALONE,
+            policy=rt.policy if basg.sharded else None)
     for spec, stack_params in zip(build_stacks(cfg), params["stacks"]):
         unit_len = len(spec.unit)
+        # static per-unit-position assignments: the scan compiles ONE
+        # body, so the schedule guarantees positional periodicity
+        # within each stack (schedule._check_scan_periodicity)
+        unit_asgs = tuple(
+            sched.for_layer(spec.base + j) if active else None
+            for j in range(unit_len))
 
-        def unit_apply(x, mask, up, pos, _spec=spec, _ul=unit_len):
+        def unit_apply(x, mask, up, pos, _spec=spec, _ul=unit_len,
+                       _asgs=unit_asgs):
             aux = jnp.float32(0.0)
             for j, (kind, tag) in enumerate(_spec.unit):
                 lidx = _spec.base + pos * _ul + j
                 x, a, mask = block_apply(up[f"l{j}"], x, cfg, rt, kind,
-                                         tag, lidx, mask_in=mask,
-                                         emit_next=carry_mask)
+                                         tag, lidx, asg=_asgs[j],
+                                         mask_in=mask,
+                                         emit=carry_mask)
                 aux = aux + a
             return x, aux, mask
 
@@ -354,11 +364,12 @@ def forward(params, cfg: ModelConfig, rt: Runtime, inputs
             (x, aux_total), _ = jax.lax.scan(
                 body, (x, aux_total),
                 (stack_params, jnp.arange(spec.count)))
-    # the last layer's emitted mask (salt = n_layers) has no consumer —
-    # dropped here. The scan compiles ONE body for all iterations, so
-    # that final generation cannot be peeled away: prev_gemm mode pays
-    # one extra B*H*(S/32)*S mask per forward (hidden under the GEMM
-    # when fused; cheap but real in the XLA path).
+    # the last attention layer's emitted mask (consumer index beyond
+    # n_layers) has no consumer — dropped here. The scan compiles ONE
+    # body for all iterations, so that final generation cannot be
+    # peeled away: carried sites pay one extra B*H*(S/32)*S mask per
+    # forward (hidden under the GEMM when fused; cheap but real in the
+    # XLA path).
     x = norm_apply(params["final_norm"], x, cfg)
     return unembed(params, cfg, x), aux_total
 

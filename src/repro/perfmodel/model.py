@@ -126,6 +126,23 @@ def gemm_host_headroom(m: int, n: int, k: int, mask_elems: float,
     return hidden - t_rng
 
 
+def rank_host_gemms(shapes: Dict[str, Tuple[int, int, int]],
+                    mask_elems: float, hw: Hardware = GH100,
+                    rounds: int = 7, dtype_bytes: int = 2
+                    ) -> Tuple[Tuple[str, float], ...]:
+    """Candidate host GEMMs ranked by Region-1 headroom, best first.
+    ``shapes`` maps a site name to its (m, n, k); the result pairs each
+    site with ``gemm_host_headroom`` seconds. The schedule compiler
+    (core/schedule.py) consumes this both to resolve site="auto" and to
+    annotate explain() output with the margin each host was chosen by."""
+    ranked = sorted(
+        ((site, gemm_host_headroom(m, n, k, mask_elems, hw=hw,
+                                   rounds=rounds, dtype_bytes=dtype_bytes))
+         for site, (m, n, k) in shapes.items()),
+        key=lambda kv: -kv[1])
+    return tuple(ranked)
+
+
 def baseline_block_time(shape: BlockShape, hw: Hardware = GH100,
                         rounds: int = 7) -> float:
     """GEMMs + attention-with-fused-RNG (Fig. 5h). RNG shares the

@@ -20,8 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import ModelConfig, OptimizerConfig, RunConfig
-from repro.core import producer
 from repro.core.overlap import DropoutPlan, plan_from_config
+from repro.core.schedule import compile_schedule
 from repro.distributed.sharding import ShardingPolicy, use_policy
 from repro.models import Runtime, decode_step, forward, model_init
 from repro.optim import adamw_init, adamw_update
@@ -49,31 +49,30 @@ def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
 
 
 def _validate_dropout_plan(run: RunConfig) -> None:
-    """The producer-site knob only makes sense for decoupled RNG: fused
-    mode generates bits inside attention, so there is no producer GEMM to
-    host them. Catch the bad combo at step-build time, not mid-scan."""
+    """Cross-field check the per-field __post_init__ validation cannot
+    express: the producer-site knob only makes sense for decoupled RNG —
+    fused mode generates bits inside attention, so there is no producer
+    GEMM to host them. Catch the bad combo at step-build time, not
+    mid-scan."""
     d = run.dropout
-    producer.validate_site(d.site)
-    producer.validate_gemm_dtype(getattr(d, "gemm_dtype", "f32"))
     if d.site != "xla" and d.mode == "fused":
         raise ValueError(
             f"site={d.site!r} requires mode='overlap' (fused mode has no "
             "producer-GEMM site)")
 
 
-def _log_producer_decisions(context: str) -> None:
-    """Surface the static mask-producer scheduling decisions recorded
-    during tracing (core/producer.py trace events). The HOW_* fallback
-    tags are the observable: a fused call site silently degrading to the
-    XLA producer (Region 3 shrinkage, philox_bits=8, lost tiling) is a
-    host-selection regression this log makes visible."""
-    events = producer.drain_trace_events()
-    if not events:
-        return
-    for site, how, gemm_dtype, note in sorted(set(events)):
+def _log_schedule(context: str, sched) -> None:
+    """Surface the compiled schedule's per-layer host assignments. The
+    HOW_* tags are the observable: a host silently degrading to the XLA
+    producer (Region 3 shrinkage, philox_bits=8, lost tiling, an
+    unshardable mesh) is a host-selection regression this log makes
+    visible — before any step runs, and exactly once (the schedule is a
+    frozen artifact, so jit retraces cannot double-count it)."""
+    for site, how, gemm_dtype, note in sched.records():
         log.info("%s: dropout mask producer site=%s how=%s "
                  "gemm_dtype=%s%s", context, site, how, gemm_dtype,
                  f" ({note})" if note else "")
+    log.info("%s:\n%s", context, sched.explain())
 
 
 def make_train_step(cfg: ModelConfig, run: RunConfig,
@@ -87,6 +86,16 @@ def make_train_step(cfg: ModelConfig, run: RunConfig,
     plan = plan_from_config(run.dropout)
     remat = run.sharding.remat
     micro = run.train.microbatch
+    # plan -> compile: all producer-site decisions freeze here, ahead of
+    # trace; forward() executes by schedule lookup. Microbatching splits
+    # the leading batch dim, so the schedule is compiled for the
+    # per-microbatch shape the forward actually sees.
+    b_eff = run.shape.global_batch // micro if micro and micro > 1 \
+        else run.shape.global_batch
+    sched = compile_schedule(cfg, run.dropout, b_eff, run.shape.seq_len,
+                             policy=policy,
+                             attn_impl=run.sharding.attn_impl)
+    _log_schedule(f"train_step[site={run.dropout.site}]", sched)
 
     def loss_fn(master, x, y, step):
         params = jax.tree.map(lambda a: a.astype(compute_dtype), master)
@@ -96,7 +105,8 @@ def make_train_step(cfg: ModelConfig, run: RunConfig,
                                   if run.sharding.attn_probs_bf16
                                   else None),
                      moe_seq_dispatch=run.sharding.moe_seq_dispatch,
-                     attn_impl=run.sharding.attn_impl)
+                     attn_impl=run.sharding.attn_impl,
+                     schedule=sched)
         with use_policy(policy):
             logits, aux = forward(params, cfg, rt, x)
             ce = cross_entropy(logits, y)
@@ -136,9 +146,6 @@ def make_train_step(cfg: ModelConfig, run: RunConfig,
             step, compute_dtype)
         new_state = {"master": master, "opt": opt, "step": step + 1}
         metrics = {"loss": loss, "ce": ce, "aux": aux, **om}
-        # runs at trace time (once per jit cache entry): surface the
-        # static producer-site decisions made while tracing the forward
-        _log_producer_decisions(f"train_step[site={run.dropout.site}]")
         return new_state, metrics
 
     return train_step

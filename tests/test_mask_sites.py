@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.config.base import (
+    DROPOUT_SITES,
     AttentionKind,
     DropoutPlanConfig,
     FFNKind,
@@ -76,12 +77,13 @@ def test_sites_bit_identical(rng_key, site):
                                 layer_idx=layer, step=step)
         y, got = ffn_apply(fp, x, cfg, host=host)
         assert y.shape == x.shape
-    else:  # auto: resolve, then produce at the chosen host GEMM
-        resolved = producer.resolve_plan(plan, cfg, b, s, fuse_ok=True)
-        assert resolved.site in producer.DROPOUT_SITES
-        assert resolved.site != "auto"
+    else:  # auto: compile the schedule, then produce at the chosen host
+        from repro.core.schedule import compile_schedule
+        sched = compile_schedule(cfg, plan.cfg, b, s, attn_impl="pallas")
+        assert sched.resolved_site in DROPOUT_SITES
+        assert sched.resolved_site != "auto"
         got = producer.standalone_packed_mask(
-            resolved, b, h, s, s, layer, step)
+            plan, b, h, s, s, layer, step)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
@@ -207,9 +209,10 @@ def test_forward_qkv_site_pallas_runs(rng_key):
     assert bool(jnp.isfinite(logits).all())
 
 
-def test_mixed_pattern_prev_gemm_degrades(rng_key):
-    """A non-uniform block pattern cannot carry the buffer; prev_gemm
-    degrades to per-layer generation with the SAME bits."""
+def test_mixed_pattern_prev_gemm_carries(rng_key):
+    """A non-uniform block pattern now CARRIES the buffer through the
+    recurrent blocks (per-layer schedule routing, emit_stride to the
+    next attention layer) — same bits as per-layer generation."""
     cfg = _small_cfg(
         n_layers=2, local_window=32,
         block_pattern=(AttentionKind.RECURRENT, AttentionKind.FULL))
@@ -266,6 +269,9 @@ def test_train_step_grads_through_fused_sites(rng_key, site, impl):
 
 
 def test_site_validation():
+    """Bad knob values fail at CONSTRUCTION (__post_init__), not deep
+    inside the schedule compiler; the cross-field mode/site check stays
+    at step-build time."""
     from repro.config.base import ShapeConfig, StepKind
     from repro.config.base import RunConfig
     from repro.train.loop import _validate_dropout_plan
@@ -274,26 +280,21 @@ def test_site_validation():
     ok = RunConfig(model=cfg, shape=shape,
                    dropout=DropoutPlanConfig(mode="overlap", site="qkv"))
     _validate_dropout_plan(ok)
-    bad_site = RunConfig(model=cfg, shape=shape,
-                         dropout=DropoutPlanConfig(mode="overlap",
-                                                   site="nope"))
-    with pytest.raises(ValueError):
-        _validate_dropout_plan(bad_site)
+    with pytest.raises(ValueError, match="site"):
+        DropoutPlanConfig(mode="overlap", site="nope")
+    with pytest.raises(ValueError, match="gemm_dtype"):
+        DropoutPlanConfig(mode="overlap", site="qkv", gemm_dtype="int4")
+    with pytest.raises(ValueError, match="philox_bits"):
+        DropoutPlanConfig(mode="overlap", philox_bits=16)
+    for site in ("ffn_up", "ffn_down", "auto"):
+        _validate_dropout_plan(RunConfig(
+            model=cfg, shape=shape,
+            dropout=DropoutPlanConfig(mode="overlap", site=site)))
     bad_mode = RunConfig(model=cfg, shape=shape,
                          dropout=DropoutPlanConfig(mode="fused",
                                                    site="qkv"))
     with pytest.raises(ValueError):
         _validate_dropout_plan(bad_mode)
-    for site in ("ffn_up", "ffn_down", "auto"):
-        _validate_dropout_plan(RunConfig(
-            model=cfg, shape=shape,
-            dropout=DropoutPlanConfig(mode="overlap", site=site)))
-    bad_dtype = RunConfig(model=cfg, shape=shape,
-                          dropout=DropoutPlanConfig(mode="overlap",
-                                                    site="qkv",
-                                                    gemm_dtype="int4"))
-    with pytest.raises(ValueError):
-        _validate_dropout_plan(bad_dtype)
 
 
 def test_auto_site_picks_largest_headroom():
@@ -321,21 +322,27 @@ def test_standalone_kernel_keeps_512_only_shapes():
         plan, sq, sk, fused=False) is None
     assert producer.mask_kernel_unsupported_reason(
         plan, sq, sk, fused=True) is not None
-    producer.drain_trace_events()
     got = producer.standalone_packed_mask(plan, 1, 1, sq, sk, 0, 0,
                                           use_kernel=True)
-    # no fallback event: the standalone kernel itself produced the bits
-    assert not producer.drain_trace_events()
     want = philox_mask_ref(1, 1, sq, sk, _P, int(plan.step_seed(0)),
                            int(plan.salt(0)))
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_fallback_tags_are_observable():
-    """Satellite bugfix: a fused call site silently losing its kernel
-    (e.g. a philox_bits=8 plan) must leave a trace event carrying the
-    HOW_* tag so train/loop logging can surface the regression."""
-    producer.drain_trace_events()
+    """A fused host silently losing its kernel (e.g. a philox_bits=8
+    plan) must surface in the compiled schedule's records — attached to
+    the frozen artifact (trace-safe, no double counting under retraces)
+    instead of the old mutable module global."""
+    from repro.core.schedule import compile_schedule
+    cfg = _small_cfg()
+    sched = compile_schedule(cfg, DropoutPlanConfig(
+        mode="overlap", p=_P, seed=_SEED, site="qkv", philox_bits=8),
+        1, 128, attn_impl="pallas")
+    recs = sched.records()
+    assert any(r[1] == producer.HOW_XLA and "philox_bits=8" in r[3]
+               for r in recs), recs
+    # and the runtime executor follows the planned degrade
     plan8 = _plan("qkv", philox_bits=8)
     b, h, s = 1, 2, 128
     x2d = jnp.ones((b * s, 64), jnp.float32)
@@ -343,23 +350,19 @@ def test_fallback_tags_are_observable():
     _, _, how = producer.gemm_with_mask(
         x2d, w, plan8, (b, h, s, s), 0, 0)
     assert how == producer.HOW_XLA
-    events = producer.drain_trace_events()
-    assert any(e[1] == producer.HOW_XLA and "philox_bits=8" in e[3]
-               for e in events), events
-    # the standalone producer records the same loss at fused call sites
-    producer.standalone_packed_mask(plan8, b, h, s, s, 0, 0,
-                                    use_kernel=True)
-    events = producer.drain_trace_events()
-    assert any("philox_bits=8" in e[3] for e in events), events
+    # records are a pure function of the artifact: re-reading them
+    # cannot double-count (the old drain() global did under retraces)
+    assert sched.records() == recs
 
 
-def test_trace_events_logged_from_train_loop(rng_key, caplog):
-    """The train loop surfaces the producer decisions as log records."""
+def test_schedule_logged_from_train_loop(rng_key, caplog):
+    """The train loop logs the compiled schedule's host assignments at
+    step-build time — before any step runs."""
     import logging
 
     from repro.config.base import (RunConfig, ShapeConfig, ShardingConfig,
                                    StepKind, TrainConfig)
-    from repro.train.loop import init_train_state, make_train_step
+    from repro.train.loop import make_train_step
     cfg = _small_cfg()
     run = RunConfig(
         model=cfg, shape=ShapeConfig("t", 128, 1, StepKind.TRAIN),
@@ -367,12 +370,9 @@ def test_trace_events_logged_from_train_loop(rng_key, caplog):
                                   site="ffn_up"),
         sharding=ShardingConfig(attn_impl="pallas"),
         train=TrainConfig())
-    x = jax.random.randint(jax.random.PRNGKey(1), (1, 128), 0,
-                           cfg.vocab_size)
-    y = jax.random.randint(jax.random.PRNGKey(2), (1, 128), 0,
-                           cfg.vocab_size)
-    state = init_train_state(jax.random.PRNGKey(0), cfg)
     with caplog.at_level(logging.INFO, logger="repro.train"):
-        jax.jit(make_train_step(cfg, run))(state, x, y)
+        make_train_step(cfg, run)
     assert any("dropout mask producer" in r.message
+               for r in caplog.records), caplog.records
+    assert any("dropout schedule:" in r.message
                for r in caplog.records), caplog.records
