@@ -19,6 +19,16 @@ def _t(fn, *a, iters=3, **kw):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _timed_once(fn):
+    """(us, result) of a SINGLE cold invocation — the smoke lane's
+    budget is seconds, so no warmup and no re-invocation for metadata."""
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(
+        [o for o in out if hasattr(o, "block_until_ready")])
+    return (time.perf_counter() - t0) * 1e6, out
+
+
 def bench_attention_modes() -> List[Row]:
     """Paper Fig. 4 on our kernels: attention with fused RNG vs attention
     consuming precomputed bits (the dropping step only)."""
@@ -146,6 +156,41 @@ def bench_mask_sites() -> List[Row]:
     return rows
 
 
+def _moe_site_cases(plan, B, H, S, D, E, CAP, FF):
+    """(site -> zero-arg callable) producing (y, mask, how) for a MoE
+    expert block through the real grouped producer entry points: the
+    mask hosted under the (E, CAP, D)x(E, D, FF) gate einsum ("ffn_up")
+    or the (E, CAP, FF)x(E, FF, D) down einsum ("ffn_down"), with the
+    standalone/XLA producers as the non-grouped reference sites."""
+    from repro.core import producer
+
+    key = jax.random.PRNGKey(7)
+    recv = jax.random.normal(key, (E, CAP, D), jnp.float32)
+    w_gate = jax.random.normal(key, (E, D, FF), jnp.float32)
+    h = jax.random.normal(key, (E, CAP, FF), jnp.float32)
+    w_down = jax.random.normal(key, (E, FF, D), jnp.float32)
+    layer, step = 1, 0
+
+    def site_xla():
+        return (None, plan.precompute_mask(B, H, S, S, layer, step),
+                "xla")
+
+    def site_standalone():
+        return (None, producer.standalone_packed_mask(
+            plan, B, H, S, S, layer, step), "standalone")
+
+    def make(a3, b3):
+        return lambda: producer.grouped_gemm_with_mask(
+            a3, b3, plan, (B, H, S, S), layer, step)
+
+    return {
+        "xla": site_xla,
+        "standalone": site_standalone,
+        "ffn_up": make(recv, w_gate),
+        "ffn_down": make(h, w_down),
+    }
+
+
 def bench_gemm_dtypes() -> List[Row]:
     """Per-dtype fused GEMM+RNG host (f32 | bf16 | fp8 per-tile-scaled):
     interpret-mode op-count trend + the fp8 error against the f32 GEMM."""
@@ -216,31 +261,96 @@ def block_json_records() -> list:
         if not quant.have_fp8() and dtype == "fp8":
             rec["skipped"] = "no float8_e4m3fn"
         records.append(rec)
+    # grouped-host MoE records: the standalone producer eliminated from
+    # expert blocks — cross-PR perf tracking finally has MoE datapoints
+    E, CAP, FF = 4, 256, 128
+    for site, fn in _moe_site_cases(plan, B, H, S, D, E, CAP, FF).items():
+        how = fn()[2]
+        records.append({
+            "group": "moe_mask_site", "site": site, "dtype": "f32",
+            "how": how, "us_per_call": round(_t(fn), 1),
+            "shape": {"batch": B, "heads": H, "seq": S, "d_model": D,
+                      "n_experts": E, "capacity": CAP,
+                      "d_ff_expert": FF},
+        })
     return records
 
 
-def block_schedule_summaries() -> dict:
-    """Resolved per-layer dropout schedules for the bench block shape —
-    embedded in BENCH_block.json so every perf record is attributable to
-    the concrete host assignments that produced it across PRs."""
-    from repro.config.base import (AttentionKind, DropoutPlanConfig,
-                                   ModelConfig)
-    from repro.core.schedule import compile_schedule
-
+def _bench_cfgs():
+    """The dense and MoE bench-block model configs (one source for the
+    schedule summaries and the smoke lane)."""
+    from repro.config.base import (AttentionKind, ModelConfig, MoEConfig)
     B, H, S, D, FF = 1, 4, 256, 512, 1024
-    cfg = ModelConfig(
+    dense = ModelConfig(
         name="bench-block", family="dense", n_layers=2, d_model=D,
         n_heads=H, n_kv_heads=H, d_ff=FF, vocab_size=256,
         head_dim=D // H, block_pattern=(AttentionKind.FULL,),
         attn_dropout=0.1)
+    moe = ModelConfig(
+        name="bench-moe-block", family="moe", n_layers=2, d_model=D,
+        n_heads=H, n_kv_heads=H, d_ff=FF, vocab_size=256,
+        head_dim=D // H, block_pattern=(AttentionKind.FULL,),
+        attn_dropout=0.1,
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=128,
+                      capacity_factor=2.0))
+    return (B, H, S, D, FF), dense, moe
+
+
+def block_schedule_summaries() -> dict:
+    """Resolved per-layer dropout schedules for the bench block shapes
+    (dense AND MoE) — embedded in BENCH_block.json so every perf record
+    is attributable to the concrete host assignments that produced it
+    across PRs."""
+    from repro.config.base import DropoutPlanConfig
+    from repro.core.schedule import compile_schedule
+
+    (B, H, S, D, FF), dense, moe = _bench_cfgs()
     out = {}
     for site in ("xla", "qkv", "prev_gemm", "ffn_up", "ffn_down",
                  "auto"):
         sched = compile_schedule(
-            cfg, DropoutPlanConfig(mode="overlap", p=0.1, site=site),
+            dense, DropoutPlanConfig(mode="overlap", p=0.1, site=site),
             B, S, attn_impl="pallas")
         out[site] = sched.summary()
+        moe_sched = compile_schedule(
+            moe, DropoutPlanConfig(mode="overlap", p=0.1, site=site),
+            B, S, attn_impl="pallas")
+        out[f"moe/{site}"] = moe_sched.summary()
     return out
+
+
+def smoke_records() -> list:
+    """The --smoke lane: one tiny MoE and one dense block per producer
+    site, through the REAL producer entry points, in seconds — enough to
+    catch a broken site/how wiring or a BENCH schema drift in CI without
+    the full bench run."""
+    from repro.config.base import DropoutPlanConfig
+    from repro.core.overlap import plan_from_config
+
+    B, H, S, D, FF = 1, 2, 128, 128, 256
+    E, CAP = 2, 128
+    plan = plan_from_config(
+        DropoutPlanConfig(mode="overlap", p=0.1, seed=0))
+    records = []
+    for site, fn in _mask_site_cases(plan, B, H, S, D, FF).items():
+        us, out = _timed_once(fn)
+        records.append({
+            "group": "smoke_dense", "site": site, "dtype": "f32",
+            "how": out[2], "us_per_call": round(us, 1),
+            "shape": {"batch": B, "heads": H, "seq": S, "d_model": D,
+                      "d_ff": FF},
+        })
+    for site, fn in _moe_site_cases(plan, B, H, S, D, E, CAP,
+                                    FF).items():
+        us, out = _timed_once(fn)
+        records.append({
+            "group": "smoke_moe", "site": site, "dtype": "f32",
+            "how": out[2], "us_per_call": round(us, 1),
+            "shape": {"batch": B, "heads": H, "seq": S, "d_model": D,
+                      "n_experts": E, "capacity": CAP,
+                      "d_ff_expert": FF},
+        })
+    return records
 
 
 def bench_wkv() -> List[Row]:

@@ -7,10 +7,17 @@ Prints ``name,us_per_call,derived`` CSV.
 
 ``--json PATH`` (canonically BENCH_block.json) instead emits the
 machine-readable per-site / per-dtype transformer-block record (mask-site
-bench across all five producer sites + fp8-vs-bf16 fused GEMM host) so
-the perf trajectory is tracked across PRs:
+bench across all five producer sites, the grouped-host MoE sites, and
+the fp8-vs-bf16 fused GEMM host) so the perf trajectory is tracked
+across PRs:
 
     PYTHONPATH=src python -m benchmarks.run --json BENCH_block.json
+
+``--smoke`` runs one tiny MoE and one dense block per producer site in
+seconds and asserts the BENCH JSON record schema — the CI guard against
+a broken site/how wiring or a silent schema drift:
+
+    PYTHONPATH=src python -m benchmarks.run --smoke
 """
 from __future__ import annotations
 
@@ -92,6 +99,43 @@ def write_block_json(path: str) -> None:
     print(f"wrote {len(payload['records'])} records to {path}")
 
 
+BENCH_RECORD_KEYS = ("group", "site", "dtype", "how", "us_per_call",
+                     "shape")
+
+
+def run_smoke() -> int:
+    """--smoke: one tiny MoE and one dense block per site, plus a schema
+    assertion on every emitted record. Returns a process exit code."""
+    from benchmarks import kernel_bench
+    records = kernel_bench.smoke_records()
+    bad = []
+    for r in records:
+        missing = set(BENCH_RECORD_KEYS) - set(r)
+        if missing:
+            bad.append((r, f"missing keys {sorted(missing)}"))
+        elif not isinstance(r["us_per_call"], float):
+            bad.append((r, "us_per_call is not a float"))
+        elif not isinstance(r["shape"], dict):
+            bad.append((r, "shape is not a dict"))
+    # the payload must round-trip as JSON (the BENCH_block.json contract)
+    json.loads(json.dumps({"schema": "bench_block/v2",
+                           "records": records}))
+    print("group,site,us_per_call,how")
+    for r in records:
+        print(f"{r['group']},{r['site']},{r['us_per_call']:.1f},"
+              f"{r['how']}")
+    groups = {r["group"] for r in records}
+    for missing_group in {"smoke_dense", "smoke_moe"} - groups:
+        bad.append(({"groups": sorted(groups)},
+                    f"no records in group {missing_group!r}"))
+    if bad:
+        for r, why in bad:
+            print(f"SCHEMA VIOLATION: {why}: {r}")
+        return 1
+    print(f"smoke OK: {len(records)} records, schema bench_block/v2")
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -99,7 +143,12 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the per-site/per-dtype block record "
                          "(BENCH_block.json) and exit")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny per-site dense+MoE blocks + BENCH "
+                         "schema assertion (seconds, CI-friendly)")
     args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(run_smoke())
     if args.json:
         write_block_json(args.json)
         return

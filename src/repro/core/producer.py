@@ -9,13 +9,24 @@ generated is made once, ahead of trace, by ``compile_schedule``; this
 module holds the shared capability predicates the compiler consults and
 the executors the model calls with the planned ``how``:
 
-  "gemm_rng"   — inside the fused GEMM+RNG Pallas kernel (MXU ∥ VPU),
-                 f32/bf16 operands or the per-tile-scaled fp8(e4m3) path
-  "standalone" — the standalone philox Pallas kernel (paper Region 3:
-                 the GEMM could not host the RNG, the remainder runs
-                 exposed — but still producer-side, before attention)
-  "xla"        — XLA-generated bits (non-Pallas path / 8-bit Philox
-                 scheme, which only the XLA producer knows)
+  "gemm_rng"         — inside the fused GEMM+RNG Pallas kernel
+                       (MXU ∥ VPU), f32/bf16 operands or the
+                       per-tile-scaled fp8(e4m3) path
+  "gemm_rng_grouped" — inside the grouped expert-GEMM kernel: the MoE
+                       (E, C, D)x(E, D, F) einsum or an RWKV channel-mix
+                       GEMM (E=1) hosts the RNG; the emission grid is
+                       decoupled from the GEMM grid, so the permuted /
+                       capacity-dropped token layout never reaches the
+                       bits (they index the (b, h, q, k) counter space)
+  "standalone"       — the standalone philox Pallas kernel (paper
+                       Region 3: the GEMM could not host the RNG, the
+                       remainder runs exposed — but still producer-side,
+                       before attention)
+  "xla"              — XLA-generated bits (non-Pallas path / 8-bit
+                       Philox scheme, which only the XLA producer knows)
+
+Fallback chain for a grouped host: gemm_rng_grouped → standalone (the
+kernel's own layout check stays authoritative at run time) → xla.
 
 With a sharding policy installed, the kernel producers run SHARD-LOCAL
 inside ``compat.shard_map``: each shard generates its (b_loc, h_loc)
@@ -46,6 +57,7 @@ from repro.core import dropout_rng
 from repro.core.overlap import DropoutPlan
 
 HOW_GEMM = "gemm_rng"
+HOW_GEMM_GROUPED = "gemm_rng_grouped"
 HOW_STANDALONE = "standalone"
 HOW_XLA = "xla"
 
@@ -162,6 +174,25 @@ def _flat_axis_index(axes: Tuple[str, ...], mesh) -> jnp.ndarray:
     return idx
 
 
+def shard_mask_tile(shard: ShardExec, batch: int, n_heads: int, sq: int,
+                    sk: int):
+    """This device's tile of the (batch, n_heads) mask plane — callable
+    only INSIDE a shard_map body over ``shard.mesh``. Returns
+    (local_mask_shape, heads_global, bh_offset) for the kernel
+    producers' global-position counters; with ``shard`` None, the
+    whole-mask identity ((batch, n_heads, sq, sk), 0, 0)."""
+    if shard is None:
+        return (batch, n_heads, sq, sk), 0, 0
+    b_loc = batch // shard.batch_shards
+    h_loc = n_heads // shard.head_shards
+    b0 = _flat_axis_index(shard.batch_axes, shard.mesh) \
+        * jnp.uint32(b_loc)
+    h0 = _flat_axis_index(shard.head_axes, shard.mesh) \
+        * jnp.uint32(h_loc)
+    return ((b_loc, h_loc, sq, sk), n_heads,
+            b0 * jnp.uint32(n_heads) + h0)
+
+
 # --------------------------------------------------------------------------
 # producers
 # --------------------------------------------------------------------------
@@ -186,18 +217,13 @@ def standalone_packed_mask(plan: DropoutPlan, batch: int, n_heads: int,
             return ops.dropout_mask(batch, n_heads, sq, sk, plan.cfg.p,
                                     seed, salt, plan.cfg.philox_rounds)
         from jax.sharding import PartitionSpec as P
-        b_loc = batch // shard.batch_shards
-        h_loc = n_heads // shard.head_shards
 
         def body(sd_, sl_):
-            b0 = _flat_axis_index(shard.batch_axes, shard.mesh) \
-                * jnp.uint32(b_loc)
-            h0 = _flat_axis_index(shard.head_axes, shard.mesh) \
-                * jnp.uint32(h_loc)
-            off = b0 * jnp.uint32(n_heads) + h0
+            (b_loc, h_loc, _sq, _sk), hg, off = shard_mask_tile(
+                shard, batch, n_heads, sq, sk)
             return ops.dropout_mask(
                 b_loc, h_loc, sq, sk, plan.cfg.p, sd_, sl_,
-                plan.cfg.philox_rounds, heads_global=n_heads,
+                plan.cfg.philox_rounds, heads_global=hg,
                 bh_offset=off)
 
         return shard_map(
@@ -341,25 +367,21 @@ def _gemm_with_mask_sharded(x2d, w2d, plan, mask_shape, layer_idx, step,
     ms = P(shard.b_spec, shard.h_spec, None, None)
 
     def body(x_, w_, sd_, sl_):
-        b0 = _flat_axis_index(shard.batch_axes, shard.mesh) \
-            * jnp.uint32(b_loc)
-        h0 = _flat_axis_index(shard.head_axes, shard.mesh) \
-            * jnp.uint32(h_loc)
-        off = b0 * jnp.uint32(n_heads) + h0
-        local_shape = (b_loc, h_loc, sq, sk)
+        local_shape, hg, off = shard_mask_tile(shard, batch, n_heads,
+                                               sq, sk)
         if fused:
             y, mask, _dt = _fused_gemm_call(
                 x_, w_, plan, local_shape, sd_, sl_, blocks,
-                plan.gemm_dtype, heads_global=n_heads, bh_offset=off)
+                plan.gemm_dtype, heads_global=hg, bh_offset=off)
         else:
             y = x_ @ w_ if blocks is None else _fused_gemm_call(
                 x_, w_, plan, local_shape, sd_, sl_, blocks,
-                plan.gemm_dtype, heads_global=n_heads, bh_offset=off)[0]
+                plan.gemm_dtype, heads_global=hg, bh_offset=off)[0]
             mask = None
         if mask is None:        # Region 3, shard-local remainder
             mask = ops.dropout_mask(
-                b_loc, h_loc, sq, sk, plan.cfg.p, sd_, sl_,
-                plan.cfg.philox_rounds, heads_global=n_heads,
+                local_shape[0], local_shape[1], sq, sk, plan.cfg.p, sd_,
+                sl_, plan.cfg.philox_rounds, heads_global=hg,
                 bh_offset=off)
         return y, mask
 
@@ -371,16 +393,179 @@ def _gemm_with_mask_sharded(x2d, w2d, plan, mask_shape, layer_idx, step,
 
 
 # --------------------------------------------------------------------------
+# grouped (MoE expert / RWKV channel-mix) hosting
+# --------------------------------------------------------------------------
+
+def grouped_layout_feasible(e: int, c: int, kdim: int, n: int, batch: int,
+                            n_heads: int, sq: int, sk: int
+                            ) -> Tuple[bool, Optional[Tuple[int, int, int]]]:
+    """(feasible, blocks) of hosting a (batch, n_heads, sq, sk) mask
+    under the combined grid of E (c, kdim)x(kdim, n) expert GEMMs —
+    the exact predicate the grouped kernel applies at trace time."""
+    blocks = pick_gemm_blocks(c, n, kdim)
+    if blocks is None:
+        return False, None
+    from repro.kernels.gemm_rng import mask_layout_feasible
+    bm, bn, _ = blocks
+    n_steps = e * (c // bm) * (n // bn)
+    return mask_layout_feasible(n_steps, batch, n_heads, sq, sk), blocks
+
+
+def grouped_gemm_seeded(a3: jnp.ndarray, b3: jnp.ndarray,
+                        plan: DropoutPlan,
+                        mask_shape: Tuple[int, int, int, int],
+                        seed, salt, heads_global: int = 0, bh_offset=0
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, str]:
+    """y[e] = a3[e] @ b3[e] with the packed mask for ``mask_shape``
+    (LOCAL (B, H, SQ, SK)) produced under the grouped GEMM. ``seed`` /
+    ``salt`` are pre-folded uint32 scalars, so this executor is callable
+    from INSIDE a shard_map body (the MoE dispatch paths) — the caller
+    owns the shard-local offsets (``heads_global``/``bh_offset``) and
+    the mask out-spec. Returns (y, mask, how); Region 3 and untileable
+    shapes degrade to the standalone kernel (same bits, plain einsum —
+    for an fp8 plan the Region-3 GEMM runs unquantized, a path the
+    scheduler plans around)."""
+    from repro.kernels import ops
+    batch, n_heads, sq, sk = mask_shape
+    e, c, kdim = a3.shape
+    n = b3.shape[2]
+
+    def _standalone_mask(y):
+        mask = ops.dropout_mask(batch, n_heads, sq, sk, plan.cfg.p, seed,
+                                salt, plan.cfg.philox_rounds,
+                                heads_global=heads_global,
+                                bh_offset=bh_offset)
+        return y, mask, HOW_STANDALONE
+
+    blocks = pick_gemm_blocks(c, n, kdim)
+    if blocks is None:
+        return _standalone_mask(jnp.einsum("ecd,edf->ecf", a3, b3))
+    bm, bn, bk = blocks
+    kw = dict(mask_batch=batch, mask_heads=n_heads, mask_sq=sq,
+              mask_sk=sk, p=plan.cfg.p, seed=seed, salt=salt,
+              rounds=plan.cfg.philox_rounds, block_m=bm, block_n=bn,
+              block_k=bk, heads_global=heads_global, bh_offset=bh_offset)
+    gemm_dtype = plan.gemm_dtype
+    if gemm_dtype == "fp8":
+        from repro.kernels import quant
+        if quant.have_fp8():
+            y, mask = ops.fused_gemm_rng_grouped_fp8(a3, b3, **kw)
+            if mask is None:
+                return _standalone_mask(y)
+            return y, mask, HOW_GEMM_GROUPED
+        gemm_dtype = "f32"          # fp8 unavailable: f32 grouped host
+    a = a3.astype(jnp.bfloat16) if gemm_dtype == "bf16" else a3
+    b = b3.astype(jnp.bfloat16) if gemm_dtype == "bf16" else b3
+    y, mask = ops.fused_gemm_rng_grouped(a, b, **kw)
+    if gemm_dtype == "bf16":
+        y = y.astype(a3.dtype)
+    if mask is None:
+        return _standalone_mask(y)
+    return y, mask, HOW_GEMM_GROUPED
+
+
+def grouped_gemm_with_mask(a3: jnp.ndarray, b3: jnp.ndarray,
+                           plan: DropoutPlan,
+                           mask_shape: Tuple[int, int, int, int],
+                           layer_idx, step, how: Optional[str] = None,
+                           policy=None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, str]:
+    """Whole-mask grouped host: y[e] = a3[e] @ b3[e] plus the packed
+    mask for the GLOBAL ``mask_shape``, produced at this grouped GEMM.
+    The direct-call / RWKV-channel-mix (E=1) entry point — MoE dispatch
+    calls ``grouped_gemm_seeded`` from inside its own shard_map instead.
+
+    With ``policy`` installed and a kernel ``how``, production runs
+    shard-local: the C rows follow the batch shards (valid only for the
+    token-ordered E=1 channel-mix host), the mask tile follows the
+    (batch, heads) shards — bits equal the global mask's slice exactly."""
+    batch, n_heads, sq, sk = mask_shape
+    e, c, kdim = a3.shape
+    n = b3.shape[2]
+    if how is None:
+        reason = mask_kernel_unsupported_reason(plan, sq, sk)
+        feasible, _ = grouped_layout_feasible(e, c, kdim, n, batch,
+                                              n_heads, sq, sk)
+        if reason is not None:
+            how = HOW_XLA
+        elif feasible:
+            how = HOW_GEMM_GROUPED
+        else:
+            how = HOW_STANDALONE
+    if how == HOW_XLA:
+        y = jnp.einsum("ecd,edf->ecf", a3, b3)
+        mask = dropout_rng.packed_mask(
+            batch, n_heads, sq, sk, plan.cfg.p, plan.step_seed(step),
+            plan.salt(layer_idx), plan.cfg.philox_rounds,
+            plan.cfg.philox_bits)
+        return y, mask, HOW_XLA
+    if how == HOW_STANDALONE:
+        # honor the planned realization BEFORE the shard branch: a
+        # standalone plan under a policy runs the shard-local standalone
+        # kernel, never a recomputed grouped attempt
+        y = jnp.einsum("ecd,edf->ecf", a3, b3)
+        mask = standalone_packed_mask(plan, batch, n_heads, sq, sk,
+                                      layer_idx, step, policy=policy)
+        return y, mask, HOW_STANDALONE
+    shard = shard_exec(policy, batch, n_heads)
+    if shard is not None:
+        return _grouped_gemm_with_mask_sharded(a3, b3, plan, mask_shape,
+                                               layer_idx, step, shard)
+    seed = jnp.asarray(plan.step_seed(step), jnp.uint32)
+    salt = jnp.asarray(plan.salt(layer_idx), jnp.uint32)
+    return grouped_gemm_seeded(a3, b3, plan, mask_shape, seed, salt)
+
+
+def _grouped_gemm_with_mask_sharded(a3, b3, plan, mask_shape, layer_idx,
+                                    step, shard: ShardExec
+                                    ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                               str]:
+    """Shard-local grouped host (E=1 channel-mix): each shard runs the
+    grouped kernel on its batch rows of the token-ordered C dim and
+    emits its (b_loc, h_loc) tile of the mask plane."""
+    from jax.sharding import PartitionSpec as P
+    batch, n_heads, sq, sk = mask_shape
+    b_loc = batch // shard.batch_shards
+    h_loc = n_heads // shard.head_shards
+    e, c, kdim = a3.shape
+    n = b3.shape[2]
+    c_loc = c // shard.batch_shards
+    fused, _ = grouped_layout_feasible(e, c_loc, kdim, n, b_loc, h_loc,
+                                       sq, sk)
+    seed = jnp.asarray(plan.step_seed(step), jnp.uint32)
+    salt = jnp.asarray(plan.salt(layer_idx), jnp.uint32)
+    xs = P(None, shard.b_spec, None)
+    ms = P(shard.b_spec, shard.h_spec, None, None)
+
+    def body(a_, b_, sd_, sl_):
+        local_shape, hg, off = shard_mask_tile(shard, batch, n_heads,
+                                               sq, sk)
+        return grouped_gemm_seeded(
+            a_, b_, plan, local_shape, sd_, sl_,
+            heads_global=hg, bh_offset=off)[:2]
+
+    y, mask = shard_map(
+        body, mesh=shard.mesh,
+        in_specs=(xs, P(None, None, None), P(), P()),
+        out_specs=(xs, ms), check_vma=False,
+    )(a3, b3, seed, salt)
+    return y, mask, HOW_GEMM_GROUPED if fused else HOW_STANDALONE
+
+
+# --------------------------------------------------------------------------
 # FFN hosting (site="ffn_up" / "ffn_down")
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class FFNHost:
-    """Instruction to models/layers.ffn_apply to host the mask producer
-    under one of its GEMMs. ``layer_idx`` is the CONSUMER layer (the
-    transformer passes the next attention layer: the mask rides the
-    carried scan buffer there). ``how`` is the schedule's planned
-    producer for the emission; ``policy`` enables shard-local runs."""
+    """Instruction to the block's FFN half to host the mask producer
+    under one of its GEMMs — models/layers.ffn_apply for dense FFNs
+    (dense fused kernel) and RWKV channel-mix (grouped kernel, E=1),
+    models/moe.moe_apply for MoE expert FFNs (grouped kernel over the
+    expert einsum). ``layer_idx`` is the CONSUMER layer (the transformer
+    passes the next attention layer: the mask rides the carried scan
+    buffer there). ``how`` is the schedule's planned producer for the
+    emission; ``policy`` enables shard-local runs."""
     plan: DropoutPlan
     site: str                           # "ffn_up" | "ffn_down"
     mask_shape: Tuple[int, int, int, int]
@@ -394,11 +579,16 @@ class FFNHost:
 # block-aware host selection (site="auto")
 # --------------------------------------------------------------------------
 
-def block_gemm_shapes(cfg: ModelConfig, batch: int, seq: int
+def block_gemm_shapes(cfg: ModelConfig, batch: int, seq: int,
+                      dense_ffn: Optional[bool] = None
                       ) -> Dict[str, Tuple[int, int, int]]:
-    """(m, n, k) of each candidate host GEMM in one transformer block.
-    FFN sites only exist for dense (non-MoE) blocks with a GEMM-shaped
-    FFN; carried feasibility is the caller's concern."""
+    """(m, n, k) of each candidate DENSE host GEMM in one transformer
+    block. FFN sites only exist for blocks with a GEMM-shaped dense FFN;
+    MoE expert and RWKV channel-mix FFNs host through the grouped
+    kernel instead (``grouped_host_shapes``). ``dense_ffn`` overrides
+    the default (non-MoE model) judgment — the schedule compiler passes
+    True for the first-dense layers of a DeepSeek-style MoE stack, whose
+    FFN is an ordinary dense GEMM."""
     d = cfg.d_model
     toks = batch * seq
     nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -406,21 +596,88 @@ def block_gemm_shapes(cfg: ModelConfig, batch: int, seq: int
         "qkv": (toks, (nq + 2 * nkv) * hd, d),
         "prev_gemm": (toks, d, nq * hd),
     }
-    if cfg.moe is None and cfg.ffn in (FFNKind.SWIGLU, FFNKind.GEGLU,
-                                       FFNKind.GELU):
+    if dense_ffn is None:
+        dense_ffn = cfg.moe is None
+    if dense_ffn and cfg.ffn in (FFNKind.SWIGLU, FFNKind.GEGLU,
+                                 FFNKind.GELU):
         gated = cfg.ffn in (FFNKind.SWIGLU, FFNKind.GEGLU)
         shapes["ffn_up"] = (toks, (2 if gated else 1) * cfg.d_ff, d)
         shapes["ffn_down"] = (toks, d, cfg.d_ff)
     return shapes
 
 
+def moe_expert_capacity(moe, tokens: int) -> int:
+    """Per-source expert capacity C — the EXACT arithmetic of the
+    dispatch paths in models/moe.py, shared so the schedule compiler
+    plans the grouped host on the same (E, C) grid the runtime walks."""
+    return max(1, -(-tokens * moe.top_k
+                    * int(round(moe.capacity_factor * 100))
+                    // (100 * moe.n_experts)))
+
+
+def grouped_host_shapes(cfg: ModelConfig, batch: int, seq: int,
+                        batch_shards: int = 1, head_shards: int = 1,
+                        seq_dispatch: bool = False,
+                        moe_block: Optional[bool] = None
+                        ) -> Dict[str, Tuple[int, int, int, int]]:
+    """(E, C, k, n) of the grouped candidate host GEMMs for blocks whose
+    FFN has no dense 2D GEMM: the MoE expert einsum (E, C, D)x(E, D, F)
+    — "ffn_up" hosts under the gate projection, "ffn_down" under the
+    down projection — and the RWKV channel-mix key/value GEMMs as the
+    E=1 degenerate case.
+
+    Sharded runs are ESTIMATED from the mask-plane shard counts with the
+    matching dispatch arithmetic (models/moe.py): dense dispatch chunks
+    tokens over the batch shards (≈ the 'data'/EP axis), splits experts
+    over the same axis with recv rows concatenating across sources, and
+    TP-shards each expert's width over the model axis (≈
+    ``head_shards``, mirroring moe_apply's d_ff_expert divisibility
+    guard); ``seq_dispatch`` layouts additionally chunk tokens over the
+    model axis and re-gather the capacity rows across it. The
+    mask-plane axes only approximate the EP/TP axes for exotic
+    policies, so the runtime kernel's own layout check stays
+    authoritative: a plan/runtime divergence degrades the realized
+    producer to the standalone kernel (telemetry optimistic), never a
+    mask bit.
+
+    ``moe_block`` selects the PER-LAYER block kind (a MoE stack's
+    first-dense layers can carry an RWKV channel-mix FFN); None defaults
+    to the whole-model judgment (cfg.moe set)."""
+    d = cfg.d_model
+    tok_shards = max(1, batch_shards) * (max(1, head_shards)
+                                         if seq_dispatch else 1)
+    toks = (batch * seq) // tok_shards
+    if moe_block is None:
+        moe_block = cfg.moe is not None
+    if moe_block:
+        m = cfg.moe
+        e, cap = m.n_experts, moe_expert_capacity(m, toks)
+        if batch_shards > 1 and e % batch_shards == 0:
+            e, cap = e // batch_shards, tok_shards * cap
+        f = m.d_ff_expert
+        if head_shards > 1 and f % head_shards == 0:
+            f //= head_shards       # TP over the expert width
+        return {"ffn_up": (e, cap, d, f), "ffn_down": (e, cap, f, d)}
+    if cfg.ffn == FFNKind.RWKV_CHANNEL:
+        toks = (batch * seq) // max(1, batch_shards)
+        return {"ffn_up": (1, toks, d, cfg.d_ff),
+                "ffn_down": (1, toks, cfg.d_ff, d)}
+    return {}
+
+
 def rank_host_sites(cfg: ModelConfig, plan: DropoutPlan, batch: int,
-                    seq: int, hw=None, batch_shards: int = 1
+                    seq: int, hw=None, batch_shards: int = 1,
+                    head_shards: int = 1, seq_dispatch: bool = False
                     ) -> Tuple[Tuple[str, float], ...]:
     """Tileable candidate host GEMMs ranked by the Region-1 headroom
     estimate (perfmodel.rank_host_gemms), best first. ``batch_shards``
     shrinks the GEMM rows to the per-shard size when the host will run
-    shard-local."""
+    shard-local. MoE expert and RWKV channel-mix blocks contribute their
+    GROUPED FFN hosts (perfmodel.grouped_gemm_host_headroom learns the
+    combined-grid Region-1 arithmetic), so site="auto" can rank an
+    expert einsum against the block's dense attention GEMMs —
+    ``head_shards``/``seq_dispatch`` keep the ranked grid the SAME grid
+    the per-layer capability later judges (grouped_host_shapes)."""
     from repro.perfmodel.hardware import TPU_V5E
     from repro.perfmodel.model import rank_host_gemms
     mask_elems = float(batch) * cfg.n_heads * seq * seq
@@ -430,11 +687,18 @@ def rank_host_sites(cfg: ModelConfig, plan: DropoutPlan, batch: int,
         m_loc = m // batch_shards
         if pick_gemm_blocks(m_loc, n, k) is not None:
             shapes[site] = (m_loc, n, k)
-    if not shapes:
+    grouped = {}
+    for site, (e, c, k, n) in grouped_host_shapes(
+            cfg, batch, seq, batch_shards=batch_shards,
+            head_shards=head_shards,
+            seq_dispatch=seq_dispatch).items():
+        if pick_gemm_blocks(c, n, k) is not None:
+            grouped[site] = (e, c, n, k)
+    if not shapes and not grouped:
         return ()
     return rank_host_gemms(shapes, mask_elems, hw=hw or TPU_V5E,
                            rounds=plan.cfg.philox_rounds,
-                           dtype_bytes=dtype_bytes)
+                           dtype_bytes=dtype_bytes, grouped=grouped)
 
 
 def pick_host_site(cfg: ModelConfig, plan: DropoutPlan, batch: int,

@@ -12,8 +12,9 @@ trace-time branches in ``models/transformer.py`` / ``models/layers.py``.
 trace, and freezes them into a hashable ``DropoutSchedule``: one
 ``HostAssignment`` per layer recording which layer's mask is consumed,
 which GEMM site hosts its production, which physical producer realizes
-it (fused kernel / standalone kernel / XLA ops), whether production runs
-shard-local, and — when the fused kernel was NOT chosen — why. The model
+it (dense fused kernel / GROUPED fused kernel for MoE-expert and RWKV
+channel-mix GEMMs / standalone kernel / XLA ops), whether production
+runs shard-local, and — when a fused kernel was NOT chosen — why. The model
 executes by schedule lookup; ``DropoutPlanConfig.site`` survives as
 sugar that compiles to a uniform schedule. ``explain()`` renders the
 whole plan for dry-runs and train-loop logs, so a silent Region-3 or
@@ -40,6 +41,7 @@ from repro.core import producer
 from repro.core.overlap import DropoutPlan
 
 HOW_GEMM = producer.HOW_GEMM
+HOW_GEMM_GROUPED = producer.HOW_GEMM_GROUPED
 HOW_STANDALONE = producer.HOW_STANDALONE
 HOW_XLA = producer.HOW_XLA
 
@@ -129,6 +131,11 @@ class DropoutSchedule:
     carried: bool
     assignments: Tuple[HostAssignment, ...]
     headroom: Tuple[Tuple[str, float], ...] = ()   # auto-ranking table
+    # which MoE dispatch layout the grouped-host grid was planned for;
+    # forward() fails fast on a Runtime.moe_seq_dispatch mismatch
+    # instead of silently executing a schedule whose expert-GEMM grid
+    # belongs to the other layout
+    moe_seq_dispatch: bool = False
 
     # ---------------------------------------------------------- lookup
     @property
@@ -252,6 +259,7 @@ class DropoutSchedule:
             "seq": self.seq,
             "carried": self.carried,
             "sharded": self.sharded,
+            "moe_seq_dispatch": self.moe_seq_dispatch,
             "shards": [self.shard.batch_shards, self.shard.head_shards],
             "layers": [
                 {"layer": a.layer, "kind": a.kind, "site": a.site,
@@ -282,17 +290,40 @@ def _next_attn_stride(kinds: Tuple[AttentionKind, ...], period: int,
     return 0
 
 
-def _host_gemm_shape(cfg: ModelConfig, batch: int, seq: int,
-                     site: str) -> Optional[Tuple[int, int, int]]:
-    """(m, n, k) of the GEMM class hosting ``site``, or None when the
-    block has no such GEMM (MoE / RWKV channel-mix FFNs)."""
-    shapes = producer.block_gemm_shapes(cfg, batch, seq)
+def _host_gemm_shape(cfg: ModelConfig, batch: int, seq: int, site: str,
+                     dense_ffn: Optional[bool] = None
+                     ) -> Optional[Tuple[int, int, int]]:
+    """(m, n, k) of the dense GEMM class hosting ``site``, or None when
+    the block has no such GEMM (MoE / RWKV channel-mix FFNs host through
+    the GROUPED kernel — see ``_grouped_capability``)."""
+    shapes = producer.block_gemm_shapes(cfg, batch, seq,
+                                        dense_ffn=dense_ffn)
     return shapes.get(site)
+
+
+def _kernel_host_gates(plan: DropoutPlan, cfg: ModelConfig, batch: int,
+                       seq: int, shard: ShardInfo, attn_impl: str):
+    """The gates every kernel-realized host (dense fused AND grouped)
+    must clear, shared so dense and grouped planning can never judge
+    the same model by different rules. Returns a (how, sharded, reason)
+    early-out, or None plus the (b_loc, h_loc) mask tile when the gates
+    pass: (early_out, b_loc, h_loc)."""
+    if attn_impl != "pallas":
+        return (HOW_XLA, False, "impl != pallas (no fused kernels)"), 0, 0
+    reason = producer.mask_kernel_unsupported_reason(plan, seq, seq)
+    if reason is not None:
+        return (HOW_XLA, False, reason), 0, 0
+    if shard.policy_installed and not shard.active:
+        return (HOW_XLA, False,
+                "mask (b, h) not shardable on this mesh"), 0, 0
+    return (None, batch // shard.batch_shards,
+            cfg.n_heads // shard.head_shards)
 
 
 def _fused_capability(plan: DropoutPlan, cfg: ModelConfig, batch: int,
                       seq: int, site: str, shard: ShardInfo,
-                      attn_impl: str) -> Tuple[str, bool, str]:
+                      attn_impl: str, dense_ffn: Optional[bool] = None
+                      ) -> Tuple[str, bool, str]:
     """Decide (how, sharded, reason) for hosting one mask under the
     ``site`` GEMM of one block — the single ahead-of-trace capability
     judgment replacing the old in-trace fuse_ok/allow_fused threading.
@@ -302,17 +333,12 @@ def _fused_capability(plan: DropoutPlan, cfg: ModelConfig, batch: int,
     per-shard GEMM rows, so capability (tiling, Region 3) is judged on
     LOCAL shapes. The position-based counter scheme keeps shard-local
     bits exactly equal to the global mask's slice."""
-    if attn_impl != "pallas":
-        return HOW_XLA, False, "impl != pallas (no fused kernels)"
-    reason = producer.mask_kernel_unsupported_reason(plan, seq, seq)
-    if reason is not None:
-        return HOW_XLA, False, reason
-    if shard.policy_installed and not shard.active:
-        return HOW_XLA, False, "mask (b, h) not shardable on this mesh"
+    early, b_loc, h_loc = _kernel_host_gates(plan, cfg, batch, seq,
+                                             shard, attn_impl)
+    if early is not None:
+        return early
     sharded = shard.policy_installed
-    b_loc = batch // shard.batch_shards
-    h_loc = cfg.n_heads // shard.head_shards
-    gemm = _host_gemm_shape(cfg, batch, seq, site)
+    gemm = _host_gemm_shape(cfg, batch, seq, site, dense_ffn=dense_ffn)
     if gemm is None:
         return (HOW_STANDALONE, sharded,
                 f"no hostable {site} GEMM in this block")
@@ -339,6 +365,60 @@ def _fused_capability(plan: DropoutPlan, cfg: ModelConfig, batch: int,
     return HOW_GEMM, sharded, ""
 
 
+def _grouped_capability(plan: DropoutPlan, cfg: ModelConfig, batch: int,
+                        seq: int, site: str, shard: ShardInfo,
+                        attn_impl: str, moe_seq_dispatch: bool = False,
+                        block_is_moe: Optional[bool] = None
+                        ) -> Tuple[str, bool, str]:
+    """(how, sharded, reason) for hosting one mask under the GROUPED
+    GEMM of a block whose FFN has no dense 2D host: the MoE expert
+    einsum or the RWKV channel-mix key/value GEMM (E=1). Feasibility is
+    judged on EXPERT-LOCAL shapes (producer.grouped_host_shapes mirrors
+    the dispatch arithmetic of models/moe.py, shrunk to the per-shard
+    token count); the emission grid is Philox-counter-indexed, so the
+    permuted token layout never enters the judgment — only the combined
+    grid's step count does. Each infeasible shape reports a reason
+    naming ITS block kind (MoE expert vs RWKV channel-mix), so a mixed
+    stack's explain() attributes every fallback to the right layer.
+    ``block_is_moe`` is the caller's LAYER-LOCAL judgment — a MoE
+    stack's first-dense layers plan on their own (E=1 channel-mix)
+    grid, not the expert grid."""
+    if block_is_moe is None:
+        block_is_moe = cfg.moe is not None
+    kind_name = "MoE expert" if block_is_moe else "RWKV channel-mix"
+    early, b_loc, h_loc = _kernel_host_gates(plan, cfg, batch, seq,
+                                             shard, attn_impl)
+    if early is not None:
+        return early
+    sharded = shard.policy_installed
+    g = producer.grouped_host_shapes(
+        cfg, batch, seq, batch_shards=shard.batch_shards,
+        head_shards=shard.head_shards,
+        seq_dispatch=moe_seq_dispatch,
+        moe_block=block_is_moe).get(site)
+    if g is None:
+        return (HOW_STANDALONE, sharded,
+                f"no hostable {site} GEMM in this block")
+    e, c, kdim, n = g
+    feasible, blocks = producer.grouped_layout_feasible(
+        e, c, kdim, n, b_loc, h_loc, seq, seq)
+    if blocks is None:
+        return (HOW_STANDALONE, sharded,
+                f"{kind_name} grouped GEMM ({e}x({c},{kdim})x({kdim},{n}))"
+                f" does not tile")
+    if not feasible:
+        return (HOW_STANDALONE, sharded,
+                f"Region 3: {kind_name} grouped GEMM "
+                f"({e}x({c},{kdim})x({kdim},{n})) too small for "
+                f"{b_loc}x{h_loc}x{seq}x{seq} mask")
+    if plan.gemm_dtype == "fp8":
+        from repro.kernels import quant
+        if not quant.have_fp8():
+            return (HOW_GEMM_GROUPED, sharded,
+                    "fp8 unavailable in this JAX build; f32 host")
+    return HOW_GEMM_GROUPED, sharded, ""
+
+
 def _standalone_capability(plan: DropoutPlan, shard: ShardInfo,
                            seq: int, attn_impl: str
                            ) -> Tuple[str, bool, str]:
@@ -357,8 +437,8 @@ def _standalone_capability(plan: DropoutPlan, shard: ShardInfo,
 
 @functools.lru_cache(maxsize=256)
 def _compile(cfg: ModelConfig, plan_cfg: DropoutPlanConfig, batch: int,
-             seq: int, shard: ShardInfo, attn_impl: str,
-             hw) -> DropoutSchedule:
+             seq: int, shard: ShardInfo, attn_impl: str, hw,
+             moe_seq_dispatch: bool = False) -> DropoutSchedule:
     plan = DropoutPlan(plan_cfg)
     kinds = cfg.layer_kinds()
     period = len(cfg.block_pattern)
@@ -371,7 +451,8 @@ def _compile(cfg: ModelConfig, plan_cfg: DropoutPlanConfig, batch: int,
         carried=False,
         assignments=tuple(
             HostAssignment(layer=i, kind=kinds[i].value)
-            for i in range(cfg.n_layers)))
+            for i in range(cfg.n_layers)),
+        moe_seq_dispatch=moe_seq_dispatch)
     if not overlap or not attn_layers:
         return inert
 
@@ -380,7 +461,7 @@ def _compile(cfg: ModelConfig, plan_cfg: DropoutPlanConfig, batch: int,
     headroom: Tuple[Tuple[str, float], ...] = ()
     if site == "auto":
         site, headroom = _resolve_auto(cfg, plan, batch, seq, shard,
-                                       attn_impl, hw)
+                                       attn_impl, hw, moe_seq_dispatch)
 
     carried = site in CARRIED_DROPOUT_SITES
     moe_first_dense = cfg.moe.first_dense_layers if cfg.moe else 0
@@ -408,21 +489,27 @@ def _compile(cfg: ModelConfig, plan_cfg: DropoutPlanConfig, batch: int,
         prev = max((a for a in attn_layers if a < l), default=-1)
         stride = _next_attn_stride(kinds, period, l)
         emit_site = site
-        # the host GEMM lives in THIS block; MoE blocks have no hostable
-        # dense FFN (permuted token layout), dense blocks always have an
-        # out-projection
+        # the host GEMM lives in THIS block. Dense FFNs and attention
+        # projections host through the dense fused kernel; MoE expert
+        # and RWKV channel-mix FFNs host through the GROUPED kernel,
+        # whose emission grid is decoupled from the expert tile grid —
+        # the permuted/capacity-dropped token layout is irrelevant to
+        # the bits, so these blocks are first-class hosts now.
         block_is_moe = cfg.moe is not None and l >= moe_first_dense
         if emit_site in ("ffn_up", "ffn_down") and (
                 block_is_moe or cfg.ffn == FFNKind.RWKV_CHANNEL):
-            e_how, e_sh, e_reason = _standalone_capability(
-                plan, shard, seq, attn_impl)
-            e_reason = (e_reason or
-                        ("MoE expert GEMMs not hostable"
-                         if block_is_moe else
-                         "RWKV channel-mix has no hostable GEMM"))
+            e_how, e_sh, e_reason = _grouped_capability(
+                plan, cfg, batch, seq, emit_site, shard, attn_impl,
+                moe_seq_dispatch=moe_seq_dispatch,
+                block_is_moe=block_is_moe)
         else:
+            # first-dense layers of a MoE stack carry an ordinary dense
+            # FFN: let the dense capability see its GEMM shapes
+            dense_ffn = True if (cfg.moe is not None
+                                 and not block_is_moe) else None
             e_how, e_sh, e_reason = _fused_capability(
-                plan, cfg, batch, seq, emit_site, shard, attn_impl)
+                plan, cfg, batch, seq, emit_site, shard, attn_impl,
+                dense_ffn=dense_ffn)
         if prev < 0:
             b_how, b_sh, b_reason = _standalone_capability(
                 plan, shard, seq, attn_impl)
@@ -449,17 +536,21 @@ def _compile(cfg: ModelConfig, plan_cfg: DropoutPlanConfig, batch: int,
     sched = DropoutSchedule(
         model=cfg.name, plan=plan_cfg, resolved_site=site, batch=batch,
         seq=seq, attn_impl=attn_impl, shard=shard, carried=carried,
-        assignments=tuple(asgs), headroom=headroom)
+        assignments=tuple(asgs), headroom=headroom,
+        moe_seq_dispatch=moe_seq_dispatch)
     _check_scan_periodicity(cfg, sched)
     return sched
 
 
 def _resolve_auto(cfg: ModelConfig, plan: DropoutPlan, batch: int,
-                  seq: int, shard: ShardInfo, attn_impl: str, hw):
+                  seq: int, shard: ShardInfo, attn_impl: str, hw,
+                  moe_seq_dispatch: bool = False):
     """site="auto": rank the block's candidate host GEMMs by Region-1
     headroom (producer.rank_host_sites → perfmodel.rank_host_gemms) and
     take the best one the fused kernel can actually realize; degrade to
-    "xla" when none qualifies."""
+    "xla" when none qualifies. The shard counts and dispatch layout ride
+    along so the grouped candidates are ranked on the SAME grid the
+    per-layer capability later judges."""
     if attn_impl != "pallas":
         return "xla", ()
     if producer.mask_kernel_unsupported_reason(plan, seq, seq) is not None:
@@ -467,7 +558,9 @@ def _resolve_auto(cfg: ModelConfig, plan: DropoutPlan, batch: int,
     if shard.policy_installed and not shard.active:
         return "xla", ()
     ranked = producer.rank_host_sites(cfg, plan, batch, seq, hw=hw,
-                                      batch_shards=shard.batch_shards)
+                                      batch_shards=shard.batch_shards,
+                                      head_shards=shard.head_shards,
+                                      seq_dispatch=moe_seq_dispatch)
     return (ranked[0][0], ranked) if ranked else ("xla", ())
 
 
@@ -505,23 +598,29 @@ def _check_scan_periodicity(cfg: ModelConfig, sched: DropoutSchedule):
 
 def compile_schedule(model_cfg: ModelConfig, plan, batch: int, seq: int,
                      *, policy=None, attn_impl: str = "xla",
-                     hw=None) -> DropoutSchedule:
+                     hw=None, moe_seq_dispatch: bool = False
+                     ) -> DropoutSchedule:
     """Compile the per-layer dropout schedule for one (model, plan,
     shape, mesh/sharding) cell — the plan→compile→execute entry point.
 
     ``plan`` is a DropoutPlanConfig or DropoutPlan (site may be "auto");
     ``policy`` the installed ShardingPolicy or None; ``attn_impl`` the
-    kernel availability knob ("pallas" enables the fused producers).
-    Pure function of static data — results are cached, so the in-trace
-    sugar path (models/transformer.forward compiling on first use) and
-    the explicit launch-time call return the identical object.
+    kernel availability knob ("pallas" enables the fused producers);
+    ``moe_seq_dispatch`` the MoE dispatch layout the grouped expert
+    hosts are planned for — forward() validates it against the runtime
+    flag at build time, so a schedule compiled for the dense-dispatch
+    layout fails fast instead of silently executing against the
+    seq-dispatch expert grid. Pure function of static data — results
+    are cached, so the in-trace sugar path (models/transformer.forward
+    compiling on first use) and the explicit launch-time call return
+    the identical object.
     """
     plan_cfg = plan.cfg if isinstance(plan, DropoutPlan) else plan
     if plan_cfg is None:
         raise ValueError("compile_schedule requires a dropout plan")
     shard = shard_info(policy, batch, model_cfg.n_heads)
     return _compile(model_cfg, plan_cfg, batch, seq, shard, attn_impl,
-                    hw)
+                    hw, moe_seq_dispatch)
 
 
 def inline_assignment(model_cfg: ModelConfig, plan: DropoutPlan,

@@ -474,6 +474,406 @@ def _gemm_rng_fp8_bwd(static, res, cts):
 _gemm_rng_fp8_call.defvjp(_gemm_rng_fp8_fwd, _gemm_rng_fp8_bwd)
 
 
+# --------------------------------------------------------------------------
+# grouped (expert) GEMM host: GEMM grid decoupled from the RNG emission grid
+# --------------------------------------------------------------------------
+#
+# MoE expert FFNs compute C[e] = A[e] @ B[e] over E experts — an einsum
+# whose row space is the PERMUTED, capacity-dropped token layout of the
+# dispatch, not the token order the dense hosts assume. The paper's claim
+# survives anyway: RNG emission never needs to know which token a GEMM
+# tile is computing, because the mask is indexed by (b, h, q, k) Philox
+# counters (philox_common.global_bh), not by token identity. So the
+# grouped kernel walks mask tiles round-robin across expert tiles: GEMM
+# grid step s = (e * gm + i) * gn + j hosts mask block s of the same
+# flattened (BH*SQ32, SK) layout the dense hosts use (_mask_layout) —
+# the iteration-space decoupling the CUTLASS FA-2 case study argues for
+# (arXiv 2312.11918). Routing decisions, capacity overflow, and expert
+# permutation are invisible to the bits by construction. RWKV channel-mix
+# GEMMs reuse the same shim with E=1.
+
+def _gemm_rng_grouped_kernel(s_ref, a_ref, b_ref, c_ref, m_ref, acc_scr, *,
+                             gm: int, gn: int, n_cb: int, rb: int, ck: int,
+                             sq32: int, threshold: int, rounds: int,
+                             n_valid_blocks: int, n_rb_valid: int,
+                             out_dtype, heads_local: int,
+                             heads_global: int):
+    e = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    kk = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kk == 0)
+    def _zero():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # --- MXU stream: this expert's tiled matmul accumulation ------------
+    acc_scr[...] += jax.lax.dot_general(
+        a_ref[0], b_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # --- VPU stream: mask block s of the EMISSION grid — s linearizes
+    # the whole (e, i, j) GEMM grid, so which expert (and which permuted
+    # tokens) the MXU is chewing on is irrelevant to the bits ------------
+    @pl.when(kk == 0)
+    def _rng():
+        s = (e * gm + i) * gn + j
+        rb_idx, cb_idx = _mask_block_idx(s, n_valid_blocks, n_cb,
+                                         n_rb_valid)
+        m_ref[...] = packed_rows_tile(
+            rb_idx * rb, cb_idx * ck, sq32, s_ref[2], s_ref[0], s_ref[1],
+            threshold, rb, ck, rounds, heads_local=heads_local,
+            heads_global=heads_global, bh_offset=s_ref[3])
+
+    @pl.when(kk == nk - 1)
+    def _flush():
+        c_ref[0] = acc_scr[...].astype(out_dtype)
+
+
+def gemm_with_rng_grouped(a: jnp.ndarray, b: jnp.ndarray, *,
+                          mask_batch: int, mask_heads: int, mask_sq: int,
+                          mask_sk: int, p: float, seed, salt=0,
+                          rounds: int = 7,
+                          block_m: int = 256, block_n: int = 256,
+                          block_k: int = 512, mask_block_cols: int = 2048,
+                          max_mask_rows_per_block: int = 256,
+                          interpret: bool = True,
+                          heads_global: int = 0, bh_offset=0,
+                          ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """C[e] = a[e] @ b[e] for a (E, C, K), b (E, K, N), plus the packed
+    dropout keep-mask (B, H, SQ//32, SK) generated under the grouped
+    GEMM. The RNG emission grid is independent of the GEMM grid: mask
+    blocks are assigned round-robin over the E*gm*gn expert tiles and
+    indexed purely by Philox counters, so the expert permutation /
+    capacity-dropped token layout never reaches the bits. Returns
+    (C, mask) — mask is None when the combined grid cannot host the mask
+    work (paper Region 3; caller falls back to the standalone kernel).
+    Bit-identical to every other producer for the same
+    (seed, salt, layer, step). Shard-local via ``heads_global`` /
+    ``bh_offset`` exactly like the dense hosts."""
+    e, c, kdim = a.shape
+    e2, k2, n = b.shape
+    assert e == e2 and kdim == k2
+    bm, bn, bkk = min(block_m, c), min(block_n, n), min(block_k, kdim)
+    assert c % bm == 0 and n % bn == 0 and kdim % bkk == 0
+    gm, gn, gk = c // bm, n // bn, kdim // bkk
+    n_steps = e * gm * gn
+
+    assert mask_sq % 32 == 0
+    sq32 = mask_sq // 32
+    layout = _mask_layout(n_steps, mask_batch, mask_heads, sq32, mask_sk,
+                          mask_block_cols, max_mask_rows_per_block)
+    if layout is None:
+        # combined expert grid too small to hide this much RNG: Region 3.
+        return _plain_gemm_grouped(a, b, bm, bn, bkk, interpret), None
+    ck, n_cb, rb, n_rb_valid, n_valid_blocks, mask_rows_alloc = layout
+
+    static = (e, gm, gn, gk, bm, bn, bkk, n_cb, rb, ck, sq32,
+              threshold_from_p(p), rounds, n_valid_blocks, n_rb_valid,
+              mask_rows_alloc, mask_sk, interpret,
+              mask_batch, mask_heads, heads_global or mask_heads)
+    return _gemm_rng_grouped_call(
+        static, seed_salt_smem(seed, salt, bh_offset), a, b)
+
+
+def _gemm_rng_grouped_impl(static, sd, a, b):
+    (e, gm, gn, gk, bm, bn, bkk, n_cb, rb, ck, sq32, threshold, rounds,
+     n_valid_blocks, n_rb_valid, mask_rows_alloc, mask_sk,
+     interpret, mask_batch, mask_heads, heads_global) = static
+    c_dim, n = a.shape[1], b.shape[2]
+    kernel = functools.partial(
+        _gemm_rng_grouped_kernel, gm=gm, gn=gn, n_cb=n_cb, rb=rb, ck=ck,
+        sq32=sq32, threshold=threshold, rounds=rounds,
+        n_valid_blocks=n_valid_blocks, n_rb_valid=n_rb_valid,
+        out_dtype=a.dtype, heads_local=mask_heads,
+        heads_global=heads_global)
+
+    def _mask_index_map(ei, i, j, kk, _gm=gm, _gn=gn):
+        rb_idx, cb_idx = _mask_block_idx((ei * _gm + i) * _gn + j,
+                                         n_valid_blocks, n_cb, n_rb_valid)
+        return rb_idx, cb_idx
+
+    cc, mask2d = pl.pallas_call(
+        kernel,
+        grid=(e, gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, bm, bkk), lambda ei, i, j, kk: (ei, i, kk)),
+            pl.BlockSpec((1, bkk, bn), lambda ei, i, j, kk: (ei, kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bn), lambda ei, i, j, kk: (ei, i, j)),
+            pl.BlockSpec((rb, ck), _mask_index_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e, c_dim, n), a.dtype),
+            jax.ShapeDtypeStruct((mask_rows_alloc, mask_sk), jnp.uint32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(sd, a, b)
+    mr = mask_batch * mask_heads * sq32
+    return cc, mask2d[:mr].reshape(mask_batch, mask_heads, sq32, mask_sk)
+
+
+def _grouped_dgrad_pair(a, b, dc):
+    """Per-expert GEMM backward in f32: y[e] = a[e] @ b[e]."""
+    dcf = dc.astype(jnp.float32)
+    da = jnp.einsum("ecf,edf->ecd", dcf,
+                    b.astype(jnp.float32)).astype(a.dtype)
+    db = jnp.einsum("ecd,ecf->edf", a.astype(jnp.float32),
+                    dcf).astype(b.dtype)
+    return da, db
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gemm_rng_grouped_call(static, sd, a, b):
+    return _gemm_rng_grouped_impl(static, sd, a, b)
+
+
+def _gemm_rng_grouped_fwd(static, sd, a, b):
+    return _gemm_rng_grouped_impl(static, sd, a, b), (a, b)
+
+
+def _gemm_rng_grouped_bwd(static, res, cts):
+    a, b = res
+    da, db = _grouped_dgrad_pair(a, b, cts[0])
+    dsd = np.zeros((4,), jax.dtypes.float0)
+    return dsd, da, db
+
+
+_gemm_rng_grouped_call.defvjp(_gemm_rng_grouped_fwd,
+                              _gemm_rng_grouped_bwd)
+
+
+def _plain_grouped_impl(a, b, static):
+    bm, bn, bkk, interpret = static
+    e, c, kdim = a.shape
+    n = b.shape[2]
+
+    def kern(a_ref, b_ref, c_ref, acc_scr):
+        kk = pl.program_id(3)
+
+        @pl.when(kk == 0)
+        def _zero():
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        acc_scr[...] += jax.lax.dot_general(
+            a_ref[0], b_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(kk == pl.num_programs(3) - 1)
+        def _flush():
+            c_ref[0] = acc_scr[...].astype(a.dtype)
+
+    return pl.pallas_call(
+        kern,
+        grid=(e, c // bm, n // bn, kdim // bkk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bkk), lambda ei, i, j, kk: (ei, i, kk)),
+            pl.BlockSpec((1, bkk, bn), lambda ei, i, j, kk: (ei, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn),
+                               lambda ei, i, j, kk: (ei, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, c, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _plain_grouped_call(a, b, static):
+    return _plain_grouped_impl(a, b, static)
+
+
+def _plain_grouped_fwd(a, b, static):
+    return _plain_grouped_impl(a, b, static), (a, b)
+
+
+def _plain_grouped_bwd(static, res, dc):
+    a, b = res
+    return _grouped_dgrad_pair(a, b, dc)
+
+
+_plain_grouped_call.defvjp(_plain_grouped_fwd, _plain_grouped_bwd)
+
+
+def _plain_gemm_grouped(a, b, bm, bn, bkk, interpret):
+    """Grouped matmul without the RNG side-channel (Region-3 fallback /
+    baseline)."""
+    return _plain_grouped_call(a, b, (bm, bn, bkk, interpret))
+
+
+def _gemm_rng_grouped_fp8_kernel(s_ref, as_ref, bs_ref, a_ref, b_ref,
+                                 c_ref, m_ref, acc_scr, *, gm: int,
+                                 gn: int, gk: int, n_cb: int, rb: int,
+                                 ck: int, sq32: int, threshold: int,
+                                 rounds: int, n_valid_blocks: int,
+                                 n_rb_valid: int, out_dtype,
+                                 heads_local: int, heads_global: int):
+    e = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    kk = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kk == 0)
+    def _zero():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # --- MXU stream: e4m3 expert-tile product, per-tile rescale ---------
+    prod = jax.lax.dot_general(
+        a_ref[0].astype(jnp.float32), b_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_scr[...] += prod * (as_ref[e * gm + i, kk] * bs_ref[e * gk + kk, j])
+
+    # --- VPU stream: identical emission-grid assignment to the f32 host
+    @pl.when(kk == 0)
+    def _rng():
+        s = (e * gm + i) * gn + j
+        rb_idx, cb_idx = _mask_block_idx(s, n_valid_blocks, n_cb,
+                                         n_rb_valid)
+        m_ref[...] = packed_rows_tile(
+            rb_idx * rb, cb_idx * ck, sq32, s_ref[2], s_ref[0], s_ref[1],
+            threshold, rb, ck, rounds, heads_local=heads_local,
+            heads_global=heads_global, bh_offset=s_ref[3])
+
+    @pl.when(kk == nk - 1)
+    def _flush():
+        c_ref[0] = acc_scr[...].astype(out_dtype)
+
+
+def gemm_with_rng_grouped_fp8(a: jnp.ndarray, b: jnp.ndarray, *,
+                              mask_batch: int, mask_heads: int,
+                              mask_sq: int, mask_sk: int, p: float,
+                              seed, salt=0, rounds: int = 7,
+                              block_m: int = 256, block_n: int = 256,
+                              block_k: int = 512,
+                              mask_block_cols: int = 2048,
+                              max_mask_rows_per_block: int = 256,
+                              interpret: bool = True,
+                              heads_global: int = 0, bh_offset=0,
+                              ) -> Tuple[jnp.ndarray,
+                                         Optional[jnp.ndarray]]:
+    """Grouped expert GEMM on per-tile-scaled e4m3 operands with the
+    dropout mask generated under it. Operands quantize per expert tile —
+    A per (e, block_m, block_k), B per (e, block_k, block_n) — via one
+    reshape through ``quant.quantize_tiled`` (the expert dim folds into
+    the tile-row index). Mask bits identical to the f32 grouped host
+    (same _mask_layout, same counters). Returns (C, mask); in Region 3
+    the GEMM runs in f32 (mask None, caller falls back) — the fp8 plain
+    pair is not worth a third kernel for a path the scheduler plans
+    around. Straight-through quantization, bf16 dgrad pair."""
+    if not quant.have_fp8():
+        raise NotImplementedError(
+            "fp8 path requires jnp.float8_e4m3fn; gate on "
+            "quant.have_fp8()")
+    e, c, kdim = a.shape
+    e2, k2, n = b.shape
+    assert e == e2 and kdim == k2
+    bm, bn, bkk = min(block_m, c), min(block_n, n), min(block_k, kdim)
+    assert c % bm == 0 and n % bn == 0 and kdim % bkk == 0
+    gm, gn, gk = c // bm, n // bn, kdim // bkk
+    n_steps = e * gm * gn
+
+    assert mask_sq % 32 == 0
+    sq32 = mask_sq // 32
+    layout = _mask_layout(n_steps, mask_batch, mask_heads, sq32, mask_sk,
+                          mask_block_cols, max_mask_rows_per_block)
+    if layout is None:
+        return _plain_gemm_grouped(a, b, bm, bn, bkk, interpret), None
+    ck, n_cb, rb, n_rb_valid, n_valid_blocks, mask_rows_alloc = layout
+
+    static = (e, gm, gn, gk, bm, bn, bkk, n_cb, rb, ck, sq32,
+              threshold_from_p(p), rounds, n_valid_blocks, n_rb_valid,
+              mask_rows_alloc, mask_sk, interpret,
+              mask_batch, mask_heads, heads_global or mask_heads)
+    return _gemm_rng_grouped_fp8_call(
+        static, seed_salt_smem(seed, salt, bh_offset), a, b)
+
+
+def _gemm_rng_grouped_fp8_impl(static, sd, a, b):
+    (e, gm, gn, gk, bm, bn, bkk, n_cb, rb, ck, sq32, threshold, rounds,
+     n_valid_blocks, n_rb_valid, mask_rows_alloc, mask_sk,
+     interpret, mask_batch, mask_heads, heads_global) = static
+    c_dim, kdim, n = a.shape[1], a.shape[2], b.shape[2]
+    # the expert dim folds into quantize_tiled's tile rows: (E*C, K) in
+    # (bm, bk) tiles == per-(e, i, kk) expert tiles, scales (E*gm, gk)
+    a_q, a_s = quant.quantize_tiled(a.reshape(e * c_dim, kdim), bm, bkk)
+    b_q, b_s = quant.quantize_tiled(b.reshape(e * kdim, n), bkk, bn)
+    a_q = a_q.reshape(e, c_dim, kdim)
+    b_q = b_q.reshape(e, kdim, n)
+    kernel = functools.partial(
+        _gemm_rng_grouped_fp8_kernel, gm=gm, gn=gn, gk=gk, n_cb=n_cb,
+        rb=rb, ck=ck, sq32=sq32, threshold=threshold, rounds=rounds,
+        n_valid_blocks=n_valid_blocks, n_rb_valid=n_rb_valid,
+        out_dtype=a.dtype, heads_local=mask_heads,
+        heads_global=heads_global)
+
+    def _mask_index_map(ei, i, j, kk, _gm=gm, _gn=gn):
+        rb_idx, cb_idx = _mask_block_idx((ei * _gm + i) * _gn + j,
+                                         n_valid_blocks, n_cb, n_rb_valid)
+        return rb_idx, cb_idx
+
+    cc, mask2d = pl.pallas_call(
+        kernel,
+        grid=(e, gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, bm, bkk), lambda ei, i, j, kk: (ei, i, kk)),
+            pl.BlockSpec((1, bkk, bn), lambda ei, i, j, kk: (ei, kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bn), lambda ei, i, j, kk: (ei, i, j)),
+            pl.BlockSpec((rb, ck), _mask_index_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e, c_dim, n), a.dtype),
+            jax.ShapeDtypeStruct((mask_rows_alloc, mask_sk), jnp.uint32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(sd, a_s, b_s, a_q, b_q)
+    mr = mask_batch * mask_heads * sq32
+    return cc, mask2d[:mr].reshape(mask_batch, mask_heads, sq32, mask_sk)
+
+
+def _grouped_dgrad_pair_bf16(a, b, dc):
+    """bf16 dgrad pair for the grouped fp8 forward (straight-through
+    quantization, f32 accumulation)."""
+    dcb = dc.astype(jnp.bfloat16)
+    da = jnp.einsum("ecf,edf->ecd", dcb.astype(jnp.float32),
+                    b.astype(jnp.bfloat16).astype(jnp.float32)
+                    ).astype(a.dtype)
+    db = jnp.einsum("ecd,ecf->edf",
+                    a.astype(jnp.bfloat16).astype(jnp.float32),
+                    dcb.astype(jnp.float32)).astype(b.dtype)
+    return da, db
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gemm_rng_grouped_fp8_call(static, sd, a, b):
+    return _gemm_rng_grouped_fp8_impl(static, sd, a, b)
+
+
+def _gemm_rng_grouped_fp8_fwd(static, sd, a, b):
+    return _gemm_rng_grouped_fp8_impl(static, sd, a, b), (a, b)
+
+
+def _gemm_rng_grouped_fp8_bwd(static, res, cts):
+    a, b = res
+    da, db = _grouped_dgrad_pair_bf16(a, b, cts[0])
+    dsd = np.zeros((4,), jax.dtypes.float0)
+    return dsd, da, db
+
+
+_gemm_rng_grouped_fp8_call.defvjp(_gemm_rng_grouped_fp8_fwd,
+                                  _gemm_rng_grouped_fp8_bwd)
+
+
 def _plain_fp8_kernel(as_ref, bs_ref, a_ref, b_ref, c_ref, acc_scr, *,
                       out_dtype):
     i = pl.program_id(0)

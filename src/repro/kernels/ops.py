@@ -11,7 +11,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_fwd
-from repro.kernels.gemm_rng import gemm_with_rng, gemm_with_rng_fp8
+from repro.kernels.gemm_rng import (
+    gemm_with_rng,
+    gemm_with_rng_fp8,
+    gemm_with_rng_grouped,
+    gemm_with_rng_grouped_fp8,
+)
 from repro.kernels.philox import philox_dropout_mask
 
 __all__ = [
@@ -20,9 +25,13 @@ __all__ = [
     "flash_attention",
     "flash_attention_fwd",
     "fused_gemm_rng_fp8",
+    "fused_gemm_rng_grouped",
+    "fused_gemm_rng_grouped_fp8",
     "fused_qkv_gemm_rng",
     "gemm_with_rng",
     "gemm_with_rng_fp8",
+    "gemm_with_rng_grouped",
+    "gemm_with_rng_grouped_fp8",
 ]
 
 
@@ -58,6 +67,47 @@ def fused_qkv_gemm_rng(x: jnp.ndarray, w_qkv: jnp.ndarray, *,
     training path folds (step, layer) in under the jit."""
     return gemm_with_rng(
         x, w_qkv, mask_batch=mask_batch, mask_heads=mask_heads,
+        mask_sq=mask_sq, mask_sk=mask_sk, p=p, seed=seed, salt=salt,
+        rounds=rounds, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=default_interpret(), heads_global=heads_global,
+        bh_offset=bh_offset)
+
+
+def fused_gemm_rng_grouped(a: jnp.ndarray, b: jnp.ndarray, *,
+                           mask_batch: int, mask_heads: int, mask_sq: int,
+                           mask_sk: int, p: float, seed, salt=0,
+                           rounds: int = 7, block_m: int = 256,
+                           block_n: int = 256, block_k: int = 512,
+                           heads_global: int = 0, bh_offset=0,
+                           ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Grouped expert GEMM C[e] = a[e] @ b[e] with the dropout mask
+    generated under the combined (E, i, j) grid — the MoE-expert /
+    RWKV-channel-mix host. The RNG emission grid is decoupled from the
+    GEMM grid: bits index the (b, h, q, k) counter space, never token
+    identity, so expert permutation and capacity drops cannot reach the
+    mask. Falls back to (plain grouped GEMM, None) in Region 3."""
+    return gemm_with_rng_grouped(
+        a, b, mask_batch=mask_batch, mask_heads=mask_heads,
+        mask_sq=mask_sq, mask_sk=mask_sk, p=p, seed=seed, salt=salt,
+        rounds=rounds, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=default_interpret(), heads_global=heads_global,
+        bh_offset=bh_offset)
+
+
+def fused_gemm_rng_grouped_fp8(a: jnp.ndarray, b: jnp.ndarray, *,
+                               mask_batch: int, mask_heads: int,
+                               mask_sq: int, mask_sk: int, p: float,
+                               seed, salt=0, rounds: int = 7,
+                               block_m: int = 256, block_n: int = 256,
+                               block_k: int = 512, heads_global: int = 0,
+                               bh_offset=0,
+                               ) -> Tuple[jnp.ndarray,
+                                          Optional[jnp.ndarray]]:
+    """Grouped expert GEMM on per-tile-scaled e4m3 operands with the
+    dropout mask generated under it — mask bits identical to the f32
+    grouped host."""
+    return gemm_with_rng_grouped_fp8(
+        a, b, mask_batch=mask_batch, mask_heads=mask_heads,
         mask_sq=mask_sq, mask_sk=mask_sk, p=p, seed=seed, salt=salt,
         rounds=rounds, block_m=block_m, block_n=block_n, block_k=block_k,
         interpret=default_interpret(), heads_global=heads_global,

@@ -228,7 +228,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         # host assignment and fallback, visible before any step runs
         sched = compile_schedule(
             cfg, run.dropout, shape.global_batch, shape.seq_len,
-            policy=policy, attn_impl=run.sharding.attn_impl)
+            policy=policy, attn_impl=run.sharding.attn_impl,
+            moe_seq_dispatch=run.sharding.moe_seq_dispatch)
         meta["dropout_schedule"] = sched.summary()
         meta["dropout_explain"] = sched.explain()
     return compiled, meta

@@ -153,9 +153,11 @@ def ffn_apply(p, x, cfg: ModelConfig, shifted: Optional[jnp.ndarray] = None,
 def _ffn_apply_hosted(p, x, cfg: ModelConfig, host,
                       shifted: Optional[jnp.ndarray]):
     """FFN forward with the mask producer hosted under the up or down
-    GEMM (producer.gemm_with_mask). Returns (y, packed_mask). FFN kinds
-    without a plain hostable GEMM (RWKV channel-mix) degrade to the
-    standalone producer — same bits, GEMM untouched."""
+    GEMM (producer.gemm_with_mask). Returns (y, packed_mask). RWKV
+    channel-mix hosts through the GROUPED kernel as its E=1 degenerate
+    case ("ffn_up" = the key projection, "ffn_down" = the value
+    projection) when the schedule planned it; otherwise the standalone
+    producer keeps the carry alive — same bits either way."""
     from repro.core import producer
     dt = x.dtype
     lead = x.shape[:-1]
@@ -199,8 +201,42 @@ def _ffn_apply_hosted(p, x, cfg: ModelConfig, host,
             h = constrain_ffn(h.reshape(*lead, f)).reshape(-1, f)
             y2d, mask = _host_gemm(h, p["w_down"])
         return (y2d + p["b_down"].astype(dt)).reshape(*lead, -1), mask
-    # no hostable plain GEMM (RWKV channel-mix): standalone producer,
-    # identical bits
+    if (cfg.ffn == FFNKind.RWKV_CHANNEL
+            and host.how == producer.HOW_GEMM_GROUPED):
+        # channel-mix hosts through the grouped kernel, E=1: the key /
+        # value GEMM's grid walks the mask tiles exactly like an expert
+        # grid would
+        assert shifted is not None
+        xk = x + (shifted - x) * p["mix_k"].astype(dt)
+        xr = x + (shifted - x) * p["mix_r"].astype(dt)
+        f = p["w_key"].shape[1]
+
+        def _grouped(a2d, w):
+            y3, mask, _how = producer.grouped_gemm_with_mask(
+                a2d[None], w.astype(dt)[None], host.plan,
+                host.mask_shape, host.layer_idx, host.step,
+                how=host.how, policy=host.policy)
+            return y3[0], mask
+
+        xk2d = xk.reshape(-1, xk.shape[-1])
+        if host.site == "ffn_up":
+            k2d, mask = _grouped(xk2d, p["w_key"])
+        else:
+            k2d = xk2d @ p["w_key"].astype(dt)
+            mask = None
+        k = jnp.square(jax.nn.relu(
+            k2d.astype(jnp.float32))).astype(dt).reshape(*lead, f)
+        k = constrain_ffn(k)
+        r = jax.nn.sigmoid((xr @ p["w_recept"].astype(dt))
+                           .astype(jnp.float32)).astype(dt)
+        if host.site == "ffn_down":
+            v2d, mask = _grouped(k.reshape(-1, f), p["w_value"])
+            v = v2d.reshape(*lead, -1)
+        else:
+            v = k @ p["w_value"].astype(dt)
+        return r * v, mask
+    # no hostable plain GEMM under the planned realization: standalone
+    # producer keeps the carry alive, identical bits
     b, h_, sq, sk = host.mask_shape
     mask = producer.standalone_packed_mask(
         host.plan, b, h_, sq, sk, host.layer_idx, host.step,

@@ -16,6 +16,7 @@ run as ordinary dense FFNs outside this module.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -28,6 +29,65 @@ from repro.compat import shard_map
 from repro.config.base import ModelConfig, MoEConfig
 from repro.distributed.sharding import ShardingPolicy
 from repro.models.layers import dense_init
+
+
+def producer_capacity(moe: MoEConfig, tokens: int) -> int:
+    """Per-source expert capacity C. Single source of truth lives in
+    core/producer.moe_expert_capacity — the schedule compiler plans the
+    grouped host on the SAME (E, C) grid these dispatch bodies walk, so
+    the formula must never fork (deferred import: core.producer is a
+    heavier module than this shim needs at import time)."""
+    from repro.core.producer import moe_expert_capacity
+    return moe_expert_capacity(moe, tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class _GroupedHostCtx:
+    """Static grouped-host context for the dispatch bodies: which expert
+    GEMM hosts the dropout-mask producer (site "ffn_up" = gate
+    projection, "ffn_down" = down projection), the GLOBAL mask shape,
+    and the shard-local execution context (producer.ShardExec, None when
+    unsharded). Seed/salt are traced and ride in as body operands."""
+    plan: Any
+    site: str
+    mask_shape: Tuple[int, int, int, int]
+    shard: Any = None
+
+
+def _expert_ffn(recv, w_gate, w_up, w_down, dt, hs=None, sd=None,
+                sl=None):
+    """The expert SwiGLU einsums, shared by every dispatch layout. With
+    ``hs`` (a _GroupedHostCtx) the gate (site "ffn_up") or down (site
+    "ffn_down") einsum runs through the grouped GEMM+RNG producer and
+    this device's tile of the packed mask rides back with the output.
+    The emission grid indexes the (b, h, q, k) Philox counter space —
+    never token identity — so routing decisions, capacity overflow and
+    the expert permutation in ``recv`` cannot reach the bits. Returns
+    (out, mask-or-None); ``out`` is bit-identical to the plain einsum
+    path for an f32 host (single-k-block accumulation)."""
+    from repro.core import producer
+    mask = None
+    tile = None
+    if hs is not None:
+        b, nh, sq, sk = hs.mask_shape
+        tile = producer.shard_mask_tile(hs.shard, b, nh, sq, sk)
+    if hs is not None and hs.site == "ffn_up":
+        local_shape, hg, off = tile
+        h_g, mask, _how = producer.grouped_gemm_seeded(
+            recv, w_gate.astype(dt), hs.plan, local_shape, sd, sl,
+            heads_global=hg, bh_offset=off)
+    else:
+        h_g = jnp.einsum("ecd,edf->ecf", recv, w_gate.astype(dt))
+    h_u = jnp.einsum("ecd,edf->ecf", recv, w_up.astype(dt))
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(dt) * h_u
+    if hs is not None and hs.site == "ffn_down":
+        local_shape, hg, off = tile
+        out, mask, _how = producer.grouped_gemm_seeded(
+            h, w_down.astype(dt), hs.plan, local_shape, sd, sl,
+            heads_global=hg, bh_offset=off)
+    else:
+        out = jnp.einsum("ecf,efd->ecd", h, w_down.astype(dt))
+    return out, mask
 
 
 def moe_init(key, cfg: ModelConfig) -> Dict[str, Any]:
@@ -43,11 +103,14 @@ def moe_init(key, cfg: ModelConfig) -> Dict[str, Any]:
     }
 
 
-def _dispatch_combine(x2d, router_w, w_gate, w_up, w_down, moe: MoEConfig,
-                      ep_axis: Optional[str], tp_axis: Optional[str],
-                      dp_axes: Tuple[str, ...]):
+def _dispatch_combine(x2d, router_w, w_gate, w_up, w_down, *rng,
+                      moe: MoEConfig, ep_axis: Optional[str],
+                      tp_axis: Optional[str], dp_axes: Tuple[str, ...],
+                      hs: Optional[_GroupedHostCtx] = None):
     """Local body. x2d (T_loc, D). Expert weights are LOCAL shards
-    (E_loc, D, F_loc). Returns (y (T_loc, D), aux_loss scalar)."""
+    (E_loc, D, F_loc). Returns (y (T_loc, D), aux_loss scalar), plus
+    this device's packed-mask tile when ``hs`` hosts a grouped RNG
+    emission (``rng`` = (seed, salt) operands)."""
     t, d = x2d.shape
     e = moe.n_experts
     k = moe.top_k
@@ -58,9 +121,9 @@ def _dispatch_combine(x2d, router_w, w_gate, w_up, w_down, moe: MoEConfig,
     gate, idx = jax.lax.top_k(probs, k)                        # (T, k)
     gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
 
-    # per-source capacity
-    cap = max(1, -(-t * k * int(round(moe.capacity_factor * 100)) //
-                   (100 * e)))
+    # per-source capacity (the formula the schedule compiler plans on:
+    # producer.moe_expert_capacity)
+    cap = producer_capacity(moe, t)
 
     # position-in-expert via one-hot cumsum over (token, slot) order
     flat_idx = idx.reshape(t * k)
@@ -89,11 +152,9 @@ def _dispatch_combine(x2d, router_w, w_gate, w_up, w_down, moe: MoEConfig,
     else:
         recv = send                                            # E_loc == E
 
-    # expert FFN (swiglu), TP over tp_axis
-    h_g = jnp.einsum("ecd,edf->ecf", recv, w_gate.astype(dt))
-    h_u = jnp.einsum("ecd,edf->ecf", recv, w_up.astype(dt))
-    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(dt) * h_u
-    out = jnp.einsum("ecf,efd->ecd", h, w_down.astype(dt))
+    # expert FFN (swiglu), TP over tp_axis; optionally hosting the
+    # grouped RNG emission under the gate / down expert GEMM
+    out, mask = _expert_ffn(recv, w_gate, w_up, w_down, dt, hs, *rng)
     if tp_axis is not None:
         out = jax.lax.psum(out, tp_axis)
 
@@ -112,12 +173,15 @@ def _dispatch_combine(x2d, router_w, w_gate, w_up, w_down, moe: MoEConfig,
 
     if dp_axes:
         aux = jax.lax.pmean(aux, dp_axes)
+    if hs is not None:
+        return y, aux, mask
     return y, aux
 
 
-def _dispatch_combine_dedup(x2d, router_w, w_gate, w_up, w_down,
+def _dispatch_combine_dedup(x2d, router_w, w_gate, w_up, w_down, *rng,
                             moe: MoEConfig, ep_axis: str, tp_axis: str,
-                            dp_axes: Tuple[str, ...]):
+                            dp_axes: Tuple[str, ...],
+                            hs: Optional[_GroupedHostCtx] = None):
     """§Perf variant: tokens arrive ALREADY split over the tp axis (the
     residual stream is sequence-sharded there), so the EP all-to-all
     carries each token once instead of once per TP shard (16x dedup).
@@ -134,8 +198,7 @@ def _dispatch_combine_dedup(x2d, router_w, w_gate, w_up, w_down,
     gate, idx = jax.lax.top_k(probs, k)
     gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
 
-    cap = max(1, -(-t * k * int(round(moe.capacity_factor * 100)) //
-                   (100 * e)))
+    cap = producer_capacity(moe, t)
     flat_idx = idx.reshape(t * k)
     flat_gate = gate.reshape(t * k)
     onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.float32)
@@ -159,10 +222,7 @@ def _dispatch_combine_dedup(x2d, router_w, w_gate, w_up, w_down,
     # TP shards need every token of their experts: one gather, not 16 a2as
     full = jax.lax.all_gather(recv, tp_axis, axis=1, tiled=True)
 
-    h_g = jnp.einsum("ecd,edf->ecf", full, w_gate.astype(dt))
-    h_u = jnp.einsum("ecd,edf->ecf", full, w_up.astype(dt))
-    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(dt) * h_u
-    out = jnp.einsum("ecf,efd->ecd", h, w_down.astype(dt))
+    out, mask = _expert_ffn(full, w_gate, w_up, w_down, dt, hs, *rng)
     # sum the TP partials AND return only this shard's token chunk
     own = jax.lax.psum_scatter(out, tp_axis, scatter_dimension=1,
                                tiled=True)       # (E_loc, nsrc*cap, D)
@@ -176,13 +236,16 @@ def _dispatch_combine_dedup(x2d, router_w, w_gate, w_up, w_down,
         (flat_out.astype(jnp.float32)
          * flat_gate[:, None]).reshape(t, k, d), axis=1).astype(dt)
     aux = jax.lax.pmean(aux, dp_axes + (tp_axis,))
+    if hs is not None:
+        return y, aux, mask
     return y, aux
 
 
-def _dispatch_combine_ep_model(x2d, router_w, w_gate, w_up, w_down,
+def _dispatch_combine_ep_model(x2d, router_w, w_gate, w_up, w_down, *rng,
                                moe: MoEConfig, ep_axis: str,
                                fsdp_axis: str,
-                               dp_axes: Tuple[str, ...]):
+                               dp_axes: Tuple[str, ...],
+                               hs: Optional[_GroupedHostCtx] = None):
     """§Perf layout for small-d_ff experts: experts sharded over 'model'
     (= ep_axis here), expert weights FSDP'd over 'data' (= fsdp_axis) and
     gathered per layer, tokens chunked over (data x model). The dispatch
@@ -200,8 +263,7 @@ def _dispatch_combine_ep_model(x2d, router_w, w_gate, w_up, w_down,
     gate, idx = jax.lax.top_k(probs, k)
     gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
 
-    cap = max(1, -(-t * k * int(round(moe.capacity_factor * 100)) //
-                   (100 * e)))
+    cap = producer_capacity(moe, t)
     flat_idx = idx.reshape(t * k)
     flat_gate = gate.reshape(t * k)
     onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.float32)
@@ -228,10 +290,7 @@ def _dispatch_combine_ep_model(x2d, router_w, w_gate, w_up, w_down,
     wu = jax.lax.all_gather(w_up, fsdp_axis, axis=1, tiled=True)
     wd = jax.lax.all_gather(w_down, fsdp_axis, axis=2, tiled=True)
 
-    h_g = jnp.einsum("ecd,edf->ecf", recv, wg.astype(dt))
-    h_u = jnp.einsum("ecd,edf->ecf", recv, wu.astype(dt))
-    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(dt) * h_u
-    out = jnp.einsum("ecf,efd->ecd", h, wd.astype(dt))
+    out, mask = _expert_ffn(recv, wg, wu, wd, dt, hs, *rng)
 
     back = jax.lax.all_to_all(out, ep_axis, split_axis=1, concat_axis=0,
                               tiled=True)        # (E, cap, D)
@@ -242,14 +301,26 @@ def _dispatch_combine_ep_model(x2d, router_w, w_gate, w_up, w_down,
         (flat_out.astype(jnp.float32)
          * flat_gate[:, None]).reshape(t, k, d), axis=1).astype(dt)
     aux = jax.lax.pmean(aux, dp_axes + (ep_axis,))
+    if hs is not None:
+        return y, aux, mask
     return y, aux
 
 
 def moe_apply(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
               policy: Optional[ShardingPolicy] = None,
-              seq_dispatch: bool = False
-              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x (B, S, D) -> (y (B, S, D), aux scalar)."""
+              seq_dispatch: bool = False, host=None):
+    """x (B, S, D) -> (y (B, S, D), aux scalar).
+
+    ``host`` (a core/producer.FFNHost with a grouped ``how``) asks the
+    expert FFN to physically host the dropout-mask producer under one of
+    its grouped GEMMs — "ffn_up" = the gate projection einsum,
+    "ffn_down" = the down projection. The return value then grows a
+    third element: the packed mask (B, H, SQ//32, SK), generated
+    shard-local inside the SAME shard_map the dispatch runs in (each
+    device emits its (b_loc, h_loc) tile of the mask plane via
+    position-based counters — bit-identical to the global mask's slice
+    for every EP layout, because emission indexes the counter space,
+    never token identity)."""
     from repro.distributed.sharding import constrain
     b, s, d = x.shape
     moe = cfg.moe
@@ -261,10 +332,31 @@ def moe_apply(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
     x = constrain(x, "batch", "seq", "embed")
     x2d = x.reshape(b * s, d)
 
+    rng_args = ()
+    hs = None
+    mask_spec = None
+    if host is not None:
+        from repro.core import producer
+        mb, mh, _msq, _msk = host.mask_shape
+        shard = producer.shard_exec(policy, mb, mh)
+        hs = _GroupedHostCtx(plan=host.plan, site=host.site,
+                             mask_shape=host.mask_shape, shard=shard)
+        rng_args = (jnp.asarray(host.plan.step_seed(host.step),
+                                jnp.uint32),
+                    jnp.asarray(host.plan.salt(host.layer_idx),
+                                jnp.uint32))
+        mask_spec = (P() if shard is None
+                     else P(shard.b_spec, shard.h_spec, None, None))
+
     if policy is None:
-        y, aux = _dispatch_combine(
+        out = _dispatch_combine(
             x2d, params["router"], params["w_gate"], params["w_up"],
-            params["w_down"], moe, None, None, ())
+            params["w_down"], *rng_args, moe=moe, ep_axis=None,
+            tp_axis=None, dp_axes=(), hs=hs)
+        if hs is not None:
+            y, aux, mask = out
+            return y.reshape(b, s, d), aux, mask
+        y, aux = out
         return y.reshape(b, s, d), aux
 
     mesh = policy.mesh
@@ -280,6 +372,23 @@ def moe_apply(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
 
     ew_spec = P(ep, None, tp)
     ew2_spec = P(ep, tp, None)
+    rng_specs = (P(), P()) if hs is not None else ()
+
+    def _run(body, tok_spec, in_specs):
+        out_specs = ((tok_spec, P()) if hs is None
+                     else (tok_spec, P(), mask_spec))
+        out = shard_map(
+            body, mesh=mesh, in_specs=in_specs + rng_specs,
+            out_specs=out_specs, check_vma=False,
+        )(x2d, params["router"], params["w_gate"], params["w_up"],
+          params["w_down"], *rng_args)
+        if hs is None:
+            y2d, aux = out
+            mask = None
+        else:
+            y2d, aux, mask = out
+        y = constrain(y2d.reshape(b, s, d), "batch", "seq", "embed")
+        return (y, aux, mask) if hs is not None else (y, aux)
 
     # ep_model layout: experts over 'model', weights FSDP'd over 'data'
     ep_model = (policy.mesh_axes_for("expert", moe.n_experts) == "model")
@@ -292,17 +401,10 @@ def moe_apply(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
         tok_spec = P(dp + (tp,), None)
         body = functools.partial(_dispatch_combine_ep_model, moe=moe,
                                  ep_axis=tp, fsdp_axis="data",
-                                 dp_axes=dp)
-        y2d, aux = shard_map(
-            body, mesh=mesh,
-            in_specs=(tok_spec, P(None, None), P(tp, "data", None),
-                      P(tp, "data", None), P(tp, None, "data")),
-            out_specs=(tok_spec, P()),
-            check_vma=False,
-        )(x2d, params["router"], params["w_gate"], params["w_up"],
-          params["w_down"])
-        y = constrain(y2d.reshape(b, s, d), "batch", "seq", "embed")
-        return y, aux
+                                 dp_axes=dp, hs=hs)
+        return _run(body, tok_spec,
+                    (tok_spec, P(None, None), P(tp, "data", None),
+                     P(tp, "data", None), P(tp, None, "data")))
 
     if (seq_dispatch and not ep_model and ep is not None
             and tp is not None
@@ -311,27 +413,14 @@ def moe_apply(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
             == 0):
         tok_spec = P(dp + (tp,), None)
         body = functools.partial(_dispatch_combine_dedup, moe=moe,
-                                 ep_axis=ep, tp_axis=tp, dp_axes=dp)
-        y2d, aux = shard_map(
-            body, mesh=mesh,
-            in_specs=(tok_spec, P(None, None), ew_spec, ew_spec,
-                      ew2_spec),
-            out_specs=(tok_spec, P()),
-            check_vma=False,
-        )(x2d, params["router"], params["w_gate"], params["w_up"],
-          params["w_down"])
-        y = constrain(y2d.reshape(b, s, d), "batch", "seq", "embed")
-        return y, aux
+                                 ep_axis=ep, tp_axis=tp, dp_axes=dp,
+                                 hs=hs)
+        return _run(body, tok_spec,
+                    (tok_spec, P(None, None), ew_spec, ew_spec,
+                     ew2_spec))
 
     tok_spec = P(dp if len(dp) > 1 else (dp[0] if dp else None), None)
     body = functools.partial(_dispatch_combine, moe=moe, ep_axis=ep,
-                             tp_axis=tp, dp_axes=dp)
-    y2d, aux = shard_map(
-        body, mesh=mesh,
-        in_specs=(tok_spec, P(None, None), ew_spec, ew_spec, ew2_spec),
-        out_specs=(tok_spec, P()),
-        check_vma=False,
-    )(x2d, params["router"], params["w_gate"], params["w_up"],
-      params["w_down"])
-    y = constrain(y2d.reshape(b, s, d), "batch", "seq", "embed")
-    return y, aux
+                             tp_axis=tp, dp_axes=dp, hs=hs)
+    return _run(body, tok_spec,
+                (tok_spec, P(None, None), ew_spec, ew_spec, ew2_spec))

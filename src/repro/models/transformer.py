@@ -197,21 +197,31 @@ def _ffn_forward(p, x, cfg, rt: Runtime, tag, layer_idx=0,
             layer_idx=layer_idx + asg.emit_stride, step=rt.step,
             how=asg.emit_how, policy=rt.policy)
     if tag == "moe":
-        y, aux = moe_mod.moe_apply(p["moe"], x, cfg, rt.policy,
-                                   seq_dispatch=rt.moe_seq_dispatch)
+        if (host is not None
+                and host.how == producer.HOW_GEMM_GROUPED):
+            # the expert einsum hosts the emission through the grouped
+            # kernel — the RNG grid indexes the (b, h, q, k) counter
+            # space, so the permuted/capacity-dropped token layout of
+            # the dispatch never reaches the bits
+            y, aux, mask_next = moe_mod.moe_apply(
+                p["moe"], x, cfg, rt.policy,
+                seq_dispatch=rt.moe_seq_dispatch, host=host)
+        else:
+            y, aux = moe_mod.moe_apply(p["moe"], x, cfg, rt.policy,
+                                       seq_dispatch=rt.moe_seq_dispatch)
+            if host is not None:
+                # infeasible grouped shape (see the schedule's per-layer
+                # reason): keep the carry alive with the standalone
+                # producer, as planned (host.how)
+                b, h_, sq, sk = mask_shape
+                mask_next = producer.standalone_packed_mask(
+                    rt.plan, b, h_, sq, sk, host.layer_idx, rt.step,
+                    use_kernel=host.how == producer.HOW_STANDALONE,
+                    policy=rt.policy)
         if "shared" in p:
             y = y + ffn_apply(p["shared"], x, cfg)
         if "dense_res" in p:
             y = y + ffn_apply(p["dense_res"], x, cfg)
-        if host is not None:
-            # expert GEMMs are not hostable (permuted token layout);
-            # keep the carry alive with the standalone producer, as
-            # the schedule planned (host.how)
-            b, h_, sq, sk = mask_shape
-            mask_next = producer.standalone_packed_mask(
-                rt.plan, b, h_, sq, sk, host.layer_idx, rt.step,
-                use_kernel=host.how == producer.HOW_STANDALONE,
-                policy=rt.policy)
         return y, aux, mask_next
     shifted = None
     if cfg.ffn == FFNKind.RWKV_CHANNEL:
@@ -301,11 +311,28 @@ def forward(params, cfg: ModelConfig, rt: Runtime, inputs
     if sched is not None and (sched.batch, sched.seq) != (x.shape[0],
                                                           x.shape[1]):
         sched = None               # stale artifact: recompile for shape
+    from repro.core import producer
+    if (sched is not None and sched.active and cfg.moe is not None
+            and sched.moe_seq_dispatch != rt.moe_seq_dispatch
+            and any(producer.HOW_GEMM_GROUPED in (a.how, a.emit_how)
+                    for a in sched.assignments)):
+        # fail fast at build time: the grouped expert-host grid was
+        # planned for the OTHER dispatch layout — executing it anyway
+        # would silently emit a mask plan that belongs to a different
+        # expert GEMM grid. Schedules without a grouped host are
+        # dispatch-layout-independent and pass through.
+        raise ValueError(
+            f"compiled DropoutSchedule for model={cfg.name!r} was "
+            f"planned for moe_seq_dispatch={sched.moe_seq_dispatch} but "
+            f"the runtime has moe_seq_dispatch={rt.moe_seq_dispatch}; "
+            "recompile with compile_schedule(..., moe_seq_dispatch=...) "
+            "matching ShardingConfig.moe_seq_dispatch")
     if sched is None and rt.plan is not None:
         from repro.core import schedule as schedule_mod
         sched = schedule_mod.compile_schedule(
             cfg, rt.plan.cfg, x.shape[0], x.shape[1], policy=rt.policy,
-            attn_impl=rt.attn_impl)
+            attn_impl=rt.attn_impl,
+            moe_seq_dispatch=rt.moe_seq_dispatch)
     active = sched is not None and sched.active
     carry_mask = active and sched.carried
     aux_total = jnp.float32(0.0)

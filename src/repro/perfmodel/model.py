@@ -126,21 +126,51 @@ def gemm_host_headroom(m: int, n: int, k: int, mask_elems: float,
     return hidden - t_rng
 
 
+def grouped_gemm_host_headroom(e: int, m: int, n: int, k: int,
+                               mask_elems: float, hw: Hardware = GH100,
+                               rounds: int = 7, dtype_bytes: int = 2
+                               ) -> float:
+    """Region-1 headroom (seconds) of a GROUPED candidate host: E
+    independent (m, k)x(k, n) expert GEMMs walked by one combined grid
+    (MoE expert einsum; RWKV channel-mix is the E=1 case).
+
+    Same Fig. 5f composition as ``gemm_host_headroom``, with the grouped
+    operand arithmetic: the MMA work and the activation traffic scale
+    with E, and — unlike a dense GEMM, whose single weight is amortized
+    across all rows — every expert streams its OWN (k, n) weight, so the
+    memory-bound regime arrives E times sooner. That asymmetry is why
+    expert hosts need their own Region-1 estimate rather than a dense
+    (E*m, n, k) stand-in."""
+    flops = 2.0 * e * m * n * k
+    gemm_bytes = e * ((m * k + k * n) * dtype_bytes + m * n * 4.0)
+    t_gemm = max(flops / hw.mma_flops, gemm_bytes / hw.hbm_bw)
+    t_rng = max(mask_elems * rng_ops_per_elem(rounds) / hw.nonmma_ops,
+                mask_elems / 8.0 / hw.hbm_bw)
+    hidden = (t_gemm * hw.gemm_interference) / hw.rng_interference
+    return hidden - t_rng
+
+
 def rank_host_gemms(shapes: Dict[str, Tuple[int, int, int]],
                     mask_elems: float, hw: Hardware = GH100,
-                    rounds: int = 7, dtype_bytes: int = 2
-                    ) -> Tuple[Tuple[str, float], ...]:
+                    rounds: int = 7, dtype_bytes: int = 2,
+                    grouped: Optional[Dict[str, Tuple[int, int, int, int]]]
+                    = None) -> Tuple[Tuple[str, float], ...]:
     """Candidate host GEMMs ranked by Region-1 headroom, best first.
-    ``shapes`` maps a site name to its (m, n, k); the result pairs each
-    site with ``gemm_host_headroom`` seconds. The schedule compiler
+    ``shapes`` maps a site name to its dense (m, n, k); ``grouped`` maps
+    a site name to a grouped (e, m, n, k) judged by
+    ``grouped_gemm_host_headroom``. The schedule compiler
     (core/schedule.py) consumes this both to resolve site="auto" and to
     annotate explain() output with the margin each host was chosen by."""
-    ranked = sorted(
-        ((site, gemm_host_headroom(m, n, k, mask_elems, hw=hw,
-                                   rounds=rounds, dtype_bytes=dtype_bytes))
-         for site, (m, n, k) in shapes.items()),
-        key=lambda kv: -kv[1])
-    return tuple(ranked)
+    rows = [
+        (site, gemm_host_headroom(m, n, k, mask_elems, hw=hw,
+                                  rounds=rounds, dtype_bytes=dtype_bytes))
+        for site, (m, n, k) in shapes.items()]
+    rows += [
+        (site, grouped_gemm_host_headroom(e, m, n, k, mask_elems, hw=hw,
+                                          rounds=rounds,
+                                          dtype_bytes=dtype_bytes))
+        for site, (e, m, n, k) in (grouped or {}).items()]
+    return tuple(sorted(rows, key=lambda kv: -kv[1]))
 
 
 def baseline_block_time(shape: BlockShape, hw: Hardware = GH100,

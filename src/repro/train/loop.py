@@ -94,7 +94,9 @@ def make_train_step(cfg: ModelConfig, run: RunConfig,
         else run.shape.global_batch
     sched = compile_schedule(cfg, run.dropout, b_eff, run.shape.seq_len,
                              policy=policy,
-                             attn_impl=run.sharding.attn_impl)
+                             attn_impl=run.sharding.attn_impl,
+                             moe_seq_dispatch=run.sharding
+                             .moe_seq_dispatch)
     _log_schedule(f"train_step[site={run.dropout.site}]", sched)
 
     def loss_fn(master, x, y, step):
