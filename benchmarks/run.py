@@ -146,7 +146,14 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny per-site dense+MoE blocks + BENCH "
                          "schema assertion (seconds, CI-friendly)")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="skip all benches; run the static mask-safety "
+                         "lint sweep (counter-space only) and exit with "
+                         "its status — no kernel executes")
     args = ap.parse_args()
+    if args.lint_only:
+        from repro.analysis import lint
+        raise SystemExit(lint.main(["--jaxpr", "off", "-q"]))
     if args.smoke:
         raise SystemExit(run_smoke())
     if args.json:

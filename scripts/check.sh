@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Local CI gate: tier-1 fast lane, then the static mask-safety lint
+# sweep over every shipped config (counter-space; no kernel executes).
+#
+#   scripts/check.sh            # fast lane + lint sweep
+#   scripts/check.sh --full     # full tier-1 suite (includes slow) + lint
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src
+
+if [[ "${1:-}" == "--full" ]]; then
+    python -m pytest -x -q
+else
+    python -m pytest -x -q -m "not slow"
+fi
+
+python -m repro.analysis.lint --jaxpr off -q

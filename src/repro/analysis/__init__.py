@@ -1,0 +1,67 @@
+"""repro.analysis — static mask-safety verifier for compiled
+DropoutSchedules.
+
+Layer 1 (counters): symbolic Philox counter-space enumeration — every
+planned emission resolved to (salt, shard window, grid-step rectangle)
+and proven an exact, collision-free tiling. Layer 2 (dataflow): jaxpr
+taint walk proving packed mask bits never escape their planned scope.
+Neither layer executes a kernel.
+
+Entry points:
+  verify_schedule(cfg, sched)  — raise MaskSafetyError on any finding
+                                 (what compile_schedule(verify=True)
+                                 calls)
+  analyze_schedule(cfg, sched) — Layer-1 Report, no raise
+  analyze_model(...)           — Layer-2 Report (jaxpr trace)
+  python -m repro.analysis.lint — config-sweep CLI
+"""
+from __future__ import annotations
+
+from repro.analysis.counters import analyze_schedule, schedule_emissions
+from repro.analysis.dataflow import analyze_jaxpr, analyze_model
+from repro.analysis.rules import (
+    ALL_RULES,
+    COUNTER_OVERLAP,
+    EMISSION_GAP,
+    Finding,
+    MASK_COLLECTIVE_CROSSING,
+    MASK_RESIDUAL_LEAK,
+    MASK_TOKEN_GATHER,
+    MaskSafetyError,
+    REGION_MISMATCH,
+    Report,
+    SALT_COLLISION,
+    SHARD_WINDOW_MISMATCH,
+    STRIDE_MISMATCH,
+)
+
+
+def verify_schedule(cfg, sched, cell: str = "") -> Report:
+    """Counter-space verification that raises on failure — the hook
+    behind ``compile_schedule(..., verify=True)``."""
+    report = analyze_schedule(cfg, sched, cell=cell)
+    if not report.ok:
+        raise MaskSafetyError(report)
+    return report
+
+
+__all__ = [
+    "ALL_RULES",
+    "COUNTER_OVERLAP",
+    "EMISSION_GAP",
+    "Finding",
+    "MASK_COLLECTIVE_CROSSING",
+    "MASK_RESIDUAL_LEAK",
+    "MASK_TOKEN_GATHER",
+    "MaskSafetyError",
+    "REGION_MISMATCH",
+    "Report",
+    "SALT_COLLISION",
+    "SHARD_WINDOW_MISMATCH",
+    "STRIDE_MISMATCH",
+    "analyze_jaxpr",
+    "analyze_model",
+    "analyze_schedule",
+    "schedule_emissions",
+    "verify_schedule",
+]

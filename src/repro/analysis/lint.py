@@ -1,0 +1,176 @@
+"""Config-sweep CLI of the static mask-safety verifier.
+
+    PYTHONPATH=src python -m repro.analysis.lint                 # all cells
+    PYTHONPATH=src python -m repro.analysis.lint --config yi-6b \
+        --site auto --dtype fp8
+    PYTHONPATH=src python -m repro.analysis.lint --mutate counter-overlap
+
+Per cell (config x site x gemm_dtype), Layer 1 (counter-space) runs on
+the FULL-size architecture — pure interval arithmetic over the compiled
+schedule, no tracing. Layer 2 (jaxpr dataflow) traces the REDUCED
+same-family config once per (config, site): the dataflow topology is
+dtype-independent, and abstract tracing of the full 70B+ configs would
+dominate runtime without adding coverage. ``--jaxpr off`` skips Layer 2,
+``--jaxpr all`` runs it per dtype too. Exit code 0 = every cell clean;
+1 = findings (each printed with its rule ID); 2 = usage error.
+
+``--mutate`` injects one known corruption: the run exits non-zero with
+the matching rule ID named in the output (exit 1 = caught by the right
+rule, the expected outcome; exit 2 = the corruption slipped past the
+analyzer — a verifier regression).
+
+Zero kernel executions in any mode: Layer 1 never traces, Layer 2 only
+abstractly traces (jax.make_jaxpr).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.analysis import counters, dataflow, rules
+from repro.config.base import DROPOUT_SITES, GEMM_DTYPES, \
+    DropoutPlanConfig
+from repro.config.registry import get_arch, list_archs
+from repro.core.schedule import compile_schedule
+
+# counter-space analysis shape: big enough to exercise multi-step
+# emission grids + MoE capacity arithmetic, small enough to sweep every
+# shipped config in seconds
+DEFAULT_BATCH = 8
+DEFAULT_SEQ = 1024
+# jaxpr analysis shape (reduced configs)
+JAXPR_BATCH = 2
+JAXPR_SEQ = 256
+
+MUTATIONS = ("counter-overlap", "emission-gap", "shard-window",
+             "stride", "residual-leak")
+_MUTATION_RULE = {
+    "counter-overlap": rules.COUNTER_OVERLAP,
+    "emission-gap": rules.EMISSION_GAP,
+    "shard-window": rules.SHARD_WINDOW_MISMATCH,
+    "stride": rules.STRIDE_MISMATCH,
+    "residual-leak": rules.MASK_RESIDUAL_LEAK,
+}
+
+
+def _plan(site: str, dtype: str) -> DropoutPlanConfig:
+    return DropoutPlanConfig(mode="overlap", p=0.1, site=site,
+                             gemm_dtype=dtype)
+
+
+def lint_cell(arch: str, site: str, dtype: str, *, batch: int,
+              seq: int) -> rules.Report:
+    """Layer-1 verdict for one (config, site, dtype) cell on the
+    full-size architecture."""
+    cfg = get_arch(arch)
+    sched = compile_schedule(cfg, _plan(site, dtype), batch, seq,
+                             attn_impl="pallas")
+    return counters.analyze_schedule(
+        cfg, sched, cell=f"{arch} site={site} dtype={dtype}")
+
+
+def lint_cell_jaxpr(arch: str, site: str, dtype: str) -> rules.Report:
+    """Layer-2 verdict (jaxpr dataflow) on the reduced config."""
+    cfg = get_arch(arch, reduced=True)
+    return dataflow.analyze_model(
+        cfg, _plan(site, dtype), JAXPR_BATCH, JAXPR_SEQ,
+        attn_impl="pallas",
+        cell=f"{arch}[reduced] site={site} dtype={dtype}")
+
+
+def _run_mutation(kind: str, arch: str, site: str, dtype: str,
+                  batch: int, seq: int) -> int:
+    """Corrupt one cell and demand the matching rule fires. Returns the
+    process exit code: 1 when the corruption IS caught (a genuine lint
+    failure, named), 2 when it slipped past the analyzer."""
+    want = _MUTATION_RULE[kind]
+    if kind == "residual-leak":
+        cfg = get_arch(arch, reduced=True)
+        rep = dataflow.analyze_leaky_model(cfg, _plan(site, dtype),
+                                           JAXPR_BATCH, JAXPR_SEQ)
+    else:
+        cfg = get_arch(arch)
+        sched = compile_schedule(cfg, _plan(site, dtype), batch, seq,
+                                 attn_impl="pallas")
+        if kind == "stride":
+            sched = counters.corrupt_schedule_stride(sched)
+            emissions = counters.schedule_emissions(cfg, sched)
+        else:
+            emissions = counters.corrupt_emissions(
+                counters.schedule_emissions(cfg, sched), kind)
+        rep = rules.Report(
+            cell=f"{arch} site={site} dtype={dtype} mutate={kind}",
+            findings=tuple(counters.check_emissions(cfg, sched,
+                                                    emissions)),
+            checked_emissions=len(emissions))
+    print(rep.render())
+    hit = any(f.rule == want for f in rep.findings)
+    if hit:
+        print(f"[lint] mutation {kind!r} caught by {want}")
+        return 1
+    print(f"[lint] mutation {kind!r} NOT caught (wanted {want}) — "
+          "verifier regression")
+    return 2
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static mask-safety lint over compiled "
+                    "DropoutSchedules")
+    ap.add_argument("--config", default=None,
+                    help="arch id (default: every shipped config)")
+    ap.add_argument("--site", default=None,
+                    choices=DROPOUT_SITES,
+                    help="producer site (default: sweep all)")
+    ap.add_argument("--dtype", default=None, choices=GEMM_DTYPES,
+                    help="host GEMM dtype (default: sweep all)")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--seq", type=int, default=DEFAULT_SEQ)
+    ap.add_argument("--jaxpr", default="auto",
+                    choices=("auto", "off", "all"),
+                    help="Layer-2 jaxpr analysis: once per (config, "
+                         "site) [auto], per dtype [all], or skipped")
+    ap.add_argument("--mutate", default=None, choices=MUTATIONS,
+                    help="inject one corruption; exit 0 iff the "
+                         "matching rule catches it")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="print failing cells only")
+    args = ap.parse_args(argv)
+
+    archs = [args.config] if args.config else list_archs()
+    sites = [args.site] if args.site else list(DROPOUT_SITES)
+    dtypes = [args.dtype] if args.dtype else list(GEMM_DTYPES)
+
+    if args.mutate:
+        return _run_mutation(args.mutate, archs[0], args.site or "auto",
+                             dtypes[0], args.batch, args.seq)
+
+    bad = 0
+    cells = 0
+    for arch in archs:
+        for site in sites:
+            for di, dtype in enumerate(dtypes):
+                cells += 1
+                rep = lint_cell(arch, site, dtype, batch=args.batch,
+                                seq=args.seq)
+                if not rep.ok:
+                    bad += 1
+                if not rep.ok or not args.quiet:
+                    print(rep.render())
+                run_jaxpr = (args.jaxpr == "all"
+                             or (args.jaxpr == "auto" and di == 0))
+                if run_jaxpr:
+                    repj = lint_cell_jaxpr(arch, site, dtype)
+                    cells += 1
+                    if not repj.ok:
+                        bad += 1
+                    if not repj.ok or not args.quiet:
+                        print(repj.render())
+    print(f"[lint] {cells} cells, {bad} with findings")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.config.base import CARRIED_DROPOUT_SITES, DropoutPlanConfig
 from repro.core import dropout_rng
+from repro.kernels.philox_common import LAYER_SALT_PRIME, STEP_SEED_MULT
 
 # distinct salt streams so attention masks never collide with residual /
 # embedding dropout even at the same (layer, step)
@@ -38,7 +39,7 @@ SALT_ATTN = 0x0
 SALT_RESID = 0x40000000
 SALT_EMBED = 0x7FFF0000
 
-_LAYER_PRIME = np.uint32(1000003)
+_LAYER_PRIME = np.uint32(LAYER_SALT_PRIME)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,7 +81,7 @@ class DropoutPlan:
 
     def step_seed(self, step):
         """Fold the training step into the Philox key (traced-friendly)."""
-        return (jnp.asarray(step, jnp.uint32) * np.uint32(2654435761)
+        return (jnp.asarray(step, jnp.uint32) * np.uint32(STEP_SEED_MULT)
                 + np.uint32(self.cfg.seed & 0xFFFFFFFF))
 
     def precompute_mask(self, batch: int, n_heads: int, sq: int, sk: int,

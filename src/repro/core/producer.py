@@ -42,6 +42,13 @@ Scheduling telemetry lives on the compiled schedule itself
 (``DropoutSchedule.records`` / ``explain``), not in a mutable module
 global: records attached to the artifact cannot double-count under jit
 retraces and are trace-safe by construction.
+
+The static mask-safety verifier (``repro.analysis.counters``) re-derives
+each planned emission's grid from the SAME shape helpers exported here
+(``block_gemm_shapes`` / ``grouped_host_shapes`` / ``pick_gemm_blocks``)
+— changing their arithmetic changes what the verifier proves, and
+``tests/test_analysis.py`` holds every shipped config to a clean lint,
+so a divergence between planner and kernels fails fast.
 """
 from __future__ import annotations
 

@@ -239,7 +239,9 @@ class DropoutSchedule:
                     else "dropped"
                 row += (f" | emits->{tgt_s} under {a.emit_site} "
                         f"how={a.emit_how}")
-                if a.emit_reason:
+                # standalone-fallback layers share one fallback reason
+                # between the consume and emit halves — print it once
+                if a.emit_reason and a.emit_reason != a.reason:
                     row += f" ({a.emit_reason})"
             lines.append(row)
         return "\n".join(lines)
@@ -598,8 +600,8 @@ def _check_scan_periodicity(cfg: ModelConfig, sched: DropoutSchedule):
 
 def compile_schedule(model_cfg: ModelConfig, plan, batch: int, seq: int,
                      *, policy=None, attn_impl: str = "xla",
-                     hw=None, moe_seq_dispatch: bool = False
-                     ) -> DropoutSchedule:
+                     hw=None, moe_seq_dispatch: bool = False,
+                     verify: bool = False) -> DropoutSchedule:
     """Compile the per-layer dropout schedule for one (model, plan,
     shape, mesh/sharding) cell — the plan→compile→execute entry point.
 
@@ -614,13 +616,23 @@ def compile_schedule(model_cfg: ModelConfig, plan, batch: int, seq: int,
     are cached, so the in-trace sugar path (models/transformer.forward
     compiling on first use) and the explicit launch-time call return
     the identical object.
+
+    ``verify=True`` runs the static mask-safety verifier
+    (repro.analysis, Layer 1) over the compiled schedule and raises
+    ``repro.analysis.MaskSafetyError`` on any finding — pure counter
+    arithmetic, no kernel executes.
     """
     plan_cfg = plan.cfg if isinstance(plan, DropoutPlan) else plan
     if plan_cfg is None:
         raise ValueError("compile_schedule requires a dropout plan")
     shard = shard_info(policy, batch, model_cfg.n_heads)
-    return _compile(model_cfg, plan_cfg, batch, seq, shard, attn_impl,
-                    hw, moe_seq_dispatch)
+    sched = _compile(model_cfg, plan_cfg, batch, seq, shard, attn_impl,
+                     hw, moe_seq_dispatch)
+    if verify:
+        # imported lazily: analysis depends on this module
+        from repro.analysis import verify_schedule
+        verify_schedule(model_cfg, sched)
+    return sched
 
 
 def inline_assignment(model_cfg: ModelConfig, plan: DropoutPlan,

@@ -21,6 +21,7 @@ GEMM; the remainder runs exposed).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Tuple
 
@@ -59,6 +60,61 @@ def _mask_layout(n_steps: int, mask_batch: int, mask_heads: int,
         return None
     mask_rows_alloc = (n_rb_valid + 1) * rb      # +1 dummy overflow block
     return ck, n_cb, rb, n_rb_valid, n_valid_blocks, mask_rows_alloc
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskEmissionLayout:
+    """Static description of WHICH packed-mask rectangle each GEMM grid
+    step emits — the counter-layout metadata of the fused kernels,
+    exposed so repro.analysis can prove coverage/disjointness without
+    re-deriving (or executing) the kernel's work assignment.
+
+    The flattened local mask plane is (rows_valid, sk) packed words
+    (rows_valid = B_loc * H_loc * SQ//32). ``blocks()`` yields one
+    half-open rectangle per mask-producing grid step; steps beyond
+    ``n_valid_blocks`` write only the dummy overflow block that the
+    caller slices off (not yielded — it holds no consumed bits)."""
+    n_steps: int
+    rows_valid: int
+    sk: int
+    rb: int                 # rows per block (sublane-padded)
+    ck: int                 # cols per block
+    n_cb: int               # column blocks per row band
+    n_rb_valid: int         # valid row bands
+    n_valid_blocks: int
+    rows_alloc: int         # incl. the dummy overflow band
+
+    def blocks(self):
+        """Yield (step, r0, r1, c0, c1) — rows [r0, r1) x cols [c0, c1)
+        of the local plane written by GEMM step ``step`` (mirrors
+        ``_mask_block_idx``). The last row band is clipped to
+        rows_valid, exactly as consumers slice the padded buffer."""
+        for s in range(self.n_valid_blocks):
+            rb_idx, cb_idx = s // self.n_cb, s % self.n_cb
+            r0 = rb_idx * self.rb
+            r1 = min(r0 + self.rb, self.rows_valid)
+            c0 = cb_idx * self.ck
+            yield s, r0, r1, c0, c0 + self.ck
+
+
+def mask_emission_layout(n_steps: int, mask_batch: int, mask_heads: int,
+                         sq: int, mask_sk: int,
+                         mask_block_cols: int = 2048,
+                         max_mask_rows_per_block: int = 256
+                         ) -> Optional[MaskEmissionLayout]:
+    """Public form of ``_mask_layout``: the emission layout a fused host
+    with ``n_steps`` grid steps would use for a (mask_batch, mask_heads,
+    sq, mask_sk) mask, or None in the paper's Region 3."""
+    lay = _mask_layout(n_steps, mask_batch, mask_heads, sq // 32,
+                       mask_sk, mask_block_cols, max_mask_rows_per_block)
+    if lay is None:
+        return None
+    ck, n_cb, rb, n_rb_valid, n_valid_blocks, rows_alloc = lay
+    return MaskEmissionLayout(
+        n_steps=n_steps,
+        rows_valid=mask_batch * mask_heads * (sq // 32), sk=mask_sk,
+        rb=rb, ck=ck, n_cb=n_cb, n_rb_valid=n_rb_valid,
+        n_valid_blocks=n_valid_blocks, rows_alloc=rows_alloc)
 
 
 def mask_layout_feasible(n_steps: int, mask_batch: int, mask_heads: int,

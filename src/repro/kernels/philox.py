@@ -30,6 +30,12 @@ from repro.kernels.philox_common import (
     threshold_from_p,
 )
 
+# default emission-block shape, clamped to (sq32, sk) at call time.
+# Public: the static verifier (repro.analysis.counters) re-enumerates
+# this kernel's grid from these — keep in sync with philox_dropout_mask.
+DEFAULT_ROWS32_BLK = 8
+DEFAULT_BK = 512
+
 
 def _philox_kernel(s_ref, o_ref, *, rows32_blk: int, bk: int,
                    threshold, rounds: int, heads_local: int,
@@ -76,8 +82,9 @@ def _philox_dropout_mask(sd, *, batch: int, n_heads: int, sq: int, sk: int,
 
 def philox_dropout_mask(batch: int, n_heads: int, sq: int, sk: int,
                         p: float, seed, salt=0,
-                        rounds: int = 7, rows32_blk: int = 8,
-                        bk: int = 512, interpret: bool = True,
+                        rounds: int = 7,
+                        rows32_blk: int = DEFAULT_ROWS32_BLK,
+                        bk: int = DEFAULT_BK, interpret: bool = True,
                         heads_global: int = 0,
                         bh_offset=0) -> jnp.ndarray:
     """Packed keep-mask (B, H, SQ//32, SK) uint32 from the canonical

@@ -30,6 +30,34 @@ PHILOX_M1 = np.uint32(0xCD9E8D57)
 PHILOX_W0 = np.uint32(0x9E3779B9)  # golden-ratio Weyl increment
 PHILOX_W1 = np.uint32(0xBB67AE85)
 
+# Round counts philox4x32 implements exactly (paper sweeps 3/5/7; 10 is
+# the original Salmon et al. strength). Other values would silently run
+# a different chain length in every producer — config validation and
+# repro.analysis both check against this set.
+SUPPORTED_PHILOX_ROUNDS = (3, 5, 7, 10)
+
+# Counter-identity folding constants (DESIGN.md §4): the layer index
+# folds into x3 as layer * LAYER_SALT_PRIME + stream, the train step
+# into the Philox key as step * STEP_SEED_MULT + seed — both mod 2^32.
+# core/overlap.DropoutPlan applies these to traced scalars; the pure-int
+# mirrors below are the metadata repro.analysis enumerates counter
+# windows with, so the analyzer can never drift from the kernels.
+LAYER_SALT_PRIME = 1000003
+STEP_SEED_MULT = 2654435761
+
+
+def fold_layer_salt(layer: int, stream: int = 0) -> int:
+    """uint32 salt for (layer, stream) — the int mirror of
+    ``DropoutPlan.salt``."""
+    return (int(layer) * LAYER_SALT_PRIME + int(stream)) & 0xFFFFFFFF
+
+
+def fold_step_seed(step: int, seed: int) -> int:
+    """uint32 Philox key-lo for (step, seed) — the int mirror of
+    ``DropoutPlan.step_seed``."""
+    return (int(step) * STEP_SEED_MULT + (int(seed) & 0xFFFFFFFF)) \
+        & 0xFFFFFFFF
+
 _U16 = np.uint32(0xFFFF)
 _SIXTEEN = np.uint32(16)
 
@@ -149,6 +177,23 @@ def global_bh(local_bh, heads_local: int, heads_global: int, bh_offset):
     hl = np.uint32(heads_local)
     return (as_u32(bh_offset) + (lb // hl) * np.uint32(heads_global)
             + lb % hl)
+
+
+def shard_bh_intervals(bh_offset: int, batch_local: int,
+                       heads_local: int, heads_global: int
+                       ) -> Tuple[Tuple[int, int], ...]:
+    """Half-open intervals of GLOBAL flattened (b*H + h) counter indices
+    a shard-local producer covers — the int mirror of ``global_bh``: a
+    (b_loc, h_loc) tile starting at ``bh_offset`` owns h_loc contiguous
+    indices per local batch row, strided by H_global. repro.analysis
+    uses this to prove the shard windows tile the (B, H) mask plane."""
+    off = int(bh_offset)
+    if heads_local == heads_global:
+        # identity mapping: one contiguous run of b_loc * h_loc rows
+        return ((off, off + batch_local * heads_local),)
+    return tuple((off + b * heads_global,
+                  off + b * heads_global + heads_local)
+                 for b in range(batch_local))
 
 
 def tile_random_u32(q_start, k_start, bh, salt, k0, k1,

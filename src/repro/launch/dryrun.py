@@ -232,6 +232,16 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
             moe_seq_dispatch=run.sharding.moe_seq_dispatch)
         meta["dropout_schedule"] = sched.summary()
         meta["dropout_explain"] = sched.explain()
+        # static mask-safety verdict next to the explain: counter-space
+        # analysis only (pure arithmetic — no extra trace at lower time)
+        from repro.analysis import analyze_schedule
+        verdict = analyze_schedule(
+            cfg, sched, cell=f"{arch} x {shape_name}")
+        meta["mask_safety"] = {
+            "ok": verdict.ok,
+            "checked_emissions": verdict.checked_emissions,
+            "findings": [f.render() for f in verdict.findings],
+        }
     return compiled, meta
 
 
@@ -249,6 +259,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     report = {**meta, "memory": mem, "roofline": roof.to_dict()}
     if verbose and "dropout_explain" in meta:
         print(meta["dropout_explain"])
+        ms = meta["mask_safety"]
+        print(f"  mask-safety: "
+              f"{'ok' if ms['ok'] else 'FAIL'} "
+              f"({ms['checked_emissions']} emissions)"
+              + "".join("\n    " + f for f in ms["findings"]))
     if verbose:
         print(f"[dryrun] {arch} x {shape_name} x {meta['mesh']}: "
               f"compile={meta['compile_seconds']:.1f}s "

@@ -138,6 +138,32 @@ ffn_up how=gemm_rng"""
     assert sched.explain() == want
 
 
+def test_explain_snapshot_standalone_fallback():
+    """Standalone-fallback layers share one fallback reason between the
+    consume and emit halves of a row — explain() must print it once,
+    not twice (it used to repeat the raw reason string)."""
+    cfg = _dense_cfg(n_heads=64, n_kv_heads=64, head_dim=8)
+    sched = compile_schedule(cfg, _plan_cfg("prev_gemm"), 1, 512,
+                             attn_impl="pallas")
+    want = """\
+dropout schedule: model=t batch=1 seq=512 mode=overlap p=0.25 \
+site=prev_gemm gemm_dtype=f32 impl=pallas carried=yes
+  L0   full      mask<-bootstrap:standalone how=standalone (bootstrap: \
+no producer GEMM before the first attention layer) | emits->L1 under \
+prev_gemm how=standalone (Region 3: GEMM (512,64,512) too small for \
+1x64x512x512 mask)
+  L1   full      mask<-L0:prev_gemm how=standalone (Region 3: GEMM \
+(512,64,512) too small for 1x64x512x512 mask) | emits->L2 under \
+prev_gemm how=standalone
+  L2   full      mask<-L1:prev_gemm how=standalone (Region 3: GEMM \
+(512,64,512) too small for 1x64x512x512 mask) | emits->dropped under \
+prev_gemm how=standalone"""
+    assert sched.explain() == want
+    # the shared fallback reason appears exactly once per row
+    for row in sched.explain().splitlines()[2:]:
+        assert row.count("Region 3") <= 1
+
+
 def test_auto_resolution_recorded_with_headroom():
     cfg = _dense_cfg()
     sched = compile_schedule(cfg, _plan_cfg("auto"), 2, 128,
