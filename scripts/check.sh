@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Local CI gate: tier-1 fast lane, then the static mask-safety lint
-# sweep over every shipped config (counter-space; no kernel executes).
+# Local CI gate: tier-1 fast lane, the chaos (fault-injection) lane,
+# then the static mask-safety lint sweep over every shipped config and
+# mesh topology (counter-space; no kernel executes).
 #
-#   scripts/check.sh            # fast lane + lint sweep
+#   scripts/check.sh            # fast lane + chaos lane + lint sweep
 #   scripts/check.sh --full     # full tier-1 suite (includes slow) + lint
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -12,6 +13,11 @@ if [[ "${1:-}" == "--full" ]]; then
     python -m pytest -x -q
 else
     python -m pytest -x -q -m "not slow"
+    # chaos lane: crash/recovery bitwise-replay (the slow subprocess
+    # re-mesh tests run under --full)
+    python -m pytest -q -m "chaos and not slow"
 fi
 
-python -m repro.analysis.lint --jaxpr off -q
+# per-topology lint: every cell re-proven on 2-way data- and model-axis
+# layouts (MS-C4 shard-window tiling; N-dim-sharded host GEMM)
+python -m repro.analysis.lint --jaxpr off -q --topologies 1,2

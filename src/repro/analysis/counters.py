@@ -36,6 +36,7 @@ from repro.kernels.philox import DEFAULT_BK, DEFAULT_ROWS32_BLK
 from repro.kernels.philox_common import (
     fold_layer_salt,
     shard_bh_intervals,
+    shard_plane_windows,
 )
 
 # (step, r0, r1, c0, c1): rows [r0, r1) x cols [c0, c1) of the local
@@ -91,14 +92,12 @@ def _shard_windows(cfg: ModelConfig, sched: DropoutSchedule,
     sh = sched.shard
     if not (shard_local and sh.active):
         return (ShardWindow(0, b, h, h),)
-    b_loc = b // sh.batch_shards
-    h_loc = h // sh.head_shards
-    wins = []
-    for ib in range(sh.batch_shards):
-        for ih in range(sh.head_shards):
-            off = (ib * b_loc) * h + ih * h_loc
-            wins.append(ShardWindow(off, b_loc, h_loc, h))
-    return tuple(wins)
+    # the single source of the window arithmetic: the same enumeration
+    # producer.shard_mask_tile derives per device from live mesh indices
+    return tuple(
+        ShardWindow(off, b_loc, h_loc, h)
+        for off, b_loc, h_loc in shard_plane_windows(
+            b, h, sh.batch_shards, sh.head_shards))
 
 
 def _fused_blocks(cfg: ModelConfig, sched: DropoutSchedule, site: str,
@@ -140,12 +139,17 @@ def _fused_blocks(cfg: ModelConfig, sched: DropoutSchedule, site: str,
         if gemm is None:
             return None, rows_valid
         m, n, k = gemm
-        m_loc = m // sh.batch_shards if shard_local else m
-        blocks = producer.pick_gemm_blocks(m_loc, n, k)
+        # rows follow the batch shards, columns the head shards — the
+        # same local grid _fused_capability planned and
+        # _gemm_with_mask_sharded executes
+        m_loc, n_loc, _k = (producer.shard_host_gemm(
+            m, n, k, sh.batch_shards, sh.head_shards) if shard_local
+            else (m, n, k))
+        blocks = producer.pick_gemm_blocks(m_loc, n_loc, k)
         if blocks is None:
             return None, rows_valid
         bm, bn, _ = blocks
-        n_steps = (m_loc // bm) * (n // bn)
+        n_steps = (m_loc // bm) * (n_loc // bn)
     layout = mask_emission_layout(n_steps, b_loc, h_loc, seq, seq)
     if layout is None:
         return None, rows_valid
@@ -465,6 +469,11 @@ def corrupt_emissions(emissions: Tuple[MaskEmission, ...], kind: str
       "counter-overlap" — one grid step re-draws another's rectangle
       "emission-gap"    — one grid step's rectangle is never drawn
       "shard-window"    — one producer's bh_offset is off by one
+      "reshard-window"  — a resharded restore re-derives a window from
+                          the OLD topology: one shard's window is
+                          replaced by a copy of another's, so one tile
+                          of the (B, H) plane is double-drawn and
+                          another never drawn
     """
     if not emissions:
         raise ValueError("no emissions to corrupt (inert schedule)")
@@ -482,6 +491,18 @@ def corrupt_emissions(emissions: Tuple[MaskEmission, ...], kind: str
         mutated = dataclasses.replace(
             em, windows=(dataclasses.replace(
                 w, bh_offset=w.bh_offset + 1),) + em.windows[1:])
+    elif kind == "reshard-window":
+        # pick an emission with >= 2 windows (a genuinely sharded one)
+        for idx, em in enumerate(emissions):
+            if len(em.windows) >= 2:
+                break
+        else:
+            raise ValueError(
+                "reshard-window needs a sharded emission (>= 2 shard "
+                "windows); compile the schedule on a multi-shard "
+                "topology first")
+        mutated = dataclasses.replace(
+            em, windows=(em.windows[0], em.windows[0]) + em.windows[2:])
     else:
         raise ValueError(f"unknown corruption {kind!r}")
     return emissions[:idx] + (mutated,) + emissions[idx + 1:]

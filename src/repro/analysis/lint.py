@@ -32,7 +32,7 @@ from repro.analysis import counters, dataflow, rules
 from repro.config.base import DROPOUT_SITES, GEMM_DTYPES, \
     DropoutPlanConfig
 from repro.config.registry import get_arch, list_archs
-from repro.core.schedule import compile_schedule
+from repro.core.schedule import ShardInfo, compile_schedule
 
 # counter-space analysis shape: big enough to exercise multi-step
 # emission grids + MoE capacity arithmetic, small enough to sweep every
@@ -44,14 +44,32 @@ JAXPR_BATCH = 2
 JAXPR_SEQ = 256
 
 MUTATIONS = ("counter-overlap", "emission-gap", "shard-window",
-             "stride", "residual-leak")
+             "stride", "residual-leak", "reshard-window")
 _MUTATION_RULE = {
     "counter-overlap": rules.COUNTER_OVERLAP,
     "emission-gap": rules.EMISSION_GAP,
     "shard-window": rules.SHARD_WINDOW_MISMATCH,
     "stride": rules.STRIDE_MISMATCH,
     "residual-leak": rules.MASK_RESIDUAL_LEAK,
+    "reshard-window": rules.SHARD_WINDOW_MISMATCH,
 }
+
+
+def topology_shards(devices: int) -> List[ShardInfo]:
+    """The mask-plane shard layouts a ``devices``-wide mesh can realize:
+    batch split over a data axis, and heads split over a model axis (the
+    layout whose host GEMM is N-dim sharded). devices=1 is the unsharded
+    layout — the pure-arithmetic stand-in for meshes this process
+    doesn't hold, used by the per-topology sweep and the elastic-restore
+    contract check."""
+    if devices <= 1:
+        return [ShardInfo()]
+    return [
+        ShardInfo(batch_shards=devices, batch_axes=("data",),
+                  policy_installed=True),
+        ShardInfo(head_shards=devices, head_axes=("model",),
+                  policy_installed=True),
+    ]
 
 
 def _plan(site: str, dtype: str) -> DropoutPlanConfig:
@@ -60,14 +78,24 @@ def _plan(site: str, dtype: str) -> DropoutPlanConfig:
 
 
 def lint_cell(arch: str, site: str, dtype: str, *, batch: int,
-              seq: int) -> rules.Report:
-    """Layer-1 verdict for one (config, site, dtype) cell on the
-    full-size architecture."""
+              seq: int, shard: Optional[ShardInfo] = None
+              ) -> Optional[rules.Report]:
+    """Layer-1 verdict for one (config, site, dtype[, topology]) cell
+    on the full-size architecture. None = the synthetic topology can't
+    shard this cell's mask plane (a dim doesn't divide) — skipped, not
+    clean."""
     cfg = get_arch(arch)
+    cell = f"{arch} site={site} dtype={dtype}"
+    if shard is not None and shard.active:
+        if (batch % shard.batch_shards) or (cfg.n_heads %
+                                            shard.head_shards):
+            return None
+        axes = shard.batch_axes + shard.head_axes
+        cell += (f" topo={shard.batch_shards}x{shard.head_shards}"
+                 f"({','.join(axes)})")
     sched = compile_schedule(cfg, _plan(site, dtype), batch, seq,
-                             attn_impl="pallas")
-    return counters.analyze_schedule(
-        cfg, sched, cell=f"{arch} site={site} dtype={dtype}")
+                             attn_impl="pallas", shard=shard)
+    return counters.analyze_schedule(cfg, sched, cell=cell)
 
 
 def lint_cell_jaxpr(arch: str, site: str, dtype: str) -> rules.Report:
@@ -91,8 +119,12 @@ def _run_mutation(kind: str, arch: str, site: str, dtype: str,
                                            JAXPR_BATCH, JAXPR_SEQ)
     else:
         cfg = get_arch(arch)
+        # reshard-window needs a genuinely sharded schedule — compile
+        # the cell on a synthetic 2-way model-axis topology
+        shard = (topology_shards(2)[1] if kind == "reshard-window"
+                 else None)
         sched = compile_schedule(cfg, _plan(site, dtype), batch, seq,
-                                 attn_impl="pallas")
+                                 attn_impl="pallas", shard=shard)
         if kind == "stride":
             sched = counters.corrupt_schedule_stride(sched)
             emissions = counters.schedule_emissions(cfg, sched)
@@ -135,9 +167,21 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--mutate", default=None, choices=MUTATIONS,
                     help="inject one corruption; exit 0 iff the "
                          "matching rule catches it")
+    ap.add_argument("--topologies", default="1",
+                    help="comma-separated mesh widths to lint each cell "
+                         "under (e.g. 1,2): width t>1 re-lints on a "
+                         "t-way data-axis AND a t-way model-axis "
+                         "layout (the N-dim-sharded host GEMM)")
     ap.add_argument("-q", "--quiet", action="store_true",
                     help="print failing cells only")
     args = ap.parse_args(argv)
+    try:
+        topologies = [int(t) for t in args.topologies.split(",") if t]
+        if not topologies or min(topologies) < 1:
+            raise ValueError
+    except ValueError:
+        ap.error(f"--topologies {args.topologies!r}: expected "
+                 "comma-separated positive ints")
 
     archs = [args.config] if args.config else list_archs()
     sites = [args.site] if args.site else list(DROPOUT_SITES)
@@ -147,18 +191,26 @@ def main(argv: Optional[List[str]] = None) -> int:
         return _run_mutation(args.mutate, archs[0], args.site or "auto",
                              dtypes[0], args.batch, args.seq)
 
+    shards = [s for t in sorted(set(topologies))
+              for s in topology_shards(t)]
     bad = 0
     cells = 0
+    skipped = 0
     for arch in archs:
         for site in sites:
             for di, dtype in enumerate(dtypes):
-                cells += 1
-                rep = lint_cell(arch, site, dtype, batch=args.batch,
-                                seq=args.seq)
-                if not rep.ok:
-                    bad += 1
-                if not rep.ok or not args.quiet:
-                    print(rep.render())
+                for shard in shards:
+                    rep = lint_cell(arch, site, dtype,
+                                    batch=args.batch, seq=args.seq,
+                                    shard=shard)
+                    if rep is None:      # topology can't tile the plane
+                        skipped += 1
+                        continue
+                    cells += 1
+                    if not rep.ok:
+                        bad += 1
+                    if not rep.ok or not args.quiet:
+                        print(rep.render())
                 run_jaxpr = (args.jaxpr == "all"
                              or (args.jaxpr == "auto" and di == 0))
                 if run_jaxpr:
@@ -168,7 +220,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                         bad += 1
                     if not repj.ok or not args.quiet:
                         print(repj.render())
-    print(f"[lint] {cells} cells, {bad} with findings")
+    skip = f", {skipped} skipped (indivisible topology)" if skipped \
+        else ""
+    print(f"[lint] {cells} cells, {bad} with findings{skip}")
     return 1 if bad else 0
 
 

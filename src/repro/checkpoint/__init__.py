@@ -1,3 +1,21 @@
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    CheckpointWriteError,
+)
+from repro.checkpoint.contract import (
+    ContractMismatchError,
+    DropoutContract,
+    contract_from_schedule,
+    schedule_digest,
+    verify_resume,
+)
 
-__all__ = ["Checkpointer"]
+__all__ = [
+    "Checkpointer",
+    "CheckpointWriteError",
+    "ContractMismatchError",
+    "DropoutContract",
+    "contract_from_schedule",
+    "schedule_digest",
+    "verify_resume",
+]

@@ -11,7 +11,15 @@ preserving the interface.
 
 Atomicity: write to ``<dir>/tmp.<step>`` then ``os.replace`` — a crashed
 save never corrupts the latest checkpoint. Async: the device->host gather
-happens synchronously (cheap), the file write runs on a worker thread.
+happens synchronously (cheap), the file write runs on a worker thread;
+a write failure surfaces at the next ``wait()`` as CheckpointWriteError,
+the distinct type TrainRunner catches to fall back to the previous
+checkpoint instead of burning a restart-budget slot on it.
+
+The dropout contract (checkpoint/contract.py) rides inside the same
+.npz under a ``__dropout_contract__`` key, so the atomic replace covers
+params and contract together — a checkpoint can never hold params from
+one schedule and the contract of another.
 """
 from __future__ import annotations
 
@@ -25,6 +33,17 @@ import jax
 import numpy as np
 
 _STEP_RE = re.compile(r"^ckpt_(\d+)\.npz$")
+
+# non-leaf payload keys (metadata riding inside the .npz); restore
+# filters them out of the param tree
+_META_PREFIX = "__"
+_CONTRACT_KEY = "__dropout_contract__"
+
+
+class CheckpointWriteError(RuntimeError):
+    """An async checkpoint write failed (disk full, permission, crash
+    injection). The on-disk latest checkpoint is still the previous
+    one — atomic tmp+replace means no partial file was published."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -61,9 +80,15 @@ class Checkpointer:
 
     # -- save --------------------------------------------------------------
 
-    def save(self, step: int, state) -> None:
+    def save(self, step: int, state, contract=None) -> None:
+        """Write checkpoint ``step``. ``contract`` is an optional
+        DropoutContract (checkpoint/contract.py) embedded in the same
+        atomic .npz so restore can verify the mask lineage."""
         self.wait()  # one outstanding async save at a time
         host_state = _flatten(state)
+        if contract is not None:
+            host_state[_CONTRACT_KEY] = np.frombuffer(
+                contract.to_json().encode(), dtype=np.uint8)
         if self.async_save:
             self._worker = threading.Thread(
                 target=self._write, args=(step, host_state), daemon=True)
@@ -87,12 +112,18 @@ class Checkpointer:
             self._error = e
 
     def wait(self) -> None:
+        """Join the outstanding async write; re-raise its failure as
+        CheckpointWriteError (callers distinguish "the save failed, the
+        previous checkpoint is still good" from a training crash)."""
         if self._worker is not None:
             self._worker.join()
             self._worker = None
         if self._error is not None:
             err, self._error = self._error, None
-            raise err
+            if isinstance(err, CheckpointWriteError):
+                raise err
+            raise CheckpointWriteError(
+                f"async checkpoint write failed: {err!r}") from err
 
     def _gc(self):
         steps = sorted(self.all_steps())
@@ -113,18 +144,57 @@ class Checkpointer:
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
+        """Newest restorable step: prefer the atomically-written
+        ``latest`` meta file (validated — its step's .npz must exist,
+        a stale or corrupt meta falls through), else scan the
+        directory."""
+        meta = os.path.join(self.directory, "latest")
+        try:
+            with open(meta) as f:
+                step = int(json.load(f)["step"])
+            if os.path.exists(os.path.join(self.directory,
+                                           f"ckpt_{step}.npz")):
+                return step
+        except (OSError, ValueError, KeyError, TypeError,
+                json.JSONDecodeError):
+            pass
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def load_contract(self, step: int):
+        """The DropoutContract saved with ``step``, or None for a
+        pre-contract checkpoint."""
+        from repro.checkpoint.contract import DropoutContract
+        path = os.path.join(self.directory, f"ckpt_{step}.npz")
+        with np.load(path) as z:
+            if _CONTRACT_KEY not in z.files:
+                return None
+            blob = z[_CONTRACT_KEY].tobytes().decode()
+        return DropoutContract.from_json(blob)
 
     def restore(self, step: int, template,
                 shardings=None):
         """Restore into the structure of ``template``. ``shardings`` is an
         optional matching pytree of NamedSharding for elastic re-mesh
-        placement (mesh may differ from the one that saved)."""
+        placement (mesh may differ from the one that saved). Leaf dtypes
+        must match the template in both paths — silent dtype drift would
+        change the training numerics of a "bitwise replay"."""
         path = os.path.join(self.directory, f"ckpt_{step}.npz")
         with np.load(path) as z:
-            arrays = {k: z[k] for k in z.files}
+            arrays = {k: z[k] for k in z.files
+                      if not k.startswith(_META_PREFIX)}
         state = _unflatten_like(template, arrays)
+        flat, _ = jax.tree_util.tree_flatten_with_path(template)
+        for (kp, tmpl), arr in zip(
+                flat, jax.tree_util.tree_leaves(state)):
+            tdt = np.dtype(getattr(tmpl, "dtype", np.asarray(tmpl).dtype))
+            if np.dtype(arr.dtype) != tdt:
+                raise ValueError(
+                    f"checkpoint dtype drift for leaf "
+                    f"{jax.tree_util.keystr(kp)}: ckpt {arr.dtype} vs "
+                    f"template {tdt} — refusing to cast silently; "
+                    "restore with a matching template or convert the "
+                    "checkpoint explicitly")
         if shardings is not None:
             state = jax.tree.map(
                 lambda a, s: jax.device_put(a, s), state, shardings)

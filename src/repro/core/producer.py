@@ -104,6 +104,26 @@ def pick_gemm_blocks(m: int, n: int, k: int
     return bm, bn, bk
 
 
+def shard_host_gemm(m: int, n: int, k: int, batch_shards: int = 1,
+                    head_shards: int = 1) -> Tuple[int, int, int]:
+    """Per-shard (m_loc, n_loc, k) of a dense host GEMM under the
+    mask-plane shard layout: rows follow the batch shards, columns
+    follow the head (model-axis) shards — each model-axis shard computes
+    a DISTINCT N-slice of the host GEMM instead of recomputing the full
+    product redundantly, so head-only-sharded meshes stop paying the
+    whole GEMM per shard. A dim that doesn't divide stays global (that
+    dim is then replicated across its shards — the pre-N-sharding
+    behavior). The schedule compiler, the shard-local executor, and
+    repro.analysis all derive the local grid from THIS function, so the
+    planned emission layout, the executed kernel grid, and the verified
+    counter tiling can never disagree."""
+    m_loc = m // batch_shards if batch_shards > 1 and m % batch_shards == 0 \
+        else m
+    n_loc = n // head_shards if head_shards > 1 and n % head_shards == 0 \
+        else n
+    return m_loc, n_loc, k
+
+
 def mask_kernel_unsupported_reason(plan: DropoutPlan, sq: int, sk: int,
                                    fused: bool = True) -> Optional[str]:
     """Why the Pallas mask producers cannot represent this plan/shape —
@@ -345,11 +365,13 @@ def _gemm_with_mask_sharded(x2d, w2d, plan, mask_shape, layer_idx, step,
                             shard: ShardExec
                             ) -> Tuple[jnp.ndarray, jnp.ndarray, str]:
     """Shard-local fused GEMM+RNG: each shard runs the Pallas kernel on
-    its batch rows of the GEMM and generates its (b_loc, h_loc) tile of
-    the mask plane (global-position counters, bit-exact slices). The
-    GEMM result is replicated across head-only mesh axes — those shards
-    redundantly compute identical rows, which the fsdp training layout
-    (batch over every axis) never hits."""
+    its batch rows x head-axis columns of the GEMM and generates its
+    (b_loc, h_loc) tile of the mask plane (global-position counters,
+    bit-exact slices). GEMM rows follow the batch shards and — when N
+    divides — columns follow the head (model) shards, so a head-only
+    mesh computes a distinct N-slice per shard instead of redundantly
+    recomputing the full product; an indivisible N falls back to
+    replicated columns (the pre-N-sharding layout)."""
     from jax.sharding import PartitionSpec as P
     from repro.kernels import ops
     batch, n_heads, sq, sk = mask_shape
@@ -357,8 +379,9 @@ def _gemm_with_mask_sharded(x2d, w2d, plan, mask_shape, layer_idx, step,
     h_loc = n_heads // shard.head_shards
     m, kdim = x2d.shape
     n = w2d.shape[1]
-    m_loc = m // shard.batch_shards
-    blocks = pick_gemm_blocks(m_loc, n, kdim)
+    m_loc, n_loc, _ = shard_host_gemm(m, n, kdim, shard.batch_shards,
+                                      shard.head_shards)
+    blocks = pick_gemm_blocks(m_loc, n_loc, kdim)
     # Region 3 is a static property of (local GEMM grid, local mask):
     # decide the realized producer here so the returned tag matches
     # what the body actually does (the unsharded path's semantics)
@@ -366,11 +389,13 @@ def _gemm_with_mask_sharded(x2d, w2d, plan, mask_shape, layer_idx, step,
     if blocks is not None:
         from repro.kernels.gemm_rng import mask_layout_feasible
         bm, bn, _bk = blocks
-        fused = mask_layout_feasible((m_loc // bm) * (n // bn), b_loc,
-                                     h_loc, sq, sk)
+        fused = mask_layout_feasible((m_loc // bm) * (n_loc // bn),
+                                     b_loc, h_loc, sq, sk)
     seed = jnp.asarray(plan.step_seed(step), jnp.uint32)
     salt = jnp.asarray(plan.salt(layer_idx), jnp.uint32)
     xs = P(shard.b_spec, None)
+    ws = P(None, shard.h_spec if n_loc != n else None)
+    ys = P(shard.b_spec, shard.h_spec if n_loc != n else None)
     ms = P(shard.b_spec, shard.h_spec, None, None)
 
     def body(x_, w_, sd_, sl_):
@@ -393,8 +418,8 @@ def _gemm_with_mask_sharded(x2d, w2d, plan, mask_shape, layer_idx, step,
         return y, mask
 
     y, mask = shard_map(
-        body, mesh=shard.mesh, in_specs=(xs, P(None, None), P(), P()),
-        out_specs=(xs, ms), check_vma=False,
+        body, mesh=shard.mesh, in_specs=(xs, ws, P(), P()),
+        out_specs=(ys, ms), check_vma=False,
     )(x2d, w2d, seed, salt)
     return y, mask, HOW_GEMM if fused else HOW_STANDALONE
 

@@ -345,17 +345,20 @@ def _fused_capability(plan: DropoutPlan, cfg: ModelConfig, batch: int,
         return (HOW_STANDALONE, sharded,
                 f"no hostable {site} GEMM in this block")
     m, n, k = gemm
-    m_loc = m // shard.batch_shards      # GEMM rows follow the batch
-    blocks = producer.pick_gemm_blocks(m_loc, n, k)
+    # GEMM rows follow the batch shards, columns the head shards —
+    # the exact local grid _gemm_with_mask_sharded will execute
+    m_loc, n_loc, _k = producer.shard_host_gemm(
+        m, n, k, shard.batch_shards, shard.head_shards)
+    blocks = producer.pick_gemm_blocks(m_loc, n_loc, k)
     if blocks is None:
         return (HOW_XLA, False,
-                f"GEMM ({m_loc},{n},{k}) does not tile")
+                f"GEMM ({m_loc},{n_loc},{k}) does not tile")
     from repro.kernels.gemm_rng import mask_layout_feasible
     bm, bn, _ = blocks
-    n_steps = (m_loc // bm) * (n // bn)
+    n_steps = (m_loc // bm) * (n_loc // bn)
     if not mask_layout_feasible(n_steps, b_loc, h_loc, seq, seq):
         return (HOW_STANDALONE, sharded,
-                f"Region 3: GEMM ({m_loc},{n},{k}) too small for "
+                f"Region 3: GEMM ({m_loc},{n_loc},{k}) too small for "
                 f"{b_loc}x{h_loc}x{seq}x{seq} mask")
     if plan.gemm_dtype == "fp8":
         from repro.kernels import quant
@@ -601,7 +604,9 @@ def _check_scan_periodicity(cfg: ModelConfig, sched: DropoutSchedule):
 def compile_schedule(model_cfg: ModelConfig, plan, batch: int, seq: int,
                      *, policy=None, attn_impl: str = "xla",
                      hw=None, moe_seq_dispatch: bool = False,
-                     verify: bool = False) -> DropoutSchedule:
+                     verify: bool = False,
+                     shard: Optional[ShardInfo] = None
+                     ) -> DropoutSchedule:
     """Compile the per-layer dropout schedule for one (model, plan,
     shape, mesh/sharding) cell — the plan→compile→execute entry point.
 
@@ -621,11 +626,19 @@ def compile_schedule(model_cfg: ModelConfig, plan, batch: int, seq: int,
     (repro.analysis, Layer 1) over the compiled schedule and raises
     ``repro.analysis.MaskSafetyError`` on any finding — pure counter
     arithmetic, no kernel executes.
+
+    ``shard`` overrides the ShardInfo distilled from ``policy`` — the
+    pure-arithmetic hook the per-topology lint sweep and the elastic
+    re-mesh contract check use to plan for a mesh this process doesn't
+    hold (no devices needed; mutually exclusive with ``policy``).
     """
     plan_cfg = plan.cfg if isinstance(plan, DropoutPlan) else plan
     if plan_cfg is None:
         raise ValueError("compile_schedule requires a dropout plan")
-    shard = shard_info(policy, batch, model_cfg.n_heads)
+    if shard is not None and policy is not None:
+        raise ValueError("pass either policy or shard, not both")
+    if shard is None:
+        shard = shard_info(policy, batch, model_cfg.n_heads)
     sched = _compile(model_cfg, plan_cfg, batch, seq, shard, attn_impl,
                      hw, moe_seq_dispatch)
     if verify:

@@ -100,6 +100,10 @@ class RunnerReport:
     restarts: int
     straggler_steps: int
     final_metrics: dict
+    # async checkpoint writes that failed (distinct from training
+    # crashes: the run fell back to the previous checkpoint, no
+    # restart-budget slot was burned)
+    failed_saves: int = 0
 
 
 class TrainRunner:
@@ -110,13 +114,26 @@ class TrainRunner:
     continues, up to ``max_restarts``. Deterministic data (step-indexed)
     plus deterministic dropout (step-folded Philox) make the recovered
     trajectory bitwise-identical to an uninterrupted one.
+
+    With ``contract`` (checkpoint/contract.py) every recovery verifies
+    the restored checkpoint's dropout contract against this run's before
+    resuming — a mask_identity mismatch raises ContractMismatchError
+    (fail fast: resuming would train under different mask bits), and a
+    realization drift re-proves the current schedule via repro.analysis
+    when ``model_cfg``/``schedule`` are given.
+
+    A failed async checkpoint write (CheckpointWriteError) is NOT a
+    training crash: it is counted in ``RunnerReport.failed_saves``, the
+    previous checkpoint stays the restore point, and no restart-budget
+    slot is burned.
     """
 
     def __init__(self, step_fn: Callable, state, batch_fn: Callable,
                  checkpointer, checkpoint_every: int = 10,
                  max_restarts: int = 3,
                  straggler: Optional[StragglerDetector] = None,
-                 failure_hook: Optional[Callable[[int], None]] = None):
+                 failure_hook: Optional[Callable[[int], None]] = None,
+                 contract=None, model_cfg=None, schedule=None):
         self.step_fn = step_fn
         self.state = state
         self.batch_fn = batch_fn
@@ -125,10 +142,50 @@ class TrainRunner:
         self.max_restarts = max_restarts
         self.straggler = straggler or StragglerDetector()
         self.failure_hook = failure_hook
+        self.contract = contract
+        self.model_cfg = model_cfg
+        self.schedule = schedule
         self.restarts = 0
+        self.failed_saves = 0
+
+    def _save(self, step: int) -> None:
+        """Checkpoint; a write failure (its own, or the PREVIOUS async
+        write's, surfaced by save()'s internal wait) falls back to the
+        last good checkpoint instead of crashing the step."""
+        from repro.checkpoint.checkpointer import CheckpointWriteError
+        try:
+            if self.contract is not None:
+                self.ckpt.save(step, self.state,
+                               contract=self.contract)
+            else:
+                self.ckpt.save(step, self.state)
+        except CheckpointWriteError:
+            self.failed_saves += 1
+
+    def _drain_pending_save(self) -> None:
+        from repro.checkpoint.checkpointer import CheckpointWriteError
+        try:
+            self.ckpt.wait()
+        except CheckpointWriteError:
+            self.failed_saves += 1
+
+    def _verify_contract(self, step: int) -> None:
+        """Gate a recovery on the restored checkpoint's dropout
+        contract. ContractMismatchError propagates — resuming would
+        replay different mask bits, which no restart can fix."""
+        if self.contract is None or not hasattr(self.ckpt,
+                                                "load_contract"):
+            return
+        from repro.checkpoint.contract import verify_resume
+        saved = self.ckpt.load_contract(step)
+        if saved is None:          # pre-contract checkpoint
+            return
+        verify_resume(saved, self.contract, cfg=self.model_cfg,
+                      sched=self.schedule)
 
     def run(self, n_steps: int) -> RunnerReport:
         import jax
+        from repro.checkpoint.contract import ContractMismatchError
         metrics = {}
         step = int(jax.device_get(self.state["step"]))
         while step < n_steps:
@@ -142,21 +199,28 @@ class TrainRunner:
                 self.straggler.observe(time.perf_counter() - t0)
                 step += 1
                 if step % self.checkpoint_every == 0:
-                    self.ckpt.save(step, self.state)
+                    self._save(step)
+            except ContractMismatchError:
+                raise                     # fail fast: wrong mask bits
             except Exception:
                 self.restarts += 1
                 if self.restarts > self.max_restarts:
                     raise
+                # a failed async save surfacing here is NOT the crash
+                # we are recovering from — count it and restore from
+                # the last checkpoint that actually landed
+                self._drain_pending_save()
                 latest = self.ckpt.latest_step()
                 if latest is not None:
-                    self.ckpt.wait()
                     self.state = self.ckpt.restore(latest, self.state)
+                    self._verify_contract(latest)
                     step = latest
                 else:
                     step = 0
-        self.ckpt.wait()
+        self._drain_pending_save()
         return RunnerReport(
             steps_completed=step,
             restarts=self.restarts,
             straggler_steps=len(self.straggler.flagged),
+            failed_saves=self.failed_saves,
             final_metrics={k: float(v) for k, v in metrics.items()})

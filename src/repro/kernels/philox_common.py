@@ -179,6 +179,30 @@ def global_bh(local_bh, heads_local: int, heads_global: int, bh_offset):
             + lb % hl)
 
 
+def shard_plane_windows(batch: int, heads: int, batch_shards: int = 1,
+                        head_shards: int = 1
+                        ) -> Tuple[Tuple[int, int, int], ...]:
+    """(bh_offset, batch_local, heads_local) of every shard-local
+    producer's tile of the (B, H) mask plane under a (batch_shards x
+    head_shards) split — the pure-int enumeration of what
+    ``producer.shard_mask_tile`` computes per device from live mesh
+    indices. The single source for three consumers that must agree:
+    repro.analysis proves the windows tile the plane (MS-C4), the
+    elastic-determinism tests slice the global mask with them, and a
+    resharded restore re-derives the windows a new topology will emit.
+    Dims that don't divide stay unsplit (that shard dimension is
+    replicated, matching ``mask_plane_shards``'s divisibility guard)."""
+    if batch % max(batch_shards, 1):
+        batch_shards = 1
+    if heads % max(head_shards, 1):
+        head_shards = 1
+    b_loc = batch // batch_shards
+    h_loc = heads // head_shards
+    return tuple((ib * b_loc * heads + ih * h_loc, b_loc, h_loc)
+                 for ib in range(batch_shards)
+                 for ih in range(head_shards))
+
+
 def shard_bh_intervals(bh_offset: int, batch_local: int,
                        heads_local: int, heads_global: int
                        ) -> Tuple[Tuple[int, int], ...]:

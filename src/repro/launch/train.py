@@ -16,7 +16,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import Checkpointer
+from repro.checkpoint import (
+    Checkpointer,
+    contract_from_schedule,
+    verify_resume,
+)
 from repro.config import (
     DropoutPlanConfig,
     OptimizerConfig,
@@ -29,7 +33,11 @@ from repro.config import (
 )
 from repro.data import batch_for_step, embed_batch_for_step
 from repro.distributed.fault import StragglerDetector, TrainRunner
-from repro.train.loop import init_train_state, make_train_step
+from repro.train.loop import (
+    compile_run_schedule,
+    init_train_state,
+    make_train_step,
+)
 
 
 def build_run(args) -> RunConfig:
@@ -77,10 +85,22 @@ def main() -> None:
     print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"devices={len(jax.devices())} dropout={args.dropout}")
 
+    # the dropout contract: frozen mask lineage saved with every
+    # checkpoint, verified on every resume/recovery (checkpoint/contract)
+    sched = compile_run_schedule(cfg, run)
+    contract = contract_from_schedule(cfg, sched)
+
     state = init_train_state(jax.random.PRNGKey(args.seed), cfg)
     ckpt = Checkpointer(args.ckpt_dir)
     latest = ckpt.latest_step()
     if latest is not None:
+        saved = ckpt.load_contract(latest)
+        if saved is not None:
+            # ContractMismatchError propagates: resuming would replay
+            # different mask bits than the checkpointed trajectory
+            status = verify_resume(saved, contract, cfg=cfg,
+                                   sched=sched)
+            print(f"[train] dropout contract {status} for step {latest}")
         print(f"[train] resuming from step {latest}")
         state = ckpt.restore(latest, state)
 
@@ -115,12 +135,14 @@ def main() -> None:
 
     runner = TrainRunner(logging_step, state, batch_fn, ckpt,
                          checkpoint_every=args.ckpt_every,
-                         straggler=straggler)
+                         straggler=straggler, contract=contract,
+                         model_cfg=cfg, schedule=sched)
     report = runner.run(args.steps)
     wall = time.perf_counter() - t_start
     print(f"[train] done: steps={report.steps_completed} "
           f"restarts={report.restarts} "
-          f"stragglers={report.straggler_steps} wall={wall:.1f}s "
+          f"stragglers={report.straggler_steps} "
+          f"failed_saves={report.failed_saves} wall={wall:.1f}s "
           f"final_loss={report.final_metrics.get('loss', float('nan')):.4f}")
 
 

@@ -75,6 +75,23 @@ def _log_schedule(context: str, sched) -> None:
     log.info("%s:\n%s", context, sched.explain())
 
 
+def compile_run_schedule(cfg: ModelConfig, run: RunConfig,
+                         policy: Optional[ShardingPolicy] = None):
+    """The train step's compiled DropoutSchedule for one RunConfig —
+    factored out so launch/train.py (dropout-contract construction) and
+    the chaos harness compile the IDENTICAL artifact the step executes:
+    microbatching splits the leading batch dim, so the schedule is
+    compiled for the per-microbatch shape the forward actually sees."""
+    micro = run.train.microbatch
+    b_eff = run.shape.global_batch // micro if micro and micro > 1 \
+        else run.shape.global_batch
+    return compile_schedule(cfg, run.dropout, b_eff, run.shape.seq_len,
+                            policy=policy,
+                            attn_impl=run.sharding.attn_impl,
+                            moe_seq_dispatch=run.sharding
+                            .moe_seq_dispatch)
+
+
 def make_train_step(cfg: ModelConfig, run: RunConfig,
                     policy: Optional[ShardingPolicy] = None,
                     compute_dtype=jnp.float32) -> Callable:
@@ -87,16 +104,8 @@ def make_train_step(cfg: ModelConfig, run: RunConfig,
     remat = run.sharding.remat
     micro = run.train.microbatch
     # plan -> compile: all producer-site decisions freeze here, ahead of
-    # trace; forward() executes by schedule lookup. Microbatching splits
-    # the leading batch dim, so the schedule is compiled for the
-    # per-microbatch shape the forward actually sees.
-    b_eff = run.shape.global_batch // micro if micro and micro > 1 \
-        else run.shape.global_batch
-    sched = compile_schedule(cfg, run.dropout, b_eff, run.shape.seq_len,
-                             policy=policy,
-                             attn_impl=run.sharding.attn_impl,
-                             moe_seq_dispatch=run.sharding
-                             .moe_seq_dispatch)
+    # trace; forward() executes by schedule lookup
+    sched = compile_run_schedule(cfg, run, policy)
     _log_schedule(f"train_step[site={run.dropout.site}]", sched)
 
     def loss_fn(master, x, y, step):

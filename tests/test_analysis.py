@@ -83,6 +83,43 @@ def test_verify_flag_on_clean_schedule():
     assert sched.active
 
 
+@pytest.mark.parametrize("shard", lint.topology_shards(2))
+def test_topology2_cells_lint_clean(shard):
+    """Per-topology positive half: every (site x dtype) cell planned for
+    a 2-way data- or model-axis mesh — including the N-dim-sharded host
+    GEMM under the model axis — lints clean, and its sharded emissions
+    carry one counter window per shard."""
+    cfg = get_arch("llama2-7b")
+    topo = f"{shard.batch_shards}x{shard.head_shards}"
+    for site in DROPOUT_SITES:
+        for dtype in GEMM_DTYPES:
+            sched = compile_schedule(cfg, _plan(site, dtype), 8, 1024,
+                                     attn_impl="pallas", shard=shard)
+            rep = counters.analyze_schedule(
+                cfg, sched, cell=f"llama2-7b {site} {dtype} {topo}")
+            assert rep.ok, rep.render()
+            if sched.sharded:
+                ems = counters.schedule_emissions(cfg, sched)
+                assert any(len(e.windows) == 2 for e in ems), \
+                    (site, dtype, topo)
+
+
+def test_lint_cell_skips_indivisible_topology():
+    """A mesh the cell's (batch, heads) cannot tile returns None (the
+    sweep counts it as skipped) instead of a spurious finding."""
+    from repro.core.schedule import ShardInfo
+    shard = ShardInfo(batch_shards=3, batch_axes=("data",),
+                      policy_installed=True)
+    rep = lint.lint_cell("llama2-7b", "qkv", "f32", batch=8, seq=1024,
+                         shard=shard)
+    assert rep is None
+    # and a dividing topology yields a clean, topology-tagged report
+    rep2 = lint.lint_cell("llama2-7b", "qkv", "f32", batch=8, seq=1024,
+                          shard=lint.topology_shards(2)[1])
+    assert rep2 is not None and rep2.ok
+    assert "topo=1x2(model)" in rep2.cell
+
+
 # --------------------------------------------------------------- negative
 
 def _emissions(arch="yi-6b", site="auto"):

@@ -1,9 +1,19 @@
 """Crash-recovery property: a training run interrupted by injected
 failures and restored from checkpoints produces the SAME final state as an
-uninterrupted run (deterministic data + step-folded Philox dropout)."""
+uninterrupted run (deterministic data + step-folded Philox dropout).
+
+Plus the fault-tolerance edge cases: StragglerDetector warmup and
+flagged-step exclusion, Heartbeat staleness/corruption, the max_restarts
+re-raise, the failed-async-save fallback, latest_step's meta-file
+preference, and restore's dtype-drift refusal."""
+import json
+import os
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import Checkpointer
 from repro.config import (
@@ -17,7 +27,8 @@ from repro.config import (
     get_arch,
 )
 from repro.data import batch_for_step
-from repro.distributed.fault import TrainRunner
+from repro.distributed.fault import Heartbeat, StragglerDetector, \
+    TrainRunner
 from repro.train.loop import init_train_state, make_train_step
 
 
@@ -70,3 +81,183 @@ def test_recovery_matches_uninterrupted(tmp_path):
         lambda a, b: np.testing.assert_allclose(
             np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6),
         ref_master, runner.state["master"])
+
+
+# ----------------------------------------------------- toy train loop
+# A deterministic pure-arithmetic step so the control-logic tests don't
+# pay for model compiles: state is {"step", "w"}, w evolves as a pure
+# function of (w, step), loss = sum(w).
+
+def _toy():
+    def step_fn(state, x, y):
+        w = state["w"] * 1.0001 + x
+        return ({"step": state["step"] + 1, "w": w},
+                {"loss": jnp.sum(w)})
+
+    def batch_fn(step):
+        return jnp.float32(step) * 0.01, jnp.zeros(())
+
+    state = {"step": jnp.asarray(0, jnp.int32),
+             "w": jnp.arange(4, dtype=jnp.float32)}
+    return step_fn, batch_fn, state
+
+
+def _toy_run(n_steps):
+    step_fn, batch_fn, state = _toy()
+    for s in range(n_steps):
+        state, m = step_fn(state, *batch_fn(s))
+    return state
+
+
+# ------------------------------------------------- straggler detector
+
+def test_straggler_warmup_never_flags():
+    det = StragglerDetector(window=8, k=2.0, warmup=5)
+    # fewer than ``warmup`` observations in the window: no baseline yet,
+    # even a 1000x outlier is not flagged
+    for d in (0.01, 0.01, 50.0, 0.01, 0.01):
+        assert det.observe(d) is False
+    assert det.flagged == []
+
+
+def test_straggler_flagged_steps_excluded_from_baseline():
+    det = StragglerDetector(window=16, k=4.0, warmup=4)
+    for _ in range(8):
+        det.observe(0.10)
+    # repeated slowness: every slow step keeps being flagged because
+    # flagged durations never enter the window (baseline stays 0.10)
+    for _ in range(6):
+        assert det.observe(1.0) is True
+    assert len(det.flagged) == 6
+    assert max(det.times) == pytest.approx(0.10)
+    assert det.straggler_fraction == pytest.approx(6 / 14)
+    # a baseline-speed step afterwards is still normal
+    assert det.observe(0.10) is False
+
+
+def test_straggler_tolerates_jittery_baseline():
+    det = StragglerDetector(window=16, k=6.0, warmup=4)
+    for i in range(12):
+        det.observe(0.10 + 0.005 * (i % 3))    # MAD ~ 0.005
+    assert det.flagged == []
+    assert det.observe(0.12) is False          # within k*MAD
+    assert det.observe(0.50) is True
+
+
+# -------------------------------------------------------- heartbeat
+
+def test_heartbeat_liveness_and_staleness(tmp_path):
+    path = str(tmp_path / "hb")
+    # missing file -> dead
+    assert Heartbeat.is_alive(path, timeout_s=10.0) is False
+    hb = Heartbeat(path, interval_s=0.05)
+    hb.start()
+    try:
+        deadline = time.time() + 2.0
+        while not os.path.exists(path) and time.time() < deadline:
+            time.sleep(0.01)
+        assert Heartbeat.is_alive(path, timeout_s=5.0) is True
+    finally:
+        hb.stop()
+    # stopped: the last beat goes stale against a tiny timeout
+    with open(path, "w") as f:
+        f.write(str(time.time() - 60.0))
+    assert Heartbeat.is_alive(path, timeout_s=1.0) is False
+    # corrupt contents -> dead, not an exception
+    with open(path, "w") as f:
+        f.write("not-a-timestamp")
+    assert Heartbeat.is_alive(path, timeout_s=1e9) is False
+
+
+# ------------------------------------------------------ train runner
+
+def test_max_restarts_reraises_original_error(tmp_path):
+    step_fn, batch_fn, state = _toy()
+
+    def always_crash(st, x, y):
+        raise RuntimeError("persistent node failure")
+
+    runner = TrainRunner(always_crash, state, batch_fn,
+                         Checkpointer(str(tmp_path), async_save=False),
+                         checkpoint_every=4, max_restarts=2)
+    with pytest.raises(RuntimeError, match="persistent node failure"):
+        runner.run(8)
+    # budget of 2 restarts consumed, the third crash re-raised
+    assert runner.restarts == 3
+
+
+def test_failed_async_save_falls_back(tmp_path):
+    """A killed checkpoint write is charged to failed_saves, not the
+    restart budget; recovery falls back to the last checkpoint that
+    actually landed and still reproduces the uninterrupted run."""
+    from repro.distributed.chaos import ChaosCheckpointer
+    step_fn, batch_fn, state = _toy()
+    crashes = {5}
+
+    def hook(step):
+        if step in crashes:
+            crashes.discard(step)
+            raise RuntimeError(f"injected node failure at {step}")
+
+    ckpt = ChaosCheckpointer(str(tmp_path), kill_steps={4},
+                             async_save=True)
+    runner = TrainRunner(step_fn, state, batch_fn, ckpt,
+                         checkpoint_every=2, max_restarts=3,
+                         failure_hook=hook)
+    report = runner.run(8)
+    assert ckpt.killed_writes == [4]
+    assert report.failed_saves == 1
+    assert report.restarts == 1          # only the training crash
+    assert report.steps_completed == 8
+    # recovery restored ckpt_2 (4 never landed) and replayed 2..5
+    np.testing.assert_array_equal(
+        np.asarray(runner.state["w"]), np.asarray(_toy_run(8)["w"]))
+
+
+# ----------------------------------------------------- checkpointer
+
+def test_latest_step_prefers_meta_with_fallback(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), async_save=False)
+    assert ckpt.latest_step() is None
+    state = {"step": jnp.asarray(0, jnp.int32), "w": jnp.ones((2,))}
+    ckpt.save(2, state)
+    ckpt.save(4, state)
+    meta = tmp_path / "latest"
+    assert json.loads(meta.read_text())["step"] == 4
+    assert ckpt.latest_step() == 4
+    # the meta file is the atomically-published pointer: preferred over
+    # the directory scan when it names an existing checkpoint
+    meta.write_text(json.dumps({"step": 2}))
+    assert ckpt.latest_step() == 2
+    # stale meta (checkpoint gone) falls back to the scan
+    meta.write_text(json.dumps({"step": 99}))
+    assert ckpt.latest_step() == 4
+    # corrupt meta falls back too
+    meta.write_text("{not json")
+    assert ckpt.latest_step() == 4
+    meta.write_text(json.dumps({"wrong_key": 1}))
+    assert ckpt.latest_step() == 4
+
+
+def test_restore_refuses_dtype_drift(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), async_save=False)
+    state = {"step": jnp.asarray(4, jnp.int32),
+             "w": jnp.ones((2, 2), jnp.float32)}
+    ckpt.save(4, state)
+    bad = {"step": jnp.asarray(0, jnp.int32),
+           "w": jnp.ones((2, 2), jnp.bfloat16)}
+    # host path (no shardings)
+    with pytest.raises(ValueError, match="dtype drift.*'w'"):
+        ckpt.restore(4, bad)
+    # sharded path validates the same way, before any device_put
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    shardings = jax.tree.map(lambda _: sh, bad)
+    with pytest.raises(ValueError, match="dtype drift.*'w'"):
+        ckpt.restore(4, bad, shardings=shardings)
+    # matching template round-trips on both paths
+    good = ckpt.restore(4, state)
+    np.testing.assert_array_equal(np.asarray(good["w"]),
+                                  np.asarray(state["w"]))
+    good2 = ckpt.restore(4, state,
+                         shardings=jax.tree.map(lambda _: sh, state))
+    assert good2["w"].dtype == jnp.float32
