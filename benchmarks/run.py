@@ -18,6 +18,13 @@ seconds and asserts the BENCH JSON record schema — the CI guard against
 a broken site/how wiring or a silent schema drift:
 
     PYTHONPATH=src python -m benchmarks.run --smoke
+
+``--serve`` runs the decode-engine trace benchmark (continuous
+batching + paged KV + speculative decode; see benchmarks/serve_bench.py)
+instead: ``--serve --smoke`` is the CI gate asserting the
+bench_serve/v1 schema, the zero-RNG verify proof, and spec-vs-sequential
+token equality; ``--serve --json BENCH_serve.json`` records the full
+trace.
 """
 from __future__ import annotations
 
@@ -55,8 +62,9 @@ def bench_roofline_table():
 
 
 def all_benches():
-    from benchmarks import kernel_bench, paper_figures
+    from benchmarks import kernel_bench, paper_figures, serve_bench
     return [
+        ("serve", serve_bench.bench_serve),
         ("headline", paper_figures.bench_headline),
         ("fig6", paper_figures.bench_fig6_sweep),
         ("fig7", paper_figures.bench_fig7_kernel_scaling),
@@ -101,6 +109,33 @@ def write_block_json(path: str) -> None:
 
 BENCH_RECORD_KEYS = ("group", "site", "dtype", "how", "us_per_call",
                      "shape")
+
+
+def run_serve(smoke: bool, json_path: str | None) -> int:
+    """--serve: the decode-engine trace benchmark (tokens/s, latency
+    percentiles, cache hit rates) plus the speculative-decode proof
+    (zero verify-phase Philox, masks bitwise equal to sequential).
+    --smoke shrinks the trace and asserts the bench_serve/v1 schema;
+    --json writes BENCH_serve.json. Returns a process exit code."""
+    from benchmarks import serve_bench
+    payload = serve_bench.run_serve_bench(smoke=smoke)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True, default=str)
+            f.write("\n")
+        print(f"wrote {json_path} (schema {payload['schema']})")
+    print("name,us_per_call,derived")
+    for name, us, derived in serve_bench.serve_rows(payload):
+        print(f"{name},{us:.1f},{derived}")
+    violations = serve_bench.assert_payload_schema(payload)
+    if violations:
+        for v in violations:
+            print(f"SCHEMA VIOLATION: {v}")
+        return 1
+    if smoke:
+        print(f"serve smoke OK: schema {payload['schema']}, "
+              f"verify_philox_execs=0, masks bitwise equal")
+    return 0
 
 
 def run_smoke() -> int:
@@ -150,10 +185,16 @@ def main() -> None:
                     help="skip all benches; run the static mask-safety "
                          "lint sweep (counter-space only) and exit with "
                          "its status — no kernel executes")
+    ap.add_argument("--serve", action="store_true",
+                    help="decode-engine trace bench + spec-decode "
+                         "zero-RNG proof; combine with --smoke for the "
+                         "CI schema gate or --json BENCH_serve.json")
     args = ap.parse_args()
     if args.lint_only:
         from repro.analysis import lint
         raise SystemExit(lint.main(["--jaxpr", "off", "-q"]))
+    if args.serve:
+        raise SystemExit(run_serve(args.smoke, args.json))
     if args.smoke:
         raise SystemExit(run_smoke())
     if args.json:

@@ -1,0 +1,224 @@
+"""Serving benchmark: a synthetic many-user trace through the decode
+engine (continuous batching + paged KV + per-request mask schedules),
+plus the speculative-decode equivalence proof.
+
+Two measurements:
+
+* **throughput/latency** — Poisson arrivals with mixed prompt/output
+  lengths run through ``ServeEngine``; tokens/s, first-token and
+  completion latency percentiles, and every cache's hit/miss/eviction
+  counters land in the BENCH record.
+
+* **spec-decode proof** — the same request set decoded sequentially and
+  speculatively (draft k + one verify replay), sharing one
+  ``MaskReplayRecorder``: the record asserts the verify passes executed
+  ZERO Philox, every dropout row digest matched bitwise across the two
+  runs, and the emitted tokens are identical.
+
+    PYTHONPATH=src python -m benchmarks.run --serve
+    PYTHONPATH=src python -m benchmarks.run --serve --smoke
+    PYTHONPATH=src python -m benchmarks.run --serve --json BENCH_serve.json
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+SERVE_SCHEMA = "bench_serve/v1"
+
+# keys every --serve --smoke run asserts on the emitted payload
+SERVE_PAYLOAD_KEYS = ("schema", "backend", "arch", "trace",
+                      "throughput", "spec")
+SERVE_THROUGHPUT_KEYS = ("tokens_per_s", "total_new_tokens", "wall_s",
+                         "latency_first_token_s",
+                         "latency_completion_s", "mask_cache",
+                         "schedule_cache", "step_cache", "scheduler",
+                         "paged_kv")
+SERVE_SPEC_KEYS = ("spec_k", "verify_philox_execs",
+                   "verify_mask_fetches", "acceptance_rate",
+                   "masks_bitwise_equal", "tokens_equal",
+                   "digest_confirms")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Synthetic many-user trace knobs."""
+    n_requests: int = 16
+    arrival_rate_per_s: float = 50.0     # Poisson arrival rate
+    prompt_lens: Tuple[int, ...] = (8, 12, 24, 40)
+    max_news: Tuple[int, ...] = (4, 8, 16)
+    seed: int = 0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+SMOKE_TRACE = TraceSpec(n_requests=6, arrival_rate_per_s=100.0,
+                        prompt_lens=(8, 12), max_news=(4, 6))
+
+
+def build_requests(engine, trace: TraceSpec, vocab: int):
+    """Poisson arrivals (exponential inter-arrival gaps), mixed prompt
+    and output lengths — all drawn from one seeded generator so every
+    engine configuration replays the identical request set."""
+    rng = np.random.default_rng(trace.seed)
+    gaps = rng.exponential(1.0 / trace.arrival_rate_per_s,
+                           trace.n_requests)
+    arrivals = np.cumsum(gaps)
+    reqs = []
+    for t in arrivals:
+        plen = int(rng.choice(trace.prompt_lens))
+        mnew = int(rng.choice(trace.max_news))
+        prompt = rng.integers(0, vocab, plen).tolist()
+        reqs.append(engine.make_request(prompt, mnew,
+                                        arrival_time=float(t)))
+    return reqs
+
+
+def _engine(cfg, trace: TraceSpec, spec_k: int, recorder,
+            max_slots: int = 4):
+    from repro.serve import ServeConfig, ServeEngine
+    cap = max(trace.prompt_lens) + max(trace.max_news)
+    page_size = 16
+    quantum = 32 * page_size // np.gcd(32, page_size)
+    max_len = int(-(-cap // quantum) * quantum)
+    pages_per = -(-max_len // page_size)
+    serve = ServeConfig(
+        max_slots=max_slots, page_size=page_size,
+        num_pages=max_slots * pages_per + max_slots,
+        max_model_len=max_len, prompt_bucket=8, spec_k=spec_k)
+    return ServeEngine(cfg, serve=serve, init_seed=trace.seed,
+                       mask_recorder=recorder)
+
+
+def run_serve_bench(smoke: bool = False,
+                    trace: Optional[TraceSpec] = None) -> Dict[str, Any]:
+    """Run the trace + the spec-decode proof; return the BENCH payload."""
+    import jax
+
+    from repro.config import get_arch
+    from repro.serve import MaskReplayRecorder
+
+    cfg = get_arch("yi-6b", reduced=True)
+    trace = trace or (SMOKE_TRACE if smoke else TraceSpec())
+    spec_k = 4
+
+    # ---- throughput/latency: the many-user continuous-batching trace
+    thr_engine = _engine(cfg, trace, spec_k=0, recorder=None)
+    thr_report = thr_engine.run(
+        build_requests(thr_engine, trace, cfg.vocab_size))
+
+    # ---- spec-decode proof: sequential vs speculative, one recorder.
+    # The recorder raises MaskReplayMismatch on the first diverging
+    # dropout-row digest, so completing both runs IS the bitwise proof.
+    recorder = MaskReplayRecorder()
+    seq_engine = _engine(cfg, trace, spec_k=0, recorder=recorder)
+    seq_reqs = build_requests(seq_engine, trace, cfg.vocab_size)
+    seq_engine.run(seq_reqs)
+    spec_engine = _engine(cfg, trace, spec_k=spec_k, recorder=recorder)
+    spec_reqs = build_requests(spec_engine, trace, cfg.vocab_size)
+    spec_report = spec_engine.run(spec_reqs)
+    tokens_equal = all(a.output == b.output
+                       for a, b in zip(seq_reqs, spec_reqs))
+
+    payload: Dict[str, Any] = {
+        "schema": SERVE_SCHEMA,
+        "backend": jax.devices()[0].platform,
+        "jax": jax.__version__,
+        "arch": cfg.name,
+        "trace": trace.to_dict(),
+        "throughput": thr_report.to_dict(),
+        "spec": {
+            "spec_k": spec_k,
+            "rounds": spec_report.spec["rounds"],
+            "drafted": spec_report.spec["drafted"],
+            "accepted": spec_report.spec["accepted"],
+            "acceptance_rate": spec_report.spec.get(
+                "acceptance_rate", 0.0),
+            "verify_philox_execs":
+                spec_report.spec["verify_philox_execs"],
+            "verify_mask_fetches":
+                spec_report.spec["verify_mask_fetches"],
+            "masks_bitwise_equal": True,     # recorder did not raise
+            "digest_confirms": recorder.confirms,
+            "digests": len(recorder.digests),
+            "tokens_equal": tokens_equal,
+            "spec_report": spec_report.to_dict(),
+        },
+    }
+    return payload
+
+
+def assert_payload_schema(payload: Dict[str, Any]) -> List[str]:
+    """Schema + acceptance assertions on a bench_serve payload; returns
+    a list of violations (empty = OK)."""
+    bad = []
+    for k in SERVE_PAYLOAD_KEYS:
+        if k not in payload:
+            bad.append(f"missing payload key {k!r}")
+    if payload.get("schema") != SERVE_SCHEMA:
+        bad.append(f"schema != {SERVE_SCHEMA}: {payload.get('schema')!r}")
+    thr = payload.get("throughput", {})
+    for k in SERVE_THROUGHPUT_KEYS:
+        if k not in thr:
+            bad.append(f"missing throughput key {k!r}")
+    for lat in ("latency_first_token_s", "latency_completion_s"):
+        for pk in ("p50", "p99"):
+            if pk not in thr.get(lat, {}):
+                bad.append(f"missing {lat}.{pk}")
+    spec = payload.get("spec", {})
+    for k in SERVE_SPEC_KEYS:
+        if k not in spec:
+            bad.append(f"missing spec key {k!r}")
+    if spec.get("verify_philox_execs", -1) != 0:
+        bad.append("spec verify executed Philox "
+                   f"({spec.get('verify_philox_execs')} times) — the "
+                   "zero-RNG replay guarantee is broken")
+    if not spec.get("masks_bitwise_equal"):
+        bad.append("spec verify masks not bitwise equal to sequential")
+    if not spec.get("tokens_equal"):
+        bad.append("speculative tokens diverged from sequential decode")
+    if spec.get("verify_mask_fetches", 0) <= 0:
+        bad.append("verify phase fetched no masks (proof vacuous)")
+    return bad
+
+
+def serve_rows(payload: Dict[str, Any]):
+    """CSV rows for the default harness output."""
+    thr = payload["throughput"]
+    spec = payload["spec"]
+    return [
+        (f"serve/trace_{payload['arch']}", 0.0,
+         f"tok/s={thr['tokens_per_s']:.0f} "
+         f"new_tokens={thr['total_new_tokens']} "
+         f"first_tok_p50={thr['latency_first_token_s']['p50']*1e3:.0f}ms "
+         f"p99={thr['latency_first_token_s']['p99']*1e3:.0f}ms "
+         f"completion_p50={thr['latency_completion_s']['p50']*1e3:.0f}ms"),
+        ("serve/caches", 0.0,
+         f"mask_hits={thr['mask_cache']['hits']} "
+         f"philox_execs={thr['mask_cache']['misses']} "
+         f"evictions={thr['mask_cache']['evictions']} "
+         f"sched={thr['schedule_cache']['hits']}h/"
+         f"{thr['schedule_cache']['misses']}m "
+         f"step={thr['step_cache']['hits']}h/"
+         f"{thr['step_cache']['misses']}m"),
+        ("serve/paged_kv", 0.0,
+         f"peak_pages={thr['paged_kv']['peak_pages_in_use']}/"
+         f"{thr['paged_kv']['num_pages']} "
+         f"alloc_failures={thr['paged_kv']['alloc_failures']} "
+         f"peak_running={thr['scheduler']['peak_running']}"),
+        ("serve/spec_decode", 0.0,
+         f"k={spec['spec_k']} rounds={spec['rounds']} "
+         f"acceptance={spec['acceptance_rate']:.2f} "
+         f"verify_philox={spec['verify_philox_execs']} "
+         f"masks_bitwise_equal={spec['masks_bitwise_equal']} "
+         f"tokens_equal={spec['tokens_equal']} "
+         f"digest_confirms={spec['digest_confirms']}"),
+    ]
+
+
+def bench_serve():
+    """Harness entry (``--only serve``)."""
+    return serve_rows(run_serve_bench(smoke=True))

@@ -16,7 +16,14 @@ else
     # chaos lane: crash/recovery bitwise-replay (the slow subprocess
     # re-mesh tests run under --full)
     python -m pytest -q -m "chaos and not slow"
+    # serve lane: decode-engine unit tests (paged KV, continuous
+    # batching, spec-decode bitwise replay)
+    python -m pytest -q -m serve
 fi
+
+# serving bench smoke: end-to-end trace through the decode engine +
+# BENCH JSON schema assertion + the zero-RNG spec-verify proof
+python -m benchmarks.run --serve --smoke
 
 # per-topology lint: every cell re-proven on 2-way data- and model-axis
 # layouts (MS-C4 shard-window tiling; N-dim-sharded host GEMM)

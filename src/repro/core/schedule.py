@@ -671,6 +671,61 @@ def inline_assignment(model_cfg: ModelConfig, plan: DropoutPlan,
     return asg
 
 
+@dataclasses.dataclass(frozen=True)
+class ScheduleBucket:
+    """Hashable shape-bucket key for compiled-schedule caches — the
+    ``MHAParams``/``ParamsHash`` graph-cache idiom: every knob the
+    *structure* of a compiled schedule depends on, packed into one
+    frozen dataclass that keys a dict of compiled artifacts.
+
+    Deliberately excludes the plan ``seed``: host-assignment planning
+    never reads it (capability is pure shape/knob arithmetic), so all
+    requests sharing a shape bucket share one compiled template and
+    per-request identity is restored by ``reseed_schedule``. The serve
+    engine keys its schedule cache and its jitted-step cache on this."""
+    model: str
+    batch: int
+    seq: int
+    attn_impl: str
+    mode: str
+    p: float
+    site: str
+    gemm_dtype: str
+    philox_rounds: int
+    philox_bits: int
+    shard: ShardInfo = ShardInfo()
+    moe_seq_dispatch: bool = False
+
+    @staticmethod
+    def of(cfg: ModelConfig, plan_cfg: DropoutPlanConfig, batch: int,
+           seq: int, *, attn_impl: str = "xla",
+           shard: Optional[ShardInfo] = None,
+           moe_seq_dispatch: bool = False) -> "ScheduleBucket":
+        return ScheduleBucket(
+            model=cfg.name, batch=batch, seq=seq, attn_impl=attn_impl,
+            mode=plan_cfg.mode, p=plan_cfg.p, site=plan_cfg.site,
+            gemm_dtype=plan_cfg.gemm_dtype,
+            philox_rounds=plan_cfg.philox_rounds,
+            philox_bits=plan_cfg.philox_bits,
+            shard=shard or ShardInfo(),
+            moe_seq_dispatch=moe_seq_dispatch)
+
+
+def reseed_schedule(sched: DropoutSchedule, seed: int) -> DropoutSchedule:
+    """The same compiled schedule under a different base seed.
+
+    Assignments are seed-independent (every capability judgment in
+    ``_compile`` is shape/knob arithmetic — the seed only enters the
+    Philox key at execution), so swapping the seed on the frozen
+    artifact is exact, not an approximation: ``mask_key`` changes,
+    producers don't. This is what lets a serving bucket compile ONE
+    template and stamp out per-request schedules for free."""
+    if seed == sched.plan.seed:
+        return sched
+    return dataclasses.replace(
+        sched, plan=dataclasses.replace(sched.plan, seed=seed))
+
+
 def clear_cache() -> None:
     """Drop compiled schedules (tests exercising determinism)."""
     _compile.cache_clear()

@@ -1,76 +1,31 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with a
-continuous batched loop (greedy sampling).
+"""Serving CLI — a thin front over the decode engine in ``repro.serve``
+(continuous batching, paged KV, per-request dropout schedules,
+optional draft/verify speculative decoding):
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
-        --batch 4 --prompt-len 64 --max-new 32
+        --requests 8 --prompt-len 64 --max-new 32 --spec-k 4
 
-``--verify-replays N`` additionally demonstrates the serving-side
-packed-mask reuse path: speculative-decoding verification re-scores the
-same positions the draft already sampled, so its dropout masks are
-replays of already-generated (seed, salt, layer, step) identities — the
-``PackedMaskCache`` below serves them without running any RNG.
+The engine owns the request lifecycle; this module only parses flags,
+builds the synthetic request set, and prints the ``ServeReport``.
+
+``PackedMaskCache`` (now ``repro.serve.mask_cache``) is re-exported and
+``verify_replay_demo`` kept here for compatibility: both predate the
+engine and demonstrate the core serving claim in isolation —
+speculative-verify mask fetches are pure replays of identities the
+draft pass already generated, so the cache serves them with zero RNG.
 """
 from __future__ import annotations
 
 import argparse
-import collections
-import time
-from typing import Dict, Tuple
+import json
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.config import get_arch
-from repro.core.schedule import DropoutSchedule, compile_schedule
-from repro.models import Runtime, model_init, prefill, decode_step
-
-
-class PackedMaskCache:
-    """Packed-dropout-mask reuse across speculative-decoding verification
-    replays.
-
-    The compiled ``DropoutSchedule`` owns mask identity: two requests
-    agreeing on ``schedule.mask_key(layer, step)`` = (seed, salt, layer,
-    step) consume bit-identical packed masks, whatever site/kernel/shard
-    produced them. Verification steps replay exactly the keys the draft
-    pass generated, so keying this LRU on the schedule's identity makes
-    every verification mask fetch a cache hit — RNG skipped entirely
-    (the ROADMAP serving-side reuse item)."""
-
-    def __init__(self, capacity: int = 256):
-        self.capacity = capacity
-        self.hits = 0
-        self.misses = 0
-        self._entries: "collections.OrderedDict[Tuple[int, int, int, int], jnp.ndarray]" = (
-            collections.OrderedDict())
-
-    def get_or_create(self, schedule: DropoutSchedule, layer: int,
-                      step: int,
-                      mask_shape: Tuple[int, int, int, int]) -> jnp.ndarray:
-        """The packed mask for (layer, step) under ``schedule``'s plan —
-        generated on first use, replayed from the cache afterwards."""
-        key = schedule.mask_key(layer, step)
-        hit = self._entries.get(key)
-        if hit is not None:
-            self._entries.move_to_end(key)
-            self.hits += 1
-            return hit
-        self.misses += 1
-        b, h, sq, sk = mask_shape
-        # the producer's standalone path owns the kernel-vs-XLA choice
-        # (capability predicate, philox_bits) — same bits either way
-        from repro.core import producer
-        from repro.core.overlap import DropoutPlan
-        mask = producer.standalone_packed_mask(
-            DropoutPlan(schedule.plan), b, h, sq, sk, layer, step)
-        self._entries[key] = mask
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
-        return mask
-
-    def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._entries)}
+from repro.core.schedule import DropoutSchedule
+# re-export: tests and older callers import the cache from here
+from repro.serve.mask_cache import PackedMaskCache  # noqa: F401
 
 
 def verify_replay_demo(cfg, sched: DropoutSchedule, batch: int,
@@ -93,90 +48,80 @@ def verify_replay_demo(cfg, sched: DropoutSchedule, batch: int,
 
 
 def main() -> None:
+    from repro.serve import ServeConfig, ServeEngine
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--verify-replays", type=int, default=0,
-                    help="demo the packed-mask reuse cache with N "
-                         "speculative-verification replays")
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="0 = sized for max_slots full-length requests")
+    ap.add_argument("--max-model-len", type=int, default=0,
+                    help="0 = round up prompt+max_new")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help=">1 enables draft/verify speculative decoding")
+    ap.add_argument("--no-mask", action="store_true",
+                    help="disable decode-time dropout rows")
+    ap.add_argument("--json", action="store_true",
+                    help="print the ServeReport as JSON")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, reduced=args.reduced)
-    rt = Runtime(plan=None, compute_dtype=jnp.float32,
-                 chunk_q=min(256, args.prompt_len))
-    key = jax.random.PRNGKey(args.seed)
-    params = model_init(key, cfg)
-    print(f"[serve] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
-          f"batch={args.batch} prompt={args.prompt_len} "
-          f"max_new={args.max_new}")
+    cap = args.prompt_len + args.max_new
+    # max_model_len must divide into pages AND packed mask rows
+    import math
+    quantum = (32 * args.page_size
+               // math.gcd(32, args.page_size))
+    max_len = args.max_model_len or cap
+    max_len = -(-max_len // quantum) * quantum
+    num_pages = args.num_pages or (
+        args.max_slots * -(-max_len // args.page_size) + args.max_slots)
+    serve = ServeConfig(
+        max_slots=args.max_slots, page_size=args.page_size,
+        num_pages=num_pages, max_model_len=max_len,
+        mask_decode=not args.no_mask, spec_k=args.spec_k)
+    engine = ServeEngine(cfg, serve=serve, init_seed=args.seed)
+    print(f"[serve] arch={cfg.name} slots={serve.max_slots} "
+          f"pages={serve.num_pages}x{serve.page_size} "
+          f"max_len={serve.max_model_len} spec_k={serve.spec_k} "
+          f"masked={engine.masked}")
 
-    if cfg.frontend == "token":
-        prompts = jax.random.randint(
-            key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    else:
-        prompts = jax.random.normal(
-            key, (args.batch, args.prompt_len, cfg.d_model), jnp.float32)
-
-    capacity = args.prompt_len + args.max_new
-    prefill_fn = jax.jit(
-        lambda p, x: prefill(params, cfg, rt, x, capacity=capacity))
-    t0 = time.perf_counter()
-    logits, caches = prefill_fn(params, prompts)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-    print(f"[serve] prefill: {t_prefill*1e3:.1f} ms "
-          f"({args.batch * args.prompt_len / t_prefill:,.0f} tok/s)")
-
-    decode_fn = jax.jit(
-        lambda p, x, c: decode_step(p, cfg, rt, x, c))
-
-    def sample(lg, k):
-        if args.temperature <= 0.0:
-            return jnp.argmax(lg[:, -1, :], axis=-1)
-        return jax.random.categorical(k, lg[:, -1, :] / args.temperature)
-
-    toks = sample(logits, key)
-    generated = [toks]
-    t0 = time.perf_counter()
-    for i in range(args.max_new - 1):
-        key, sub = jax.random.split(key)
-        if cfg.frontend == "token":
-            inp = toks[:, None]
-        else:
-            # embed-stub archs: feed the frontend embedding of the token
-            # id through a fixed projection (stub)
-            inp = jax.random.normal(sub, (args.batch, 1, cfg.d_model),
-                                    jnp.float32) * 0.02
-        logits, caches = decode_fn(params, inp, caches)
-        toks = sample(logits, sub)
-        generated.append(toks)
-    jax.block_until_ready(toks)
-    t_dec = time.perf_counter() - t0
-    n_dec = max(args.max_new - 1, 1)
-    print(f"[serve] decode: {t_dec/n_dec*1e3:.2f} ms/token "
-          f"({args.batch * n_dec / t_dec:,.0f} tok/s aggregate)")
-    out = jnp.stack(generated, axis=1)
-    print(f"[serve] sample tokens (seq 0): {out[0][:16].tolist()}")
-
-    if args.verify_replays and cfg.attn_dropout > 0.0:
-        from repro.config import DropoutPlanConfig
-        sched = compile_schedule(
-            cfg, DropoutPlanConfig(mode="overlap", p=cfg.attn_dropout,
-                                   seed=args.seed),
-            args.batch, args.prompt_len)
-        cache = verify_replay_demo(cfg, sched, args.batch,
-                                   args.prompt_len,
-                                   steps=range(4),
-                                   replays=args.verify_replays)
-        st = cache.stats()
-        total = st["hits"] + st["misses"]
-        print(f"[serve] mask-reuse cache: {st['hits']}/{total} fetches "
-              f"served without RNG ({st['entries']} masks resident)")
+    rng = np.random.default_rng(args.seed)
+    requests = [
+        engine.make_request(
+            prompt=rng.integers(0, cfg.vocab_size,
+                                args.prompt_len).tolist(),
+            max_new_tokens=args.max_new)
+        for _ in range(args.requests)
+    ]
+    report = engine.run(requests)
+    if args.json:
+        print(json.dumps(report.to_dict(), indent=2, default=str))
+        return
+    d = report.to_dict()
+    print(f"[serve] {d['n_requests']} requests, "
+          f"{d['total_new_tokens']} new tokens in {d['wall_s']:.2f}s "
+          f"({d['tokens_per_s']:,.0f} tok/s)")
+    print(f"[serve] first-token p50={d['latency_first_token_s']['p50']*1e3:.0f}ms "
+          f"p99={d['latency_first_token_s']['p99']*1e3:.0f}ms; "
+          f"completion p50={d['latency_completion_s']['p50']*1e3:.0f}ms")
+    mc = d["mask_cache"]
+    print(f"[serve] mask cache: {mc['hits']} hits / {mc['misses']} "
+          f"Philox execs / {mc['evictions']} evictions")
+    print(f"[serve] schedule cache: {d['schedule_cache']}  "
+          f"step cache: {d['step_cache']}")
+    if d["spec"]["rounds"]:
+        sp = d["spec"]
+        print(f"[serve] spec: {sp['rounds']} rounds, "
+              f"acceptance={sp.get('acceptance_rate', 0.0):.2f}, "
+              f"verify Philox execs={sp['verify_philox_execs']} "
+              f"(target 0), verify mask fetches="
+              f"{sp['verify_mask_fetches']}")
 
 
 if __name__ == "__main__":

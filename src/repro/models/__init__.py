@@ -5,8 +5,12 @@ from repro.models.transformer import (
     build_stacks,
     cache_init,
     decode_step,
+    decode_step_paged,
     forward,
     model_init,
+    paged_kv_write,
+    paged_pools_init,
+    paged_supported_reason,
     prefill,
 )
 
@@ -16,7 +20,11 @@ __all__ = [
     "build_stacks",
     "cache_init",
     "decode_step",
+    "decode_step_paged",
     "forward",
     "model_init",
+    "paged_kv_write",
+    "paged_pools_init",
+    "paged_supported_reason",
     "prefill",
 ]

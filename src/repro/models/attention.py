@@ -360,6 +360,70 @@ def attn_decode(p, x1, cache, cfg: ModelConfig, *, kind: AttentionKind
     return y, update
 
 
+def attn_decode_paged(p, x, cfg: ModelConfig, pool_k, pool_v, phys_idx,
+                      positions, *, keep=None, p_drop: float = 0.0
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Multi-token decode against a PAGED KV pool (the serve engine's
+    attention): keys/values are gathered through the request page table
+    instead of read from a contiguous per-request cache.
+
+    x (B, G, D) — G query tokens per request slot (G=1 plain decode,
+        G=k speculative verify; one code path, so verify IS decode).
+    pool_k/pool_v (KV, S_phys, hd) — the physical page pool, shared by
+        every request. ``phys_idx`` (B, CAP) int32 maps each slot's
+        logical position i to its physical pool slot
+        (page_table[i // page_size] * page_size + i % page_size),
+        resolved host-side once at admission.
+    positions (B, G) — absolute logical positions of the G tokens.
+    keep (B, H, G, CAP) bool — optional decode-time dropout keep rows,
+        sliced from the request's cached packed mask plane (row q of the
+        training-identical (q, k) plane); applied post-softmax exactly
+        like ``core.attention._chunk_attend``.
+
+    Validity is ``k_pos <= q_pos``: every logical position at or below a
+    query is either already written to its page (context/draft tokens)
+    or one of the G fresh tokens scattered in below — so one causal rule
+    covers plain decode, draft steps, and the chunked verify pass.
+    Returns (y (B, G, D), k_new, v_new (B, KV, G, hd)); the caller
+    writes the fresh columns into the pool outside the layer scan."""
+    from repro.core.attention import _NEG
+    b, g, _ = x.shape
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    kv, hd = k_new.shape[1], k_new.shape[3]
+    cap = phys_idx.shape[1]
+    # gather the logical view through the page table: (B, KV, CAP, hd)
+    k_ctx = jnp.take(pool_k, phys_idx, axis=1).transpose(1, 0, 2, 3)
+    v_ctx = jnp.take(pool_v, phys_idx, axis=1).transpose(1, 0, 2, 3)
+    # scatter the G fresh tokens at their logical positions (their pool
+    # pages are written after the step, outside the scan)
+    bi = jnp.arange(b)[:, None]
+    pos_c = jnp.clip(positions, 0, cap - 1)
+    k_all = k_ctx.at[bi, :, pos_c, :].set(
+        k_new.transpose(0, 2, 1, 3).astype(k_ctx.dtype))
+    v_all = v_ctx.at[bi, :, pos_c, :].set(
+        v_new.transpose(0, 2, 1, 3).astype(v_ctx.dtype))
+    grp = cfg.n_heads // kv
+    if grp > 1:
+        k_all = jnp.repeat(k_all, grp, axis=1)
+        v_all = jnp.repeat(v_all, grp, axis=1)
+    scale = 1.0 / (hd ** 0.5)
+    scores = jnp.einsum("bhgd,bhkd->bhgk", q, k_all.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    k_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, cap), 3)
+    valid = k_ids <= positions[:, None, :, None]
+    scores = jnp.where(valid, scores, _NEG)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    pr = jnp.exp(scores - m)
+    pr = jnp.where(valid, pr, 0.0)
+    pr = pr / jnp.sum(pr, axis=-1, keepdims=True)
+    if keep is not None:
+        pr = jnp.where(keep, pr, 0.0) / (1.0 - p_drop)
+    out = jnp.einsum("bhgk,bhkd->bhgd", pr.astype(v_all.dtype), v_all)
+    y = out.transpose(0, 2, 1, 3).reshape(b, g, -1) @ p["w_o"].astype(
+        x.dtype)
+    return y, k_new, v_new
+
+
 def _decode_scores_partial(qg, k_chunk, v_chunk, slot_offset, n_slots,
                            pos, size, is_local, scale,
                            k_scale=None, v_scale=None):

@@ -23,6 +23,7 @@ from repro.models.attention import (
     attn_apply,
     attn_cache_init,
     attn_decode,
+    attn_decode_paged,
     attn_init,
     attn_prefill,
 )
@@ -554,8 +555,15 @@ def _apply_cache_updates(spec: StackSpec, stack_cache, updates, cfg,
 
 
 def prefill(params, cfg: ModelConfig, rt: Runtime, inputs,
-            capacity: int = 0) -> Tuple[jnp.ndarray, List[Any]]:
-    """Returns (last-position logits (B,1,V), caches)."""
+            capacity: int = 0, last_pos=None
+            ) -> Tuple[jnp.ndarray, List[Any]]:
+    """Returns (last-position logits (B,1,V), caches).
+
+    ``last_pos`` (traced scalar, optional) selects which position's
+    logits to return instead of the final one — the serve engine
+    right-pads prompts to a shape bucket so one prefill trace covers
+    every prompt length in the bucket, and the real last prompt token
+    sits at ``plen - 1``, not at the padded end."""
     x = embed_inputs(params, cfg, inputs, rt)
     caches = []
     for spec, stack_params in zip(build_stacks(cfg), params["stacks"]):
@@ -579,7 +587,12 @@ def prefill(params, cfg: ModelConfig, rt: Runtime, inputs,
             body, x, (stack_params, jnp.arange(spec.count)))
         caches.append(stack_cache)
     x = norm_apply(params["final_norm"], x, cfg)
-    logits = unembed(params, cfg, x[:, -1:, :])
+    if last_pos is not None:
+        x_last = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_pos, jnp.int32), 1, axis=1)
+    else:
+        x_last = x[:, -1:, :]
+    logits = unembed(params, cfg, x_last)
     return logits, caches
 
 
@@ -615,3 +628,131 @@ def decode_step(params, cfg: ModelConfig, rt: Runtime, inputs, caches
     x = norm_apply(params["final_norm"], x, cfg)
     logits = unembed(params, cfg, x)
     return logits, new_caches
+
+
+# --------------------------------------------------------------------------
+# paged decode (serve engine)
+# --------------------------------------------------------------------------
+
+def paged_supported_reason(cfg: ModelConfig) -> Optional[str]:
+    """None when the paged decode path covers this arch, else why not.
+    The serve engine admits dense full-attention token models: paging
+    targets the O(S) KV state; recurrent/wkv layers keep O(1) state and
+    LOCAL ring caches / MoE decode dispatch are not paged yet."""
+    if cfg.frontend != "token":
+        return f"frontend {cfg.frontend!r} is a stub (no token ids)"
+    bad = {k.value for k in cfg.layer_kinds()
+           if k != AttentionKind.FULL}
+    if bad:
+        return f"non-FULL layer kinds {sorted(bad)} not paged yet"
+    if cfg.moe is not None:
+        return "MoE decode dispatch not paged yet"
+    return None
+
+
+def paged_pools_init(cfg: ModelConfig, n_phys_slots: int, dtype
+                     ) -> List[Dict[str, Dict[str, jnp.ndarray]]]:
+    """Physical KV page pools, stacked to match params['stacks']: one
+    (count, KV, n_phys_slots, head_dim) k/v pair per scanned attention
+    layer. ``n_phys_slots`` = num_pages * page_size (+ scratch tail);
+    all requests share the pool and address it through page tables."""
+    reason = paged_supported_reason(cfg)
+    assert reason is None, reason
+    pools = []
+    for spec in build_stacks(cfg):
+        stack = {}
+        for j, (kind, _) in enumerate(spec.unit):
+            stack[f"l{j}"] = {
+                "k": jnp.zeros((spec.count, cfg.n_kv_heads, n_phys_slots,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((spec.count, cfg.n_kv_heads, n_phys_slots,
+                                cfg.head_dim), dtype),
+            }
+        pools.append(stack)
+    return pools
+
+
+def decode_step_paged(params, cfg: ModelConfig, rt: Runtime, tokens,
+                      pools, phys_idx, positions, keep_rows=None,
+                      p_drop: float = 0.0):
+    """G tokens for every request slot through the paged KV pools.
+
+    tokens (B, G) ids; phys_idx (B, CAP) logical→physical map;
+    positions (B, G) absolute positions. ``keep_rows`` — optional
+    per-stack dict mirror of ``pools`` with (count, B, H, G, CAP) bool
+    decode-dropout keep rows per layer (the serve engine slices them
+    from cached packed mask planes; None = no decode-time dropout).
+
+    One function serves plain decode (G=1), speculative DRAFT steps
+    (G=1) and the speculative VERIFY pass (G=k): the verify replay
+    guarantee — same masks, same code path — is structural, not a
+    property the caller must re-establish.
+
+    Returns (logits (B, G, V), updates) where updates mirrors ``pools``
+    with the fresh (count, B, KV, G, hd) k/v columns; the engine writes
+    them at the physical slots via ``paged_kv_write`` (pool writes stay
+    O(tokens), outside the layer scan, like ``decode_step``)."""
+    x = embed_inputs(params, cfg, tokens, rt)
+    all_updates = []
+    for spec, stack_params, stack_pools in zip(
+            build_stacks(cfg), params["stacks"], pools):
+        stack_keep = (keep_rows[len(all_updates)]
+                      if keep_rows is not None else None)
+
+        def unit_decode(x, up, pool, kr, _spec=spec):
+            ups = {}
+            for j, (kind, _tag) in enumerate(_spec.unit):
+                lp = up[f"l{j}"]
+                h = norm_apply(lp["norm_mix"], x, cfg)
+                y, k_new, v_new = attn_decode_paged(
+                    lp["mix"], h, cfg, pool[f"l{j}"]["k"],
+                    pool[f"l{j}"]["v"], phys_idx, positions,
+                    keep=None if kr is None else kr[f"l{j}"],
+                    p_drop=p_drop)
+                x = x + y
+                h2 = norm_apply(lp["norm_ffn"], x, cfg)
+                x = x + ffn_apply(lp["ffn"], h2, cfg)
+                ups[f"l{j}"] = {"k": k_new, "v": v_new}
+            return x, ups
+
+        if stack_keep is None:
+            def body(xc, xs, _ud=unit_decode):
+                up, pool = xs
+                return _ud(xc, up, pool, None)
+            x, ups = jax.lax.scan(body, x, (stack_params, stack_pools))
+        else:
+            def body(xc, xs, _ud=unit_decode):
+                up, pool, kr = xs
+                return _ud(xc, up, pool, kr)
+            x, ups = jax.lax.scan(
+                body, x, (stack_params, stack_pools, stack_keep))
+        all_updates.append(ups)
+    x = norm_apply(params["final_norm"], x, cfg)
+    return unembed(params, cfg, x), all_updates
+
+
+def paged_kv_write(pools, updates, slots):
+    """Write the fresh token columns into the physical pools at their
+    per-token physical slots. slots (B, G) int32 — disjoint across
+    active requests by construction (page tables never share pages);
+    idle slots point into the scratch tail. One scatter per layer,
+    O(B*G) traffic — the paged analogue of ``_apply_cache_updates``."""
+    flat = slots.reshape(-1)
+    new_pools = []
+    for stack_pools, ups in zip(pools, updates):
+        stack = {}
+        for key, pool in stack_pools.items():
+            u = ups[key]
+            count, b, kv, g, hd = u["k"].shape
+            vals_k = u["k"].transpose(0, 2, 1, 3, 4).reshape(
+                count, kv, b * g, hd)
+            vals_v = u["v"].transpose(0, 2, 1, 3, 4).reshape(
+                count, kv, b * g, hd)
+            stack[key] = {
+                "k": pool["k"].at[:, :, flat, :].set(
+                    vals_k.astype(pool["k"].dtype)),
+                "v": pool["v"].at[:, :, flat, :].set(
+                    vals_v.astype(pool["v"].dtype)),
+            }
+        new_pools.append(stack)
+    return new_pools

@@ -1,0 +1,44 @@
+"""Decode engine on the mask cache: continuous batching, paged KV, and
+speculative verify replays that never re-run RNG."""
+from repro.serve.engine import (
+    EngineUnsupportedError,
+    ServeConfig,
+    ServeEngine,
+    ServeReport,
+)
+from repro.serve.mask_cache import (
+    PackedMaskCache,
+    mask_row_digest,
+    unpack_row,
+)
+from repro.serve.paged_kv import OutOfPagesError, PageAllocation, PagePool
+from repro.serve.scheduler import (
+    ContinuousBatchingScheduler,
+    Request,
+    RequestState,
+    ScheduleBucketCache,
+    StepFnCache,
+    StepKey,
+)
+from repro.serve.spec_decode import MaskReplayMismatch, MaskReplayRecorder
+
+__all__ = [
+    "ContinuousBatchingScheduler",
+    "EngineUnsupportedError",
+    "MaskReplayMismatch",
+    "MaskReplayRecorder",
+    "OutOfPagesError",
+    "PackedMaskCache",
+    "PageAllocation",
+    "PagePool",
+    "Request",
+    "RequestState",
+    "ScheduleBucketCache",
+    "ServeConfig",
+    "ServeEngine",
+    "ServeReport",
+    "StepFnCache",
+    "StepKey",
+    "mask_row_digest",
+    "unpack_row",
+]

@@ -1,0 +1,456 @@
+"""The decode engine on the mask cache: continuous batching over a
+paged KV cache, per-request dropout schedules, and speculative verify
+replays that never re-run RNG.
+
+One engine owns:
+
+  * the physical KV page pools (``models.transformer.paged_pools_init``)
+    plus a ``PagePool`` free-list allocator and per-request page tables;
+  * a ``ContinuousBatchingScheduler`` driving the
+    admit → prefill → decode → retire loop over a bounded slot budget;
+  * a ``ScheduleBucketCache`` (one compiled ``DropoutSchedule`` template
+    per shape bucket, reseeded per request) and a ``StepFnCache``
+    (jitted step graphs per step shape) — the ParamsHash idiom;
+  * a ``PackedMaskCache`` holding each request's per-layer packed mask
+    planes, so every decode step's dropout row is a slice of a resident
+    plane and every speculative VERIFY fetch is a pure cache hit —
+    zero Philox re-execution;
+  * the admission-time ``DropoutContract`` per request, re-verified
+    through ``checkpoint.contract.verify_resume`` whenever a schedule
+    template moves — realization drift must re-prove itself, identity
+    drift fails fast.
+
+The engine clock is wall time with fast-forward over idle gaps, so a
+synthetic Poisson trace replays deterministically in scheduling order
+while latency percentiles still measure real compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import DropoutPlanConfig, ModelConfig
+from repro.core.schedule import (
+    ScheduleBucket,
+    compile_schedule,
+    reseed_schedule,
+)
+from repro.models import (
+    Runtime,
+    build_stacks,
+    decode_step_paged,
+    model_init,
+    paged_kv_write,
+    paged_pools_init,
+    paged_supported_reason,
+    prefill,
+)
+from repro.serve.mask_cache import PackedMaskCache, mask_row_digest
+from repro.serve.paged_kv import PagePool
+from repro.serve.scheduler import (
+    ContinuousBatchingScheduler,
+    Request,
+    ScheduleBucketCache,
+    StepFnCache,
+    StepKey,
+)
+
+
+class EngineUnsupportedError(ValueError):
+    """The arch falls outside the paged decode path's coverage."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine knobs. ``max_model_len`` must divide into pages and into
+    32-bit packed mask rows; admission rejects requests beyond it."""
+    max_slots: int = 8
+    page_size: int = 16
+    num_pages: int = 128
+    max_model_len: int = 256
+    prompt_bucket: int = 16         # prefill shape bucket (right-padded)
+    mask_decode: bool = True        # apply cached dropout rows in decode
+    spec_k: int = 0                 # >0: draft/verify speculative decode
+    mask_cache_capacity: int = 256
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.max_model_len % self.page_size:
+            raise ValueError("max_model_len must be a multiple of "
+                             "page_size")
+        if self.max_model_len % 32:
+            raise ValueError("max_model_len must be a multiple of 32 "
+                             "(packed mask rows)")
+        if self.prompt_bucket <= 0:
+            raise ValueError("prompt_bucket must be positive")
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Aggregate of one ``ServeEngine.run``."""
+    arch: str
+    n_requests: int
+    total_new_tokens: int
+    wall_s: float
+    tokens_per_s: float
+    latency_first_token_s: Dict[str, float]
+    latency_completion_s: Dict[str, float]
+    mask_cache: Dict[str, int]
+    schedule_cache: Dict[str, int]
+    step_cache: Dict[str, int]
+    scheduler: Dict[str, int]
+    paged_kv: Dict[str, int]
+    spec: Dict[str, Any]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def _percentiles(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {"p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean())}
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig,
+                 plan: Optional[DropoutPlanConfig] = None,
+                 serve: ServeConfig = ServeConfig(),
+                 params=None, init_seed: int = 0,
+                 mask_recorder=None):
+        reason = paged_supported_reason(cfg)
+        if reason is not None:
+            raise EngineUnsupportedError(
+                f"arch {cfg.name!r} not servable by the paged decode "
+                f"engine: {reason}")
+        self.cfg = cfg
+        self.serve = serve
+        self.plan = plan or DropoutPlanConfig(
+            mode="overlap", p=cfg.attn_dropout, seed=init_seed)
+        self.masked = (serve.mask_decode and self.plan.enabled
+                       and self.plan.mode == "overlap"
+                       and self.plan.p > 0.0)
+        self._rt = Runtime(plan=None, compute_dtype=serve.dtype)
+        if params is None:
+            params = model_init(jax.random.PRNGKey(init_seed), cfg)
+        self.params = params
+        # physical pools: page area + a private scratch column per
+        # (slot, spec position) so idle slots write garbage nowhere near
+        # a live page
+        self.max_g = max(1, serve.spec_k)
+        self._scratch_base = serve.num_pages * serve.page_size
+        n_phys = self._scratch_base + serve.max_slots * self.max_g
+        self.pools = paged_pools_init(cfg, n_phys, serve.dtype)
+        self.pool_alloc = PagePool(serve.num_pages, serve.page_size)
+        self.scheduler = ContinuousBatchingScheduler(
+            self.pool_alloc, serve.max_slots, serve.max_model_len)
+        self.mask_cache = PackedMaskCache(serve.mask_cache_capacity)
+        self.schedule_buckets = ScheduleBucketCache()
+        self.step_fns = StepFnCache()
+        self.mask_recorder = mask_recorder
+        # (max_slots, W) logical→physical map; idle rows all-zero
+        self._phys = np.zeros((serve.max_slots, serve.max_model_len),
+                              np.int32)
+        self._next_request_id = 0
+        self.spec_stats = {"rounds": 0, "drafted": 0, "accepted": 0,
+                           "verify_mask_fetches": 0,
+                           "verify_philox_execs": 0}
+
+    # ------------------------------------------------------------ admin
+    def make_request(self, prompt: List[int], max_new_tokens: int,
+                     arrival_time: float = 0.0) -> Request:
+        req = Request(request_id=self._next_request_id,
+                      prompt=list(map(int, prompt)),
+                      max_new_tokens=int(max_new_tokens),
+                      arrival_time=float(arrival_time))
+        self._next_request_id += 1
+        return req
+
+    def request_seed(self, req: Request) -> int:
+        """Per-request mask seed: requests must not share dropout bits,
+        but the SAME request must draw the same bits in any engine
+        (sequential vs speculative runs compare digests)."""
+        return (self.plan.seed + 0x9E3779B1 * (req.request_id + 1)) \
+            & 0x7FFFFFFF
+
+    def _admission_schedule(self, req: Request):
+        cap = req.prompt_len + req.max_new_tokens
+        mask_seq = _round_up(cap, 32)
+        bucket = ScheduleBucket.of(self.cfg, self.plan, batch=1,
+                                   seq=mask_seq)
+        template, gen = self.schedule_buckets.get(
+            bucket, lambda: compile_schedule(
+                self.cfg, self.plan, 1, mask_seq))
+        sched = reseed_schedule(template, self.request_seed(req))
+        from repro.checkpoint.contract import contract_from_schedule
+        req.bucket = bucket
+        req.mask_seq = mask_seq
+        req.schedule = sched
+        req.contract = contract_from_schedule(self.cfg, sched)
+        req.contract_generation = gen
+
+    def verify_request_contract(self, req: Request) -> str:
+        """Fail fast when a request's schedule realization drifts from
+        its admission-time ``DropoutContract`` (the bucket template was
+        replaced since admission). Reuses ``checkpoint.contract``: a
+        realization drift must re-prove itself through the static
+        verifier ("recompiled"); an identity drift (different bits!)
+        raises ContractMismatchError — never a silent recompile."""
+        gen = self.schedule_buckets.generation(req.bucket)
+        if gen == req.contract_generation:
+            return "verified"
+        from repro.checkpoint.contract import (
+            contract_from_schedule,
+            verify_resume,
+        )
+        template, gen = self.schedule_buckets.get(req.bucket, None)
+        sched = reseed_schedule(template, self.request_seed(req))
+        current = contract_from_schedule(self.cfg, sched)
+        verdict = verify_resume(req.contract, current, self.cfg, sched)
+        req.schedule = sched
+        req.contract = current
+        req.contract_generation = gen
+        return verdict
+
+    # ---------------------------------------------------------- prefill
+    def _prefill_fn(self, plen_bucket: int):
+        key = StepKey(kind="prefill", model=self.cfg.name,
+                      plen=plen_bucket)
+
+        def build():
+            def fn(params, toks, last_pos):
+                return prefill(params, self.cfg, self._rt, toks,
+                               capacity=plen_bucket, last_pos=last_pos)
+            return jax.jit(fn)
+        return self.step_fns.get(key, build)
+
+    def _prefill_request(self, req: Request, now: float) -> None:
+        plen = req.prompt_len
+        bucket = _round_up(plen, self.serve.prompt_bucket)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt
+        fn = self._prefill_fn(bucket)
+        logits, caches = fn(self.params, jnp.asarray(toks),
+                            jnp.asarray(plen - 1, jnp.int32))
+        # scatter the prompt's KV columns into the request's pages
+        slots = np.asarray([req.alloc.physical_slot(i)
+                            for i in range(plen)], np.int32)
+        new_pools = []
+        for stack_pools, stack_cache in zip(self.pools, caches):
+            stack = {}
+            for lkey, pool in stack_pools.items():
+                k = stack_cache[lkey]["k"][:, 0, :, :plen, :]
+                v = stack_cache[lkey]["v"][:, 0, :, :plen, :]
+                stack[lkey] = {
+                    "k": pool["k"].at[:, :, slots, :].set(
+                        k.astype(pool["k"].dtype)),
+                    "v": pool["v"].at[:, :, slots, :].set(
+                        v.astype(pool["v"].dtype)),
+                }
+            new_pools.append(stack)
+        self.pools = new_pools
+        req.length = plen
+        self._phys[req.slot] = req.alloc.physical_index(
+            self.serve.max_model_len)
+        tok = int(np.argmax(np.asarray(logits)[0, -1]))
+        req.output.append(tok)
+        req.t_first_token = now
+
+    # ------------------------------------------------------- mask rows
+    def mask_plane(self, req: Request, layer: int):
+        """The request's packed (1, H, S//32, S) mask plane for one
+        layer — resident in the LRU after first use."""
+        shape = (1, self.cfg.n_heads, req.mask_seq, req.mask_seq)
+        return self.mask_cache.get_or_create(req.schedule, layer, 0,
+                                             shape)
+
+    def _keep_rows(self, active: List[Request], positions: np.ndarray,
+                   g: int, record: bool):
+        """Per-stack keep-row arrays (count, B, H, g, W) sliced from the
+        active requests' cached planes. Rows are extracted bit-exactly
+        from the packed planes; ``record`` additionally logs each row's
+        sha256 into the attached MaskReplayRecorder (the
+        TrajectoryRecorder-style spec-vs-sequential proof)."""
+        B, W = self.serve.max_slots, self.serve.max_model_len
+        H, L = self.cfg.n_heads, self.cfg.n_layers
+        keep = np.zeros((L, B, H, g, W), np.bool_)
+        for req in active:
+            for layer in range(L):
+                plane = np.asarray(self.mask_plane(req, layer))
+                for j in range(g):
+                    qpos = int(positions[req.slot, j])
+                    word = plane[0, :, qpos // 32, :]
+                    bits = (word >> np.uint32(qpos % 32)) & np.uint32(1)
+                    keep[layer, req.slot, :, j, :req.mask_seq] = \
+                        bits.astype(bool)
+                    if record and self.mask_recorder is not None:
+                        self.mask_recorder.record(
+                            req.schedule.plan.seed, layer, qpos,
+                            mask_row_digest(plane, qpos))
+        # mirror the pools' stack structure for the scan
+        out, base = [], 0
+        for spec in build_stacks(self.cfg):
+            stack = {}
+            for j in range(len(spec.unit)):
+                idx = base + np.arange(spec.count) * len(spec.unit) + j
+                stack[f"l{j}"] = jnp.asarray(keep[idx])
+            base += spec.count * len(spec.unit)
+            out.append(stack)
+        return out
+
+    # --------------------------------------------------------- stepping
+    def _decode_fn(self, g: int):
+        key = StepKey(kind="decode", model=self.cfg.name, g=g,
+                      masked=self.masked)
+        p_drop = self.plan.p if self.masked else 0.0
+
+        def build():
+            def fn(params, pools, toks, phys, pos, keep):
+                return decode_step_paged(
+                    params, self.cfg, self._rt, toks, pools, phys, pos,
+                    keep_rows=keep, p_drop=p_drop)
+            return jax.jit(fn)
+        return self.step_fns.get(key, build)
+
+    def _write_fn(self, g: int):
+        key = StepKey(kind="write", model=self.cfg.name, g=g)
+        return self.step_fns.get(key, lambda: jax.jit(paged_kv_write))
+
+    def _write_slots(self, active: List[Request],
+                     positions: np.ndarray, g: int) -> np.ndarray:
+        """(B, g) physical write slots: the request's page slot for its
+        positions; idle slots target their private scratch column."""
+        B = self.serve.max_slots
+        slots = np.empty((B, g), np.int32)
+        for b in range(B):
+            slots[b] = self._scratch_base + b * self.max_g \
+                + np.arange(g) % self.max_g
+        for req in active:
+            for j in range(g):
+                slots[req.slot, j] = req.alloc.physical_slot(
+                    int(positions[req.slot, j]))
+        return slots
+
+    def step_batch(self, active: List[Request], tokens: np.ndarray,
+                   positions: np.ndarray, *, write: bool,
+                   record_masks: bool = False):
+        """One jitted paged step over the full slot batch. tokens /
+        positions (max_slots, g); returns logits (max_slots, g, V)."""
+        g = tokens.shape[1]
+        keep = (self._keep_rows(active, positions, g, record_masks)
+                if self.masked else None)
+        fn = self._decode_fn(g)
+        logits, updates = fn(self.params, self.pools,
+                             jnp.asarray(tokens),
+                             jnp.asarray(self._phys),
+                             jnp.asarray(positions), keep)
+        if write:
+            slots = self._write_slots(active, positions, g)
+            self.pools = self._write_fn(g)(self.pools, updates,
+                                           jnp.asarray(slots))
+        return np.asarray(logits)
+
+    def decode_round(self, active: List[Request]) -> None:
+        """Plain continuous-batching round: one token per active slot."""
+        B = self.serve.max_slots
+        tokens = np.zeros((B, 1), np.int32)
+        positions = np.zeros((B, 1), np.int32)
+        for req in active:
+            tokens[req.slot, 0] = req.last_token()
+            positions[req.slot, 0] = req.length
+        logits = self.step_batch(active, tokens, positions, write=True,
+                                 record_masks=True)
+        for req in active:
+            req.length += 1
+            req.output.append(int(np.argmax(logits[req.slot, 0])))
+
+    # -------------------------------------------------------- main loop
+    def submit(self, req: Request) -> None:
+        self.scheduler.submit(req)
+
+    def _admit_all(self, now: float) -> None:
+        while True:
+            req = self.scheduler.admit_next()
+            if req is None:
+                return
+            req.t_admitted = now
+            self._admission_schedule(req)
+            self._prefill_request(req, now)
+
+    def _retire_done(self, now: float) -> List[Request]:
+        done = [r for r in self.scheduler.running.values() if r.done]
+        for req in done:
+            req.output = req.output[:req.max_new_tokens]
+            req.t_finished = now
+            self._phys[req.slot] = 0
+            self.scheduler.retire(req)
+        return done
+
+    def run(self, requests: List[Request]) -> ServeReport:
+        """Drive the admit/prefill/decode/retire loop until every
+        request completes. ``arrival_time`` is an offset (seconds) on
+        the engine clock; idle gaps fast-forward."""
+        from repro.serve import spec_decode
+        pending = sorted(requests, key=lambda r:
+                         (r.arrival_time, r.request_id))
+        t0 = time.perf_counter()
+        skew = 0.0
+        finished: List[Request] = []
+        while pending or not self.scheduler.idle:
+            now = time.perf_counter() - t0 + skew
+            while pending and pending[0].arrival_time <= now:
+                self.submit(pending.pop(0))
+            if (pending and self.scheduler.idle
+                    and not self.scheduler.queue):
+                skew += pending[0].arrival_time - now
+                continue
+            self._admit_all(now)
+            active = sorted(self.scheduler.running.values(),
+                            key=lambda r: r.slot)
+            active = [r for r in active if not r.done]
+            if active:
+                if self.serve.spec_k > 1:
+                    spec_decode.spec_round(self, active)
+                else:
+                    self.decode_round(active)
+                for req in active:
+                    self.verify_request_contract(req)
+            now = time.perf_counter() - t0 + skew
+            finished.extend(self._retire_done(now))
+        wall = time.perf_counter() - t0
+        return self._report(finished, wall)
+
+    def _report(self, finished: List[Request], wall: float
+                ) -> ServeReport:
+        total_new = sum(len(r.output) for r in finished)
+        first = [r.t_first_token - r.arrival_time for r in finished]
+        comp = [r.t_finished - r.arrival_time for r in finished]
+        spec = dict(self.spec_stats)
+        if spec["drafted"]:
+            spec["acceptance_rate"] = spec["accepted"] / spec["drafted"]
+        return ServeReport(
+            arch=self.cfg.name,
+            n_requests=len(finished),
+            total_new_tokens=total_new,
+            wall_s=wall,
+            tokens_per_s=total_new / wall if wall > 0 else 0.0,
+            latency_first_token_s=_percentiles(first),
+            latency_completion_s=_percentiles(comp),
+            mask_cache=self.mask_cache.stats(),
+            schedule_cache=self.schedule_buckets.stats(),
+            step_cache=self.step_fns.stats(),
+            scheduler=self.scheduler.stats(),
+            paged_kv=self.pool_alloc.stats(),
+            spec=spec)

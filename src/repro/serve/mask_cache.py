@@ -1,0 +1,96 @@
+"""Packed-dropout-mask reuse across speculative-decoding verification
+replays — the serving-side payoff of the paper's counter-based masks.
+
+The compiled ``DropoutSchedule`` owns mask identity: two fetches
+agreeing on ``schedule.mask_key(layer, step)`` = (seed, salt, layer,
+step, threshold, rounds, bits) consume bit-identical packed masks,
+whatever site/kernel/shard produced them. Verification steps replay
+exactly the keys the draft pass generated, so keying this LRU on the
+schedule's identity makes every verification mask fetch a cache hit —
+the whole RNG phase becomes a lookup.
+
+Eviction is true LRU: a hit refreshes recency (``move_to_end``), so a
+hot plane that keeps replaying is never evicted as if cold, and
+``stats()`` counts evictions so capacity pressure is visible in the
+serve report instead of silently re-running Philox.
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class PackedMaskCache:
+    """LRU cache of packed mask planes keyed by schedule mask identity.
+
+    ``misses`` double as the Philox-execution count: a miss is the only
+    place RNG runs (``producer.standalone_packed_mask``); a hit serves
+    the resident plane untouched. ``snapshot_rng()`` lets callers prove
+    a phase (the speculative verify pass) executed ZERO RNG."""
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._entries: "collections.OrderedDict[Tuple[int, ...], jnp.ndarray]" = (
+            collections.OrderedDict())
+
+    def get_or_create(self, schedule, layer: int, step: int,
+                      mask_shape: Tuple[int, int, int, int]) -> jnp.ndarray:
+        """The packed mask plane for (layer, step) under ``schedule``'s
+        plan — generated on first use (one Philox execution), replayed
+        from the cache afterwards (zero RNG), most-recently-used last."""
+        key = schedule.mask_key(layer, step)
+        hit = self._entries.get(key)
+        if hit is not None:
+            self._entries.move_to_end(key)     # hits refresh recency
+            self.hits += 1
+            return hit
+        self.misses += 1
+        b, h, sq, sk = mask_shape
+        # the producer's standalone path owns the kernel-vs-XLA choice
+        # (capability predicate, philox_bits) — same bits either way
+        from repro.core import producer
+        from repro.core.overlap import DropoutPlan
+        mask = producer.standalone_packed_mask(
+            DropoutPlan(schedule.plan), b, h, sq, sk, layer, step)
+        self._entries[key] = mask
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return mask
+
+    def snapshot_rng(self) -> int:
+        """Philox-execution counter (== misses); diff two snapshots to
+        prove a phase ran zero RNG."""
+        return self.misses
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "entries": len(self._entries)}
+
+
+def mask_row_digest(plane, q_pos: int) -> str:
+    """sha256 of one query row of a packed (B, H, SQ//32, SK) mask plane
+    — the TrajectoryRecorder-style digest the spec-decode acceptance
+    proof compares across the speculative and sequential paths. The row
+    is extracted bit-exactly (word ``q_pos // 32``, bit ``q_pos % 32``);
+    two digests agree iff the keep bits agree bitwise."""
+    arr = np.asarray(plane)
+    word = arr[:, :, q_pos // 32, :]
+    bits = (word >> np.uint32(q_pos % 32)) & np.uint32(1)
+    return hashlib.sha256(bits.astype(np.uint8).tobytes()).hexdigest()
+
+
+def unpack_row(plane, q_pos: int) -> np.ndarray:
+    """(B, H, SK) uint8 keep bits of one query row of a packed plane."""
+    arr = np.asarray(plane)
+    word = arr[:, :, q_pos // 32, :]
+    return ((word >> np.uint32(q_pos % 32)) & np.uint32(1)).astype(
+        np.uint8)

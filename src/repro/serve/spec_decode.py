@@ -1,0 +1,124 @@
+"""Draft/verify speculative decoding where the verify pass never runs
+RNG.
+
+Draft: k sequential single-token steps through ``decode_step_paged``
+(the exact code path plain decode uses), each consuming its dropout row
+from the request's cached packed mask plane and writing its KV column
+into the request's pages.
+
+Verify: ONE g=k call of the SAME ``decode_step_paged`` over the same
+(token, position) pairs. Every mask fetch is a pure
+``schedule.mask_key(layer, step)`` hit on the resident plane — the
+draft already faulted the planes in — so the verify phase executes ZERO
+Philox (proved per round via ``PackedMaskCache.snapshot_rng`` deltas)
+and its keep rows are bitwise the draft's (proved via
+``MaskReplayRecorder`` digests, which also bridge to a separate
+non-speculative engine run for the sequential-equivalence test).
+
+Acceptance is greedy: accept draft tokens while they match the verify
+argmax; on first mismatch emit the corrected verify token and roll the
+request's length back (stale drafted KV columns sit beyond ``length``
+and are overwritten in place on the next round — the causal validity
+rule ``k_pos <= q_pos`` means they are never read meanwhile).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+class MaskReplayMismatch(AssertionError):
+    """Two fetches of the same (seed, layer, q_pos) dropout row
+    disagreed bitwise — the replay guarantee is broken."""
+
+
+class MaskReplayRecorder:
+    """TrajectoryRecorder-style digest ledger for decode dropout rows.
+
+    Keyed by (plan seed, layer, q_pos) — the same identity
+    ``mask_key`` hashes — so draft rows, verify rows, and rows from a
+    separate sequential engine run all land on the same key and must
+    carry the same sha256. ``confirms`` counts re-observations that
+    matched; any mismatch raises immediately."""
+
+    def __init__(self):
+        self.digests: Dict[Tuple[int, int, int], str] = {}
+        self.confirms = 0
+
+    def record(self, seed: int, layer: int, q_pos: int,
+               digest: str) -> None:
+        key = (int(seed), int(layer), int(q_pos))
+        prev = self.digests.get(key)
+        if prev is None:
+            self.digests[key] = digest
+            return
+        if prev != digest:
+            raise MaskReplayMismatch(
+                f"dropout row replay diverged at seed={seed} "
+                f"layer={layer} q_pos={q_pos}: {prev[:16]} != "
+                f"{digest[:16]}")
+        self.confirms += 1
+
+
+def spec_round(engine, active: List) -> None:
+    """One draft(k)+verify round over the active batch. Mutates request
+    outputs/lengths and the engine's pools and ``spec_stats``."""
+    k = min(engine.serve.spec_k, min(r.remaining for r in active))
+    if k <= 1:
+        engine.decode_round(active)
+        return
+    B = engine.serve.max_slots
+    start = {r.slot: r.length for r in active}
+    inputs = np.zeros((B, k), np.int32)
+    drafted = np.zeros((B, k), np.int32)
+    cur = {r.slot: r.last_token() for r in active}
+
+    # ---- draft: k masked g=1 steps, writing KV as plain decode would
+    for j in range(k):
+        tokens = np.zeros((B, 1), np.int32)
+        positions = np.zeros((B, 1), np.int32)
+        for r in active:
+            tokens[r.slot, 0] = cur[r.slot]
+            positions[r.slot, 0] = r.length
+        inputs[:, j] = tokens[:, 0]
+        logits = engine.step_batch(active, tokens, positions,
+                                   write=True, record_masks=True)
+        for r in active:
+            d = int(np.argmax(logits[r.slot, 0]))
+            drafted[r.slot, j] = d
+            cur[r.slot] = d
+            r.length += 1
+
+    # ---- verify: one g=k replay of the same (token, position) pairs.
+    # No KV write (columns already written by the draft); mask fetches
+    # must all hit the resident planes — zero Philox.
+    ver_pos = np.zeros((B, k), np.int32)
+    for r in active:
+        ver_pos[r.slot] = start[r.slot] + np.arange(k)
+    rng_before = engine.mask_cache.snapshot_rng()
+    hits_before = engine.mask_cache.hits
+    vlogits = engine.step_batch(active, inputs, ver_pos, write=False,
+                                record_masks=True)
+    engine.spec_stats["verify_philox_execs"] += \
+        engine.mask_cache.snapshot_rng() - rng_before
+    engine.spec_stats["verify_mask_fetches"] += \
+        engine.mask_cache.hits - hits_before
+
+    # ---- greedy acceptance with rollback
+    for r in active:
+        v = np.argmax(vlogits[r.slot], axis=-1)
+        d = drafted[r.slot]
+        acc = 0
+        while acc < k and d[acc] == v[acc]:
+            acc += 1
+        if acc == k:
+            r.output.extend(int(t) for t in d)
+            # length already start + k: every drafted column is real
+        else:
+            r.output.extend(int(t) for t in d[:acc])
+            r.output.append(int(v[acc]))
+            r.length = start[r.slot] + acc + 1
+        engine.spec_stats["drafted"] += k
+        engine.spec_stats["accepted"] += acc
+    engine.spec_stats["rounds"] += 1

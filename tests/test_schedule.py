@@ -341,7 +341,8 @@ def test_serving_mask_reuse_cache():
     m1 = cache.get_or_create(sched, 1, 7, (1, cfg.n_heads, 64, 64))
     m2 = cache.get_or_create(sched, 1, 7, (1, cfg.n_heads, 64, 64))
     assert m1 is m2                       # replay: no RNG ran
-    assert cache.stats() == {"hits": 1, "misses": 1, "entries": 1}
+    assert cache.stats() == {"hits": 1, "misses": 1, "entries": 1,
+                             "evictions": 0}
     # bits match the reference oracle for the schedule's identity
     seed, salt = sched.mask_key(1, 7)[:2]
     want = philox_mask_ref(1, cfg.n_heads, 64, 64, _P, seed, salt)

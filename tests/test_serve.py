@@ -1,0 +1,322 @@
+"""Decode-engine tests: paged KV, continuous-batching admission, the
+mask-cache LRU, contract drift fail-fast, and the speculative-decode
+bitwise replay proof.
+
+    PYTHONPATH=src python -m pytest -q -m serve
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import DropoutPlanConfig, get_arch
+from repro.core.schedule import compile_schedule
+from repro.models import (
+    Runtime,
+    decode_step,
+    decode_step_paged,
+    model_init,
+    paged_kv_write,
+    paged_pools_init,
+    prefill,
+)
+from repro.serve import (
+    MaskReplayMismatch,
+    MaskReplayRecorder,
+    OutOfPagesError,
+    PackedMaskCache,
+    PagePool,
+    ServeConfig,
+    ServeEngine,
+)
+
+pytestmark = pytest.mark.serve
+
+
+def _cfg():
+    return get_arch("yi-6b", reduced=True)
+
+
+def _plan(**kw):
+    kw.setdefault("mode", "overlap")
+    kw.setdefault("p", 0.1)
+    kw.setdefault("seed", 7)
+    return DropoutPlanConfig(**kw)
+
+
+def _serve(**kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("num_pages", 16)
+    kw.setdefault("max_model_len", 96)
+    kw.setdefault("prompt_bucket", 8)
+    return ServeConfig(**kw)
+
+
+def _requests(engine, n, plen=10, max_new=6, seed=3):
+    rng = np.random.default_rng(seed)
+    return [engine.make_request(
+        rng.integers(0, engine.cfg.vocab_size, plen).tolist(), max_new)
+        for _ in range(n)]
+
+
+# ---------------------------------------------------------- mask cache
+
+def test_mask_cache_true_lru_and_eviction_counter():
+    """A hit refreshes recency — a hot plane outlives colder ones under
+    capacity pressure — and stats() exposes the eviction count."""
+    cfg = _cfg()
+    sched = compile_schedule(cfg, _plan(), 1, 32)
+    shape = (1, cfg.n_heads, 32, 32)
+    cache = PackedMaskCache(capacity=2)
+    a = cache.get_or_create(sched, 0, 0, shape)
+    cache.get_or_create(sched, 0, 1, shape)         # B
+    assert cache.get_or_create(sched, 0, 0, shape) is a   # hot: A
+    cache.get_or_create(sched, 0, 2, shape)         # C evicts B (LRU)
+    assert cache.stats()["evictions"] == 1
+    # A survived (it was hit, so B was least-recently-used, not A)
+    assert cache.get_or_create(sched, 0, 0, shape) is a
+    misses = cache.misses
+    cache.get_or_create(sched, 0, 1, shape)         # B gone: re-created
+    assert cache.misses == misses + 1
+    assert cache.snapshot_rng() == cache.misses
+    st = cache.stats()
+    assert set(st) == {"hits", "misses", "evictions", "entries"}
+    assert st["entries"] == 2
+
+
+# ------------------------------------------------------------ paged KV
+
+def test_page_pool_alloc_reclaim_fragmentation():
+    pool = PagePool(num_pages=8, page_size=16)
+    assert pool.pages_needed(1) == 1
+    assert pool.pages_needed(16) == 1
+    assert pool.pages_needed(17) == 2
+    a = pool.allocate(3)
+    b = pool.allocate(3)
+    assert pool.pages_in_use == 6 and pool.free_pages == 2
+    # pressure: only 2 free -> None (request stays queued), counted
+    assert pool.allocate(3) is None
+    assert pool.alloc_failures == 1
+    pool.free(a)
+    # fragmentation: the 5 free pages are not contiguous (b still holds
+    # the middle), but allocation succeeds — contiguity is irrelevant,
+    # the page table maps any physical order
+    c = pool.allocate(5)
+    assert c is not None
+    assert sorted(c.pages + b.pages) == list(range(8))
+    # logical->physical map walks the request's own pages in order
+    for pos in range(c.capacity):
+        assert c.physical_slot(pos) == (
+            c.pages[pos // 16] * 16 + pos % 16)
+    idx = c.physical_index(width=96)
+    assert idx.shape == (96,) and idx.dtype == np.int32
+    assert list(idx[:c.capacity]) == [c.physical_slot(i)
+                                      for i in range(c.capacity)]
+    assert all(idx[c.capacity:] == 0)
+    # impossible requests raise instead of queueing forever
+    with pytest.raises(OutOfPagesError):
+        pool.allocate(9)
+    pool.free(b)
+    pool.free(c)
+    assert pool.free_pages == 8
+    assert pool.stats()["peak_pages_in_use"] == 8
+
+
+def test_page_pool_double_free_caught():
+    pool = PagePool(num_pages=2, page_size=4)
+    a = pool.allocate(1)
+    pool.free(a)
+    with pytest.raises(AssertionError):
+        pool.free(a)
+
+
+# ----------------------------------------------- scheduler / admission
+
+def test_scheduler_admission_under_queue_pressure():
+    """All-or-nothing FCFS admission: a request admits only with a slot
+    AND its full page budget; the queue drains as capacity frees."""
+    eng = ServeEngine(_cfg(), serve=_serve(max_slots=2, num_pages=3,
+                                           max_model_len=64))
+    sch = eng.scheduler
+    reqs = _requests(eng, 3, plen=20, max_new=12)   # 2 pages each
+    for r in reqs:
+        sch.submit(r)
+    assert sch.admit_next() is reqs[0]
+    # a slot is free but only 1 of 2 needed pages is: head waits, and
+    # the failed reservation is counted
+    assert sch.admit_next() is None
+    assert eng.pool_alloc.alloc_failures == 1
+    assert len(sch.queue) == 2
+    sch.retire(reqs[0])
+    assert sch.admit_next() is reqs[1]              # FCFS order
+    assert sch.admit_next() is None                 # pages short again
+    st = sch.stats()
+    assert st["admitted"] == 2 and st["retired"] == 1
+    assert st["queued"] == 1 and st["peak_running"] == 1
+
+
+def test_scheduler_rejects_over_length_request():
+    eng = ServeEngine(_cfg(), serve=_serve())
+    big = eng.make_request([1] * 90, 20)            # 110 > 96
+    with pytest.raises(ValueError):
+        eng.submit(big)
+
+
+def test_engine_runs_queue_pressure_to_completion():
+    """More requests than slots: everything still completes, through
+    queueing — and scheduling pressure never changes any output
+    (decode is deterministic per request seed)."""
+    def run(max_slots):
+        eng = ServeEngine(_cfg(), serve=_serve(max_slots=max_slots),
+                          init_seed=0)
+        reqs = _requests(eng, 4, plen=10, max_new=5)
+        eng.run(reqs)
+        return [r.output for r in reqs], eng
+    out2, eng2 = run(2)
+    out1, _ = run(1)
+    assert all(len(o) == 5 for o in out2)
+    assert out1 == out2           # batching/queueing never changes bits
+    assert eng2.scheduler.stats()["retired"] == 4
+    assert eng2.pool_alloc.pages_in_use == 0        # all reclaimed
+
+
+# --------------------------------------- paged vs contiguous decoding
+
+def test_paged_decode_matches_contiguous_decode():
+    """decode_step_paged through a fragmented page table produces the
+    same logits as the contiguous decode_step on the same prefill."""
+    cfg = _cfg()
+    rt = Runtime(plan=None, compute_dtype=jnp.float32)
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    plen, steps, ps = 12, 5, 8
+    cap = 32
+    prompt = np.arange(plen, dtype=np.int32)[None, :] % cfg.vocab_size
+
+    logits, caches = prefill(params, cfg, rt, jnp.asarray(prompt),
+                             capacity=cap + steps)
+    # paged copy of the same prefill KV, through a shuffled page order
+    pool_alloc = PagePool(num_pages=6, page_size=ps)
+    alloc = pool_alloc.allocate(4)
+    alloc.pages.reverse()                 # force a non-contiguous map
+    pools = paged_pools_init(cfg, 6 * ps + 4, jnp.float32)
+    slots = np.asarray([alloc.physical_slot(i) for i in range(plen)],
+                       np.int32)
+    new_pools = []
+    for stack_pools, stack_cache in zip(pools, caches):
+        stack = {}
+        for lkey, pool in stack_pools.items():
+            stack[lkey] = {
+                "k": pool["k"].at[:, :, slots, :].set(
+                    stack_cache[lkey]["k"][:, 0, :, :plen, :]),
+                "v": pool["v"].at[:, :, slots, :].set(
+                    stack_cache[lkey]["v"][:, 0, :, :plen, :]),
+            }
+        new_pools.append(stack)
+    pools = new_pools
+    phys = alloc.physical_index(cap)[None, :]
+
+    tok = int(np.argmax(np.asarray(logits)[0, -1]))
+    pos = plen
+    for _ in range(steps):
+        t = jnp.full((1, 1), tok, jnp.int32)
+        logits_c, caches = decode_step(params, cfg, rt, t, caches)
+        logits_p, updates = decode_step_paged(
+            params, cfg, rt, t, pools, jnp.asarray(phys),
+            jnp.full((1, 1), pos, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(logits_c)[0, -1], np.asarray(logits_p)[0, 0],
+            rtol=2e-4, atol=2e-4)
+        pools = paged_kv_write(
+            pools, updates,
+            jnp.full((1, 1), alloc.physical_slot(pos), jnp.int32))
+        tok = int(np.argmax(np.asarray(logits_p)[0, 0]))
+        pos += 1
+
+
+# -------------------------------------------------- speculative decode
+
+def test_spec_decode_bitwise_equal_and_zero_rng():
+    """The acceptance test: speculative decode (draft k + one verify
+    replay) emits the same tokens as sequential decode, every dropout
+    row digest matches bitwise across both runs (shared
+    MaskReplayRecorder), and the verify passes execute ZERO Philox."""
+    cfg = _cfg()
+    rec = MaskReplayRecorder()
+
+    def run(spec_k):
+        eng = ServeEngine(cfg, serve=_serve(spec_k=spec_k),
+                          init_seed=0, mask_recorder=rec)
+        assert eng.masked, "dropout must be live for the proof to bite"
+        reqs = _requests(eng, 3, plen=10, max_new=6)
+        rep = eng.run(reqs)
+        return [r.output for r in reqs], rep
+
+    seq_out, _ = run(0)
+    spec_out, spec_rep = run(4)
+    assert seq_out == spec_out
+    assert spec_rep.spec["rounds"] > 0
+    assert spec_rep.spec["verify_philox_execs"] == 0
+    assert spec_rep.spec["verify_mask_fetches"] > 0
+    # the recorder saw every row at least twice (draft+verify, and
+    # again from the sequential run) and raised on none of them
+    assert rec.confirms > 0 and len(rec.digests) > 0
+
+
+def test_mask_replay_recorder_raises_on_divergence():
+    rec = MaskReplayRecorder()
+    rec.record(1, 0, 5, "aa" * 32)
+    rec.record(1, 0, 5, "aa" * 32)
+    assert rec.confirms == 1
+    with pytest.raises(MaskReplayMismatch):
+        rec.record(1, 0, 5, "bb" * 32)
+
+
+# ------------------------------------------------------ contract drift
+
+def test_contract_drift_fail_fast():
+    """Satellite: a request whose bucket template moved after admission
+    must re-prove its DropoutContract — realization drift passes the
+    static verifier ("recompiled"); identity drift raises."""
+    from repro.checkpoint.contract import ContractMismatchError
+    eng = ServeEngine(_cfg(), serve=_serve(), init_seed=0)
+    req = eng.make_request(list(range(10)), 4)
+    eng._admission_schedule(req)
+    assert eng.verify_request_contract(req) == "verified"
+
+    # realization drift: a different host site produces the SAME bits
+    # (site is not part of mask identity) — must re-verify, not raise
+    tmpl2 = compile_schedule(
+        eng.cfg, dataclasses.replace(eng.plan, site="prev_gemm"),
+        1, req.mask_seq)
+    eng.schedule_buckets.replace(req.bucket, tmpl2)
+    assert eng.verify_request_contract(req) == "recompiled"
+    assert eng.verify_request_contract(req) == "verified"  # now current
+
+    # identity drift: different Philox rounds = DIFFERENT bits — the
+    # engine must refuse, never silently swap masks mid-request
+    tmpl3 = compile_schedule(
+        eng.cfg, dataclasses.replace(eng.plan, philox_rounds=10),
+        1, req.mask_seq)
+    eng.schedule_buckets.replace(req.bucket, tmpl3)
+    with pytest.raises(ContractMismatchError):
+        eng.verify_request_contract(req)
+
+
+# ------------------------------------------------------- bucket caches
+
+def test_schedule_bucket_cache_reuse_across_requests():
+    """One compile per shape bucket; later same-bucket requests stamp
+    schedules by reseeding — distinct masks, shared compilation."""
+    eng = ServeEngine(_cfg(), serve=_serve(), init_seed=0)
+    r1 = eng.make_request(list(range(10)), 6)
+    r2 = eng.make_request(list(range(10)), 6)
+    r3 = eng.make_request(list(range(30)), 6)       # different bucket
+    for r in (r1, r2, r3):
+        eng._admission_schedule(r)
+    st = eng.schedule_buckets.stats()
+    assert st == {"hits": 1, "misses": 2, "entries": 2}
+    assert r1.schedule.plan.seed != r2.schedule.plan.seed
+    assert r1.schedule.mask_key(0, 0) != r2.schedule.mask_key(0, 0)
