@@ -1,0 +1,175 @@
+"""Long-context mask-traffic benchmark (32k / 64k / 128k): premask vs
+replay realization of the attention dropout mask.
+
+Premask streams the packed (B, H, SQ//32, SK) plane from HBM once in
+the forward and re-reads it in the backward — traffic that scales with
+q·k (S^2 / 8 bytes per direction). Replay consumes ZERO mask HBM
+bytes: the flash kernels re-derive each (bq, bk) tile's keep bits
+in-register from a (4,)-word seed-salt (the same position-based Philox
+counters the run-and-discard host GEMM was planned with), paying
+in-kernel ALU re-derivations instead — forward once, backward twice
+(_dq and _dkv replay the tiles independently), on top of the host's
+hidden draw.
+
+Everything here is the paper's analytic perf model (repro.perfmodel) —
+interpret-mode attention at 32k+ context is not a measurable proxy on
+CPU, and the mask-byte / op-count columns are exact integers from the
+shape arithmetic, not measurements. Records land in BENCH_longctx.json
+(schema bench_longctx/v1) via ``benchmarks/run.py --longctx --json``;
+``--longctx --smoke`` asserts the schema and the two load-bearing
+invariants (replay bytes identically zero, premask bytes q·k-scaling).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.perfmodel.hardware import GH100
+from repro.perfmodel.model import (
+    BlockShape,
+    kernel_times,
+    overlap_block_time,
+    rng_ops_per_elem,
+)
+
+Row = Tuple[str, float, str]
+
+SCHEMA = "bench_longctx/v1"
+CONTEXTS = (32768, 65536, 131072)
+ROUNDS = 7
+# Philox derivations of the full plane per training step:
+#   premask: the producer draws once (hidden under the host GEMM); the
+#            consumer only READS bits forward and backward.
+#   replay:  the retained run-and-discard host still draws once (the
+#            overlap benefit stays measurable), then the kernels
+#            re-derive in-register — fwd once, bwd twice (_dq + _dkv).
+DERIVATIONS = {"premask": 1, "replay": 4}
+# HBM passes over the packed plane the consumer pays (fwd read + bwd
+# re-read for premask; replay never touches HBM for mask bits)
+MASK_READS = {"premask": 2, "replay": 0}
+
+
+def _longctx_shape(context: int) -> BlockShape:
+    """The llama2-70B-like long-context block (paper §4 shape with the
+    sequence swept): GQA 64/8 heads, gated 3.5x FFN, fp8 GEMMs."""
+    return BlockShape(batch=1, seq=context, n_heads=64, n_kv_heads=8,
+                      ffn_mult=3.5, ffn_gated=True, dtype_bytes=1)
+
+
+def _block_ms(shape: BlockShape, realization: str) -> float:
+    """Modeled per-block step time (fwd+bwd mask costs folded in): the
+    overlap composition charging premask its two HBM passes, and replay
+    its three in-kernel re-derivations (under the softmax bottleneck,
+    so only rng_hidden_fused of each hides — same factor as the fused
+    baseline)."""
+    t = overlap_block_time(shape, GH100, ROUNDS,
+                           mask_reads=MASK_READS[realization])
+    if realization == "replay":
+        alu = (shape.score_elems() * rng_ops_per_elem(ROUNDS)
+               / GH100.nonmma_ops)
+        t += (DERIVATIONS["replay"] - 1) * (1.0 - GH100.rng_hidden_fused) \
+            * alu
+    return t * 1e3
+
+
+def longctx_records() -> list:
+    records = []
+    for context in CONTEXTS:
+        shape = _longctx_shape(context)
+        elems = shape.score_elems()
+        for realization in ("premask", "replay"):
+            derivs = DERIVATIONS[realization]
+            records.append({
+                "group": "longctx",
+                "context": context,
+                "realization": realization,
+                "how": realization,
+                "mask_hbm_bytes": shape.mask_traffic_bytes(
+                    realization, passes=MASK_READS["premask"]),
+                "philox_derivations": derivs,
+                "philox_ops": derivs * elems * rng_ops_per_elem(ROUNDS),
+                "modeled_block_ms": round(_block_ms(shape, realization),
+                                          3),
+                "shape": {"batch": shape.batch, "seq": shape.seq,
+                          "heads": shape.n_heads,
+                          "kv_heads": shape.kv_heads,
+                          "head_dim": shape.head_dim,
+                          "ffn_mult": shape.ffn_mult,
+                          "dtype_bytes": shape.dtype_bytes},
+            })
+    return records
+
+
+def longctx_payload() -> dict:
+    return {
+        "schema": SCHEMA,
+        "hw": "GH100",
+        "rounds": ROUNDS,
+        "note": ("analytic perf-model columns (repro.perfmodel); "
+                 "mask_hbm_bytes counts the consumer's fwd read + bwd "
+                 "re-read of the packed plane — identically 0 on the "
+                 "replay path"),
+        "records": longctx_records(),
+    }
+
+
+RECORD_KEYS = ("group", "context", "realization", "how",
+               "mask_hbm_bytes", "philox_derivations", "philox_ops",
+               "modeled_block_ms", "shape")
+
+
+def assert_payload_schema(payload: dict) -> List[str]:
+    """Schema + invariant assertions for the CI smoke lane. Returns the
+    violations (empty = clean)."""
+    bad: List[str] = []
+    if payload.get("schema") != SCHEMA:
+        bad.append(f"schema != {SCHEMA}: {payload.get('schema')!r}")
+    records = payload.get("records", [])
+    by_key = {}
+    for r in records:
+        missing = set(RECORD_KEYS) - set(r)
+        if missing:
+            bad.append(f"record missing keys {sorted(missing)}: {r}")
+            continue
+        by_key[(r["context"], r["realization"])] = r
+    for context in CONTEXTS:
+        pre = by_key.get((context, "premask"))
+        rep = by_key.get((context, "replay"))
+        if pre is None or rep is None:
+            bad.append(f"context {context}: missing realization row")
+            continue
+        if rep["mask_hbm_bytes"] != 0:
+            bad.append(f"context {context}: replay mask_hbm_bytes = "
+                       f"{rep['mask_hbm_bytes']} (contract: 0)")
+        want = 2 * context * context * 64 / 8.0   # 2 passes * BH*S^2/8
+        if pre["mask_hbm_bytes"] != want:
+            bad.append(f"context {context}: premask mask_hbm_bytes = "
+                       f"{pre['mask_hbm_bytes']} != {want} "
+                       "(fwd read + bwd re-read of BH*S^2/8)")
+        if rep["philox_ops"] <= pre["philox_ops"]:
+            bad.append(f"context {context}: replay philox_ops must "
+                       "exceed premask's (in-register re-derivations)")
+    # q·k scaling: doubling the context quadruples premask traffic
+    for c0, c1 in zip(CONTEXTS, CONTEXTS[1:]):
+        b0 = by_key.get((c0, "premask"), {}).get("mask_hbm_bytes")
+        b1 = by_key.get((c1, "premask"), {}).get("mask_hbm_bytes")
+        if b0 and b1 and b1 != 4 * b0:
+            bad.append(f"premask traffic {c0}->{c1}: {b1} != 4*{b0} "
+                       "(q·k scaling)")
+    return bad
+
+
+def longctx_rows(payload: dict) -> List[Row]:
+    rows: List[Row] = []
+    for r in payload["records"]:
+        gib = r["mask_hbm_bytes"] / 2 ** 30
+        rows.append((
+            f"longctx/{r['context'] // 1024}k_{r['realization']}",
+            r["modeled_block_ms"] * 1e3,
+            f"mask_hbm_bytes={r['mask_hbm_bytes']:.0f} "
+            f"({gib:.2f} GiB) philox_derivs={r['philox_derivations']} "
+            f"philox_ops={r['philox_ops']:.3g}"))
+    return rows
+
+
+def bench_longctx() -> List[Row]:
+    return longctx_rows(longctx_payload())

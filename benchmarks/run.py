@@ -25,6 +25,13 @@ instead: ``--serve --smoke`` is the CI gate asserting the
 bench_serve/v1 schema, the zero-RNG verify proof, and spec-vs-sequential
 token equality; ``--serve --json BENCH_serve.json`` records the full
 trace.
+
+``--longctx`` runs the long-context (32k/64k/128k) premask-vs-replay
+mask-traffic benchmark (analytic perf-model columns; see
+benchmarks/longctx_bench.py): ``--longctx --smoke`` asserts the
+bench_longctx/v1 schema plus the zero-byte replay and q·k-scaling
+premask invariants; ``--longctx --json BENCH_longctx.json`` records
+the table.
 """
 from __future__ import annotations
 
@@ -62,9 +69,11 @@ def bench_roofline_table():
 
 
 def all_benches():
-    from benchmarks import kernel_bench, paper_figures, serve_bench
+    from benchmarks import (kernel_bench, longctx_bench, paper_figures,
+                            serve_bench)
     return [
         ("serve", serve_bench.bench_serve),
+        ("longctx", longctx_bench.bench_longctx),
         ("headline", paper_figures.bench_headline),
         ("fig6", paper_figures.bench_fig6_sweep),
         ("fig7", paper_figures.bench_fig7_kernel_scaling),
@@ -138,6 +147,33 @@ def run_serve(smoke: bool, json_path: str | None) -> int:
     return 0
 
 
+def run_longctx(smoke: bool, json_path: str | None) -> int:
+    """--longctx: the 32k/64k/128k premask-vs-replay mask-traffic
+    table. --smoke asserts the bench_longctx/v1 schema and its
+    invariants (replay mask HBM bytes identically 0; premask traffic
+    q·k-scaling); --json writes BENCH_longctx.json. Returns a process
+    exit code."""
+    from benchmarks import longctx_bench
+    payload = longctx_bench.longctx_payload()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {json_path} (schema {payload['schema']})")
+    print("name,us_per_call,derived")
+    for name, us, derived in longctx_bench.longctx_rows(payload):
+        print(f"{name},{us:.1f},{derived}")
+    violations = longctx_bench.assert_payload_schema(payload)
+    if violations:
+        for v in violations:
+            print(f"SCHEMA VIOLATION: {v}")
+        return 1
+    if smoke:
+        print(f"longctx smoke OK: schema {payload['schema']}, replay "
+              "mask_hbm_bytes=0 at every context, premask q·k-scaling")
+    return 0
+
+
 def run_smoke() -> int:
     """--smoke: one tiny MoE and one dense block per site, plus a schema
     assertion on every emitted record. Returns a process exit code."""
@@ -189,10 +225,17 @@ def main() -> None:
                     help="decode-engine trace bench + spec-decode "
                          "zero-RNG proof; combine with --smoke for the "
                          "CI schema gate or --json BENCH_serve.json")
+    ap.add_argument("--longctx", action="store_true",
+                    help="32k/64k/128k premask-vs-replay mask-traffic "
+                         "table (analytic); combine with --smoke for "
+                         "the CI schema gate or --json "
+                         "BENCH_longctx.json")
     args = ap.parse_args()
     if args.lint_only:
         from repro.analysis import lint
         raise SystemExit(lint.main(["--jaxpr", "off", "-q"]))
+    if args.longctx:
+        raise SystemExit(run_longctx(args.smoke, args.json))
     if args.serve:
         raise SystemExit(run_serve(args.smoke, args.json))
     if args.smoke:

@@ -25,6 +25,19 @@ fi
 # BENCH JSON schema assertion + the zero-RNG spec-verify proof
 python -m benchmarks.run --serve --smoke
 
+# long-context lane: 32k-128k premask-vs-replay mask-traffic table,
+# schema-asserted (replay mask HBM bytes identically 0; premask
+# traffic q·k-scaling)
+python -m benchmarks.run --longctx --smoke
+
 # per-topology lint: every cell re-proven on 2-way data- and model-axis
-# layouts (MS-C4 shard-window tiling; N-dim-sharded host GEMM)
+# layouts (MS-C4 shard-window tiling; N-dim-sharded host GEMM) —
+# replay-planned (HOW_REPLAY) cells included since the schedule
+# compiler plans replay wherever the feasibility gates hold
 python -m repro.analysis.lint --jaxpr off -q --topologies 1,2
+
+# replay negative control: a drifted consumer counter base must trip
+# MS-C1 (exit 1 = caught by the right rule)
+python -m repro.analysis.lint --mutate replay-counter-drift >/dev/null \
+    && { echo "replay-counter-drift NOT caught"; exit 1; } ||
+    [[ $? -eq 1 ]]

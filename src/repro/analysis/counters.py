@@ -17,9 +17,15 @@ schedule is mask-safe iff, per (layer, step) identity,
 All of that is static data: this module symbolically enumerates the
 counter intervals each ``HostAssignment`` will emit — fused dense grids,
 grouped (e, i, j) linearizations, the standalone kernel's
-(BH, q32, k)-block grid, carried pipelines, shard windows — and proves
-the properties by interval arithmetic. No kernel (interpret or
-otherwise) executes.
+(BH, q32, k)-block grid, the flash kernels' in-register replay grid,
+carried pipelines, shard windows — and proves the properties by
+interval arithmetic. No kernel (interpret or otherwise) executes.
+
+Replay-planned cells (HOW_REPLAY) consume no emitted plane: the
+consumer-side derivation is emitted as the layer's one live draw, and
+any retained run-and-discard host plane is marked ``dropped`` — its
+tiling and salt are still proven (the RNG really draws), but it does
+not count toward the one-draw-per-consumer linkage.
 """
 from __future__ import annotations
 
@@ -72,7 +78,12 @@ class MaskEmission:
     blocks: Tuple[Block, ...]
     rows_valid: int               # local plane: b_loc * h_loc * sq32
     sk: int
-    dropped: bool = False         # tail emission past the last layer
+    # plane never consumed: a tail emission past the last layer, or a
+    # retained run-and-discard host on a replay-planned cell (the RNG
+    # still draws — tiling/salt are still proven — but the bits are
+    # discarded, so it does not count toward the one-draw-per-consumer
+    # linkage)
+    dropped: bool = False
     infeasible: bool = False      # planned fused, but the grid can't host
 
     def describe(self) -> str:
@@ -184,10 +195,41 @@ def _standalone_blocks(cfg: ModelConfig, sched: DropoutSchedule
     return tuple(blocks), b_loc * h_loc * sq32
 
 
+def _replay_blocks(cfg: ModelConfig, sched: DropoutSchedule,
+                   block_q: int = 128, block_k: int = 128
+                   ) -> Tuple[Tuple[Block, ...], int]:
+    """The flash-attention consumer's replay grid: one in-register
+    tile_keep_mask derivation per (bh, q-block, k-block) kernel cell,
+    each covering (block_q // 32) packed rows x block_k cols of the
+    local plane (models/attention runs the kernels at 128x128). Proving
+    this grid exactly tiles the plane is the replay analogue of proving
+    a producer's emission grid double-draws nothing."""
+    seq = sched.seq
+    sh = sched.shard
+    shard_local = sh.policy_installed and sh.active
+    b_loc = sched.batch // sh.batch_shards if shard_local else sched.batch
+    h_loc = (cfg.n_heads // sh.head_shards if shard_local
+             else cfg.n_heads)
+    sq32 = seq // 32
+    rows_blk = block_q // 32
+    n_q = seq // block_q
+    n_k = seq // block_k
+    blocks: List[Block] = []
+    s = 0
+    for bh in range(b_loc * h_loc):
+        for qi in range(n_q):
+            r0 = bh * sq32 + qi * rows_blk
+            for ki in range(n_k):
+                blocks.append((s, r0, r0 + rows_blk, ki * block_k,
+                               (ki + 1) * block_k))
+                s += 1
+    return tuple(blocks), b_loc * h_loc * sq32
+
+
 def _emission(cfg: ModelConfig, sched: DropoutSchedule, *,
               producer_layer: int, target_layer: int, site: str,
               how: str, shard_local: bool,
-              cache: Dict) -> MaskEmission:
+              cache: Dict, dropped: bool = False) -> MaskEmission:
     """Resolve one planned emission to counter space. ``cache`` shares
     block tuples across the (periodic) layers of one schedule."""
     key = (site, how,
@@ -204,6 +246,8 @@ def _emission(cfg: ModelConfig, sched: DropoutSchedule, *,
                                          grouped=True)
         elif how == producer.HOW_STANDALONE:
             blocks, rows = _standalone_blocks(cfg, sched)
+        elif how == producer.HOW_REPLAY:
+            blocks, rows = _replay_blocks(cfg, sched)
         else:                      # HOW_XLA: one monolithic draw
             sh = sched.shard
             shard_ok = sh.policy_installed and sh.active and shard_local
@@ -222,7 +266,7 @@ def _emission(cfg: ModelConfig, sched: DropoutSchedule, *,
         windows=_shard_windows(cfg, sched, shard_local),
         blocks=blocks if blocks is not None else (),
         rows_valid=rows, sk=sched.seq,
-        dropped=target_layer >= cfg.n_layers,
+        dropped=dropped or target_layer >= cfg.n_layers,
         infeasible=blocks is None)
 
 
@@ -236,7 +280,25 @@ def schedule_emissions(cfg: ModelConfig, sched: DropoutSchedule
     cache: Dict = {}
     sh = sched.shard
     for a in sched.assignments:
-        if a.consumes and a.site not in CARRIED_DROPOUT_SITES:
+        if a.consumes and a.how == producer.HOW_REPLAY:
+            # replay-planned consumer: the flash kernels re-derive the
+            # plane in-register from position-based counters. Emit the
+            # consumer-side derivation as this layer's (only live)
+            # draw — the tiling proof covers the kernel replay grid.
+            out.append(_emission(
+                cfg, sched, producer_layer=a.layer,
+                target_layer=a.layer, site=a.site, how=a.how,
+                shard_local=a.sharded, cache=cache))
+            if a.host_how and a.site not in CARRIED_DROPOUT_SITES:
+                # retained run-and-discard in-layer host (qkv): its RNG
+                # still draws under the GEMM (tiling/salt still proven)
+                # but the bits are discarded before consumption
+                out.append(_emission(
+                    cfg, sched, producer_layer=a.layer,
+                    target_layer=a.layer, site=a.site, how=a.host_how,
+                    shard_local=sh.policy_installed and sh.active,
+                    cache=cache, dropped=True))
+        elif a.consumes and a.site not in CARRIED_DROPOUT_SITES:
             # in-layer producer (xla / qkv) or the standalone bootstrap:
             # emits its OWN layer's mask
             out.append(_emission(
@@ -246,14 +308,20 @@ def schedule_emissions(cfg: ModelConfig, sched: DropoutSchedule
                 shard_local=a.sharded, cache=cache))
         if a.emit_site is not None:
             # carried pipeline: this block hosts layer
-            # (a.layer + emit_stride)'s mask under one of its GEMMs
+            # (a.layer + emit_stride)'s mask under one of its GEMMs.
+            # When the target consumes by replay the plane is a retained
+            # run-and-discard host (never consumed) — mark it dropped.
+            tgt = a.layer + a.emit_stride
+            tgt_replay = (tgt < cfg.n_layers
+                          and sched.assignments[tgt].how
+                          == producer.HOW_REPLAY)
             out.append(_emission(
                 cfg, sched, producer_layer=a.layer,
-                target_layer=a.layer + a.emit_stride, site=a.emit_site,
+                target_layer=tgt, site=a.emit_site,
                 how=a.emit_how,
                 shard_local=(a.emit_how != producer.HOW_XLA
                              and sh.policy_installed and sh.active),
-                cache=cache))
+                cache=cache, dropped=tgt_replay))
     return tuple(out)
 
 
@@ -354,6 +422,10 @@ def _check_consumer_linkage(sched: DropoutSchedule,
     found: List[rules.Finding] = []
     by_target: Dict[int, List[MaskEmission]] = {}
     for em in emissions:
+        if em.dropped:
+            # run-and-discard plane: RNG draws but nothing consumes the
+            # bits, so it is neither a live draw nor a stride target
+            continue
         by_target.setdefault(em.target_layer, []).append(em)
     for a in sched.assignments:
         if not a.consumes:
@@ -383,16 +455,24 @@ def _check_consumer_linkage(sched: DropoutSchedule,
                 layer=a.layer, other_layer=ems[0].producer_layer))
         if a.site in CARRIED_DROPOUT_SITES and a.producer >= 0:
             p = sched.assignments[a.producer]
-            if p.emit_site is None \
-                    or p.layer + p.emit_stride != a.layer:
-                tgt = (p.layer + p.emit_stride if p.emit_site is not None
-                       else None)
+            if p.emit_site is None:
+                # a replay consumer tolerates a cleared pipeline (it
+                # re-derives in-register); a materialized one does not
+                if a.how != producer.HOW_REPLAY:
+                    found.append(rules.Finding(
+                        rules.STRIDE_MISMATCH,
+                        f"L{a.layer} consumes from L{a.producer} but "
+                        "that block's emission does not exist",
+                        layer=a.producer, other_layer=a.layer))
+            elif p.layer + p.emit_stride != a.layer:
+                # applies even under replay: a retained run-and-discard
+                # host is only contract-identical if its pipeline still
+                # lands on the consumer it was planned for
                 found.append(rules.Finding(
                     rules.STRIDE_MISMATCH,
                     f"L{a.layer} consumes from L{a.producer} but that "
-                    "block's emission "
-                    + (f"targets L{tgt}" if tgt is not None
-                       else "does not exist"),
+                    f"block's emission targets "
+                    f"L{p.layer + p.emit_stride}",
                     layer=a.producer, other_layer=a.layer))
     return found
 
@@ -474,6 +554,11 @@ def corrupt_emissions(emissions: Tuple[MaskEmission, ...], kind: str
                           replaced by a copy of another's, so one tile
                           of the (B, H) plane is double-drawn and
                           another never drawn
+      "replay-counter-drift" — a replay consumer re-derives from a
+                          drifted counter base (bh_offset off by one):
+                          its in-register draw no longer coincides with
+                          the planned draw, so the target layer's bits
+                          come from two disagreeing counter windows
     """
     if not emissions:
         raise ValueError("no emissions to corrupt (inert schedule)")
@@ -503,6 +588,24 @@ def corrupt_emissions(emissions: Tuple[MaskEmission, ...], kind: str
                 "topology first")
         mutated = dataclasses.replace(
             em, windows=(em.windows[0], em.windows[0]) + em.windows[2:])
+    elif kind == "replay-counter-drift":
+        # the consumer's kernels replay from a drifted counter base:
+        # alongside the planned draw the target now sees a second,
+        # disagreeing derivation — a double draw of its counter window
+        for idx, em in enumerate(emissions):
+            if em.how == producer.HOW_REPLAY:
+                break
+        else:
+            raise ValueError(
+                "replay-counter-drift needs a replay-planned cell "
+                "(HOW_REPLAY consumption); compile with "
+                "attn_impl='pallas' on a replay-feasible schedule "
+                "first")
+        w = em.windows[0]
+        drifted = dataclasses.replace(
+            em, windows=(dataclasses.replace(
+                w, bh_offset=w.bh_offset + 1),) + em.windows[1:])
+        return emissions[:idx] + (em, drifted) + emissions[idx + 1:]
     else:
         raise ValueError(f"unknown corruption {kind!r}")
     return emissions[:idx] + (mutated,) + emissions[idx + 1:]

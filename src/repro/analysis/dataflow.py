@@ -27,6 +27,13 @@ Violations:
   MS-D3 mask-token-gather        tainted data operand of gather /
                                 scatter / sort (token-identity routing;
                                 PR 4's MoE-dispatch invariant)
+  MS-D4 mask-operand-on-replay   a mask-shaped plane is an operand of
+                                any pallas_call while the schedule is
+                                replay-planned — replay kernels take a
+                                (4,) seed-salt word and re-derive keep
+                                bits in-register, so a plane operand
+                                means the zero-HBM contract degraded
+                                to premask traffic
 """
 from __future__ import annotations
 
@@ -101,11 +108,12 @@ class _Walker:
     the final pass records findings."""
 
     def __init__(self, shapes: Set[Tuple[int, ...]], sk: int, sq32: int,
-                 check_residuals: bool):
+                 check_residuals: bool, replay: bool = False):
         self.shapes = shapes
         self.sk = sk
         self.sq32 = sq32
         self.check_residuals = check_residuals
+        self.replay = replay
         self.findings: List[rules.Finding] = []
         self.eqns = 0
 
@@ -157,6 +165,19 @@ class _Walker:
                     f"packed mask bits are data operand of `{name}` — "
                     "position-keyed bits routed by token identity "
                     "(MoE-dispatch permutation invariant)")
+            if self.replay and name == "pallas_call":
+                # zero-HBM contract: replay kernels take a (4,)
+                # seed-salt word, never a packed plane
+                for x in eqn.invars:
+                    if _is_mask_aval(getattr(x, "aval", None),
+                                     self.shapes, self.sk, self.sq32):
+                        self._finding(
+                            record, rules.MASK_OPERAND_REPLAY,
+                            "packed mask plane "
+                            f"{tuple(x.aval.shape)} is an operand of a "
+                            "pallas_call on a replay-planned schedule "
+                            "— zero-HBM replay degraded to premask "
+                            "traffic")
 
             out_t = self._eqn_taint(eqn, in_t, record)
             for i, v in enumerate(eqn.outvars):
@@ -258,7 +279,7 @@ def analyze_jaxpr(closed, cfg: ModelConfig, sched: DropoutSchedule, *,
     """Walk one traced jaxpr for mask-scope violations."""
     shapes = mask_shapes(cfg, sched)
     walker = _Walker(shapes, sched.seq, sched.seq // 32,
-                     check_residuals)
+                     check_residuals, replay=sched.replay)
     jaxpr = closed.jaxpr if isinstance(closed, jcore.ClosedJaxpr) \
         else closed
     out_t = walker.walk(jaxpr, [False] * len(jaxpr.invars))

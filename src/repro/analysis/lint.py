@@ -44,7 +44,8 @@ JAXPR_BATCH = 2
 JAXPR_SEQ = 256
 
 MUTATIONS = ("counter-overlap", "emission-gap", "shard-window",
-             "stride", "residual-leak", "reshard-window")
+             "stride", "residual-leak", "reshard-window",
+             "replay-counter-drift")
 _MUTATION_RULE = {
     "counter-overlap": rules.COUNTER_OVERLAP,
     "emission-gap": rules.EMISSION_GAP,
@@ -52,6 +53,9 @@ _MUTATION_RULE = {
     "stride": rules.STRIDE_MISMATCH,
     "residual-leak": rules.MASK_RESIDUAL_LEAK,
     "reshard-window": rules.SHARD_WINDOW_MISMATCH,
+    # a drifted replay consumer no longer coincides with the planned
+    # draw: the target's counter window is drawn twice -> MS-C1
+    "replay-counter-drift": rules.COUNTER_OVERLAP,
 }
 
 

@@ -45,11 +45,18 @@ MASK_COLLECTIVE_CROSSING = "MS-D2:mask-collective-crossing"
 # sort): bits are position-keyed, so routing them by token identity
 # (e.g. MoE dispatch) silently permutes the counter space.
 MASK_TOKEN_GATHER = "MS-D3:mask-token-gather"
+# A mask-shaped plane is an operand of a pallas_call on a
+# replay-planned schedule. Replay's contract is zero mask bytes in HBM:
+# the attention kernels re-derive keep bits in-register from a (4,)
+# seed-salt word, so any packed plane reaching a kernel as an operand
+# means the zero-HBM path silently degraded to premask traffic.
+MASK_OPERAND_REPLAY = "MS-D4:mask-operand-on-replay"
 
 ALL_RULES = (
     COUNTER_OVERLAP, EMISSION_GAP, SALT_COLLISION,
     SHARD_WINDOW_MISMATCH, STRIDE_MISMATCH, REGION_MISMATCH,
     MASK_RESIDUAL_LEAK, MASK_COLLECTIVE_CROSSING, MASK_TOKEN_GATHER,
+    MASK_OPERAND_REPLAY,
 )
 
 

@@ -24,9 +24,17 @@ the executors the model calls with the planned ``how``:
                        before attention)
   "xla"              — XLA-generated bits (non-Pallas path / 8-bit
                        Philox scheme, which only the XLA producer knows)
+  "replay"           — consumer-side: no plane is materialized at all;
+                       the flash-attention fwd/bwd kernels re-derive
+                       each tile's keep bits from the SAME position-
+                       based counters (zero mask HBM). Planned by the
+                       schedule whenever the counter tiling is exactly
+                       reconstructible (replay_unsupported_reason); a
+                       gemm-hosted producer is retained run-and-discard
 
 Fallback chain for a grouped host: gemm_rng_grouped → standalone (the
 kernel's own layout check stays authoritative at run time) → xla.
+Fallback chain for replay consumption: replay → premask → xla.
 
 With a sharding policy installed, the kernel producers run SHARD-LOCAL
 inside ``compat.shard_map``: each shard generates its (b_loc, h_loc)
@@ -67,6 +75,13 @@ HOW_GEMM = "gemm_rng"
 HOW_GEMM_GROUPED = "gemm_rng_grouped"
 HOW_STANDALONE = "standalone"
 HOW_XLA = "xla"
+# Consumer-side realization: the flash-attention kernels replay the
+# plan's position-based Philox counters in-register (mode="replay") and
+# no packed plane is materialized for the consumer — zero mask HBM on
+# the attention path. A gemm-hosted producer is RETAINED run-and-discard
+# (HostAssignment.host_how) so the RNG still hides under the GEMM and
+# the bits stay contract-identical to what the consumer derives.
+HOW_REPLAY = "replay"
 
 # interpret-mode-friendly caps, matching the fused kernel's defaults
 _BLOCK_M_CAP = 256
@@ -145,6 +160,27 @@ def mask_kernel_unsupported_reason(plan: DropoutPlan, sq: int, sk: int,
         return f"sk={sk} breaks the {_PHILOX_COLS_CAP}-column tiling"
     if fused and sk % min(_MASK_COLS_CAP, sk):
         return f"sk={sk} breaks the {_MASK_COLS_CAP}-column mask blocks"
+    return None
+
+
+def replay_unsupported_reason(plan: DropoutPlan, sq: int, sk: int,
+                              attn_impl: str = "pallas"
+                              ) -> Optional[str]:
+    """Why the flash-attention consumer cannot replay this plan's
+    counters in-register (mode="replay") — None when it can. Replay is
+    exact only when the consumer reconstructs the producer's counter
+    tiling bit-for-bit: the 32-bit Philox scheme (8-bit planes are an
+    XLA-only byte layout with no tile counters) on the flash kernels'
+    128x128 grid. The runtime fallback chain on a refused cell is
+    replay -> premask -> xla (models/attention.attn_apply)."""
+    if plan.cfg.attn_replay == "off":
+        return "disabled by plan (attn_replay=off)"
+    if attn_impl != "pallas":
+        return "impl != pallas (no in-kernel counter replay)"
+    if plan.cfg.philox_bits != 32:
+        return f"philox_bits={plan.cfg.philox_bits} (XLA-only scheme)"
+    if sq % 128 or sk % 128:
+        return f"seq ({sq}, {sk}) not 128-tileable for the flash kernels"
     return None
 
 

@@ -44,6 +44,7 @@ HOW_GEMM = producer.HOW_GEMM
 HOW_GEMM_GROUPED = producer.HOW_GEMM_GROUPED
 HOW_STANDALONE = producer.HOW_STANDALONE
 HOW_XLA = producer.HOW_XLA
+HOW_REPLAY = producer.HOW_REPLAY
 
 _ATTN = (AttentionKind.FULL, AttentionKind.LOCAL)
 
@@ -90,8 +91,15 @@ class HostAssignment:
                  in-layer sites, the previous attention layer for
                  carried sites, -1 for the standalone bootstrap
       how      — planned physical producer (HOW_GEMM / HOW_STANDALONE /
-                 HOW_XLA)
+                 HOW_XLA), or HOW_REPLAY: the flash-attention consumer
+                 re-derives the bits in-register from the plan's
+                 counters and NO plane is materialized for this layer
+      host_how — replay only: the retained run-and-discard host
+                 realization (HOW_GEMM / HOW_GEMM_GROUPED — the GEMM
+                 still hides the RNG; "" = no host GEMM retained)
       sharded  — production runs shard-local inside compat.shard_map
+                 (for HOW_REPLAY: consumption replays shard-local
+                 counter windows inside the attention shard_map)
       reason   — why ``how`` degraded from the fused kernel ("" = fused
                  or the site never targets the kernel)
 
@@ -107,6 +115,7 @@ class HostAssignment:
     site: str = "none"
     producer: int = -1
     how: str = HOW_XLA
+    host_how: str = ""
     sharded: bool = False
     reason: str = ""
     emit_site: Optional[str] = None
@@ -146,6 +155,14 @@ class DropoutSchedule:
     @property
     def sharded(self) -> bool:
         return any(a.sharded for a in self.assignments)
+
+    @property
+    def replay(self) -> bool:
+        """True when consumption is counter-replay (zero-HBM masks):
+        the flash kernels re-derive bits in-register, no plane is
+        carried or fed to attention. Uniform across consumers by
+        construction (the feasibility gates are schedule-global)."""
+        return any(a.how == HOW_REPLAY for a in self.assignments)
 
     @property
     def first_consumer(self) -> int:
@@ -229,6 +246,8 @@ class DropoutSchedule:
                    else "in-layer")
             row = (f"  L{a.layer:<3d} {a.kind:<9s} "
                    f"mask<-{src}:{a.site} how={a.how}")
+            if a.host_how:
+                row += f" host={a.host_how}"
             if a.sharded:
                 row += " shard-local"
             if a.reason:
@@ -267,6 +286,7 @@ class DropoutSchedule:
                 {"layer": a.layer, "kind": a.kind, "site": a.site,
                  "producer": a.producer, "how": a.how,
                  "sharded": a.sharded,
+                 **({"host_how": a.host_how} if a.host_how else {}),
                  **({"reason": a.reason} if a.reason else {}),
                  **({"emit_site": a.emit_site,
                      "emit_to": a.layer + a.emit_stride,
@@ -538,6 +558,17 @@ def _compile(cfg: ModelConfig, plan_cfg: DropoutPlanConfig, batch: int,
                 emit_site=emit_site, emit_stride=stride, emit_how=e_how,
                 emit_reason=e_reason))
 
+    # -------- zero-HBM upgrade: counter replay at the consumer --------
+    # Whenever the flash kernels can reconstruct the producer's counter
+    # tiling exactly, consumption flips to HOW_REPLAY: no plane is
+    # materialized, carried, or fed to attention. A gemm-hosted producer
+    # is retained run-and-discard (host_how) so the RNG still hides
+    # under the GEMM; standalone/XLA emissions — whose only purpose was
+    # the plane — are dropped entirely.
+    if _replay_reason(plan, cfg, seq, shard, attn_impl) is None:
+        consume_sharded = shard.policy_installed and shard.active
+        asgs = [_replay_assignment(a, consume_sharded) for a in asgs]
+
     sched = DropoutSchedule(
         model=cfg.name, plan=plan_cfg, resolved_site=site, batch=batch,
         seq=seq, attn_impl=attn_impl, shard=shard, carried=carried,
@@ -545,6 +576,46 @@ def _compile(cfg: ModelConfig, plan_cfg: DropoutPlanConfig, batch: int,
         moe_seq_dispatch=moe_seq_dispatch)
     _check_scan_periodicity(cfg, sched)
     return sched
+
+
+def _replay_reason(plan: DropoutPlan, cfg: ModelConfig, seq: int,
+                   shard: ShardInfo, attn_impl: str) -> Optional[str]:
+    """Why this schedule cannot plan HOW_REPLAY consumption — None when
+    it can. On top of the kernel-level predicate
+    (producer.replay_unsupported_reason) the planner refuses meshes
+    where the pallas attention path itself would fall back to XLA
+    (models/attention._pallas_ok): a replay plan the runtime cannot
+    honor would make the MS-D4 no-mask-operand proof fail."""
+    reason = producer.replay_unsupported_reason(plan, seq, seq,
+                                                attn_impl=attn_impl)
+    if reason is not None:
+        return reason
+    if (shard.policy_installed and shard.head_shards > 1
+            and cfg.n_kv_heads % shard.head_shards):
+        return ("head-sharded mesh without kv-divisible heads "
+                "(pallas attention falls back to XLA)")
+    return None
+
+
+def _replay_assignment(a: HostAssignment,
+                       consume_sharded: bool) -> HostAssignment:
+    """Rewrite one assignment for counter-replay consumption. The
+    consuming side becomes HOW_REPLAY (host_how records the retained
+    run-and-discard GEMM host, if any); emissions that only existed to
+    materialize the plane (standalone / XLA) are cleared, gemm-hosted
+    emissions stay (the RNG-under-GEMM overlap is the paper's benefit
+    and keeps the bits contract-identical on the producer side)."""
+    changes = {}
+    if a.consumes:
+        host_how = (a.how if a.how in (HOW_GEMM, HOW_GEMM_GROUPED)
+                    else "")
+        changes.update(how=HOW_REPLAY, host_how=host_how,
+                       sharded=consume_sharded, reason="")
+    if a.emit_site is not None and a.emit_how not in (HOW_GEMM,
+                                                      HOW_GEMM_GROUPED):
+        changes.update(emit_site=None, emit_stride=0, emit_how="",
+                       emit_reason="")
+    return dataclasses.replace(a, **changes) if changes else a
 
 
 def _resolve_auto(cfg: ModelConfig, plan: DropoutPlan, batch: int,
@@ -580,6 +651,7 @@ def _scan_static_key(a: HostAssignment):
     return (a.kind, a.consumes, "carry" if carries else a.site,
             None if carries else a.how,
             None if carries else a.sharded,
+            a.how == HOW_REPLAY, None if carries else a.host_how,
             a.emit_site, a.emit_stride, a.emit_how, a.emit_reason)
 
 
@@ -661,7 +733,8 @@ def inline_assignment(model_cfg: ModelConfig, plan: DropoutPlan,
     if not sched.active:
         return HostAssignment(layer=0, kind="full")
     asg = sched.for_layer(sched.first_consumer)
-    if asg.site in CARRIED_DROPOUT_SITES:
+    if asg.site in CARRIED_DROPOUT_SITES and asg.how != HOW_REPLAY:
+        # (a replay consumer needs no carry at all — keep it as-is)
         how, sh, reason = _standalone_capability(
             plan, sched.shard, seq, attn_impl)
         asg = dataclasses.replace(

@@ -10,6 +10,19 @@
                      standalone philox kernel or the fused GEMM+RNG kernel)
                      and performs only the cheap element-dropping step
                      (~12% overhead in the paper's measurements).
+    mode "replay"  — zero-HBM consumption (the cuDNN SDP seed+offset
+                     design): the kernel re-derives each (bq, bk) tile's
+                     keep bits in-register from the SAME position-based
+                     Philox counters the producer was planned with. No
+                     mask operand exists — the only dropout state is the
+                     (4,) uint32 [key_lo, key_hi, salt, bh_offset] SMEM
+                     operand (``philox_common.seed_salt_smem``), so seeds
+                     may be traced and shard-local consumers replay
+                     global-position counters via ``global_bh``. Unlike
+                     "fused" (static literals, bits drawn under softmax
+                     pressure), replay is the planned realization: bits
+                     are bit-identical to the materialized premask plane
+                     while the mask's q·k-scaling HBM traffic drops to 0.
 
 Tiling: grid (B, H, SQ/bq, SK/bk), k-minor so the online-softmax running
 stats (m, l, acc) live in VMEM scratch across the k sweep. Causal and
@@ -30,6 +43,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.philox_common import (
+    global_bh,
+    philox4x32,
+    seed_salt_smem,
     seed_to_key,
     threshold_from_p,
     tile_keep_mask,
@@ -44,9 +60,11 @@ def _flash_kernel(*refs, bq: int, bk: int, d: int, n_heads: int,
                   local_window: int, q_offset: int, mode: str,
                   threshold: int, inv_keep: float, salt: int,
                   k0: int, k1: int, rounds: int, out_dtype,
-                  with_lse: bool = False):
+                  heads_global: int = 0, with_lse: bool = False):
+    # in "replay" mode the mask_ref slot holds the (4,) uint32 SMEM
+    # seed-salt operand instead of a packed-bit block
     lse_ref = None
-    if mode == "premask":
+    if mode in ("premask", "replay"):
         if with_lse:
             (q_ref, k_ref, v_ref, mask_ref, o_ref, lse_ref, m_scr, l_scr,
              acc_scr) = refs
@@ -120,6 +138,13 @@ def _flash_kernel(*refs, bq: int, bk: int, d: int, n_heads: int,
             keep = tile_keep_mask(q_start, k_start, bh, salt, k0, k1,
                                   threshold, bq, bk, rounds)
             p_acc = jnp.where(keep, p, 0.0)
+        elif mode == "replay":
+            bh = global_bh(b * n_heads + h, n_heads, heads_global,
+                           mask_ref[3])
+            keep = tile_keep_mask(q_start, k_start, bh, mask_ref[2],
+                                  mask_ref[0], mask_ref[1], threshold,
+                                  bq, bk, rounds)
+            p_acc = jnp.where(keep, p, 0.0)
         elif mode == "premask":
             packed = mask_ref[0, 0]                   # (bq//32, bk)
             keep = unpack_bits_q32(packed, bq)
@@ -143,6 +168,58 @@ def _flash_kernel(*refs, bq: int, bk: int, d: int, n_heads: int,
             lse_ref[...] = lse[None, None].astype(jnp.float32)
 
 
+def _check_premask(mask_packed, batch, n_heads, sq, sk):
+    """Fail fast on a mis-packed premask plane (the alternative is an
+    opaque Pallas grid/BlockSpec error deep inside pallas_call)."""
+    if mask_packed is None:
+        raise ValueError("premask mode requires mask_packed")
+    if sq % 32:
+        raise ValueError(
+            f"premask mode requires SQ % 32 == 0 (bit packing); got "
+            f"SQ={sq}")
+    expect = (batch, n_heads, sq // 32, sk)
+    got = tuple(mask_packed.shape)
+    if got != expect or mask_packed.dtype != jnp.uint32:
+        raise ValueError(
+            f"premask mask_packed must be (B, H, SQ//32, SK) uint32 = "
+            f"{expect}, got shape {got} dtype {mask_packed.dtype} — "
+            "pack with philox.philox_dropout_mask / "
+            "dropout_rng.packed_mask")
+    return mask_packed
+
+
+def _check_replay_operand(seed_salt):
+    """The replay-mode mask slot holds the (4,) uint32 seed-salt operand
+    [key_lo, key_hi, salt, bh_offset] (philox_common.seed_salt_smem)."""
+    if tuple(seed_salt.shape) != (4,) or seed_salt.dtype != jnp.uint32:
+        raise ValueError(
+            "replay mode takes the (4,) uint32 [key_lo, key_hi, salt, "
+            "bh_offset] operand (philox_common.seed_salt_smem) in the "
+            f"mask_packed slot, got shape {tuple(seed_salt.shape)} dtype "
+            f"{seed_salt.dtype}")
+    return seed_salt
+
+
+def replay_keep_plane(seed_salt, batch: int, n_heads: int, sq: int,
+                      sk: int, dropout_p: float, rounds: int = 7,
+                      heads_global: int = 0) -> jnp.ndarray:
+    """(B, H, SQ, SK) bool keep plane replayed from the (4,) seed-salt
+    operand — the vectorized XLA mirror of the kernels' in-register tile
+    derivation (bit-identical to unpacking the premask plane). Used by
+    the reference backward and the replay-mode tests."""
+    assert sq % 4 == 0
+    hg = heads_global or n_heads
+    thr = np.uint32(threshold_from_p(dropout_p))
+    lb = jax.lax.broadcasted_iota(jnp.uint32, (batch * n_heads, 1, 1), 0)
+    bh = global_bh(lb, n_heads, hg, seed_salt[3])
+    q4 = jax.lax.broadcasted_iota(jnp.uint32, (1, sq // 4, 1), 1)
+    kk = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, sk), 2)
+    w = philox4x32(kk, q4, bh, seed_salt[2], seed_salt[0], seed_salt[1],
+                   rounds)
+    u = jnp.stack(w, axis=2).reshape(batch * n_heads, sq, sk)
+    return (u >= thr).reshape(batch, n_heads, sq, sk)
+
+
 def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         mask_packed: Optional[jnp.ndarray] = None,
                         *, causal: bool = True, local_window: int = 0,
@@ -151,19 +228,27 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         scale: Optional[float] = None,
                         block_q: int = 128, block_k: int = 128,
                         interpret: bool = True,
+                        heads_global: int = 0,
                         return_lse: bool = False):
     """Forward flash attention. q: (B,H,SQ,D); k,v: (B,KV,SK,D).
 
     mode "premask" requires mask_packed (B,H,SQ//32,SK) uint32 from the
-    canonical counter scheme.
+    canonical counter scheme. mode "replay" takes the (4,) uint32
+    seed-salt operand in the mask_packed slot (built from seed/salt when
+    omitted); ``heads_global`` (0 = n_heads) makes a shard-local call
+    replay global-position counters.
     """
     batch, n_heads, sq, d = q.shape
     kv_heads, sk = k.shape[1], k.shape[2]
     assert n_heads % kv_heads == 0
     if mode == "none" or dropout_p == 0.0:
         mode = "none"
-    if mode == "premask" and mask_packed is None:
-        raise ValueError("premask mode requires mask_packed")
+    if mode == "premask":
+        mask_packed = _check_premask(mask_packed, batch, n_heads, sq, sk)
+    elif mode == "replay":
+        if mask_packed is None:
+            mask_packed = seed_salt_smem(seed, salt)
+        mask_packed = _check_replay_operand(mask_packed)
     bq = min(block_q, sq)
     bk = min(block_k, sk)
     assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
@@ -185,6 +270,10 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         in_specs.append(pl.BlockSpec((1, 1, bq // 32, bk),
                                      lambda b, h, qi, ki: (b, h, qi, ki)))
         args.append(mask_packed)
+    elif mode == "replay":
+        # the whole dropout state: 16 bytes of SMEM, not a q*k plane
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        args.append(mask_packed)
 
     kernel = functools.partial(
         _flash_kernel, bq=bq, bk=bk, d=d, n_heads=n_heads,
@@ -193,7 +282,7 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         threshold=threshold_from_p(dropout_p),
         inv_keep=float(1.0 / (1.0 - dropout_p)) if mode != "none" else 1.0,
         salt=salt, k0=k0, k1=k1, rounds=rounds, out_dtype=q.dtype,
-        with_lse=return_lse)
+        heads_global=heads_global or n_heads, with_lse=return_lse)
 
     out_specs = o_spec
     out_shape = jax.ShapeDtypeStruct((batch, n_heads, sq, d), q.dtype)
@@ -225,25 +314,31 @@ def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 @functools.partial(
     jax.custom_vjp,
-    nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11, 12, 13))
+    nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14))
 def flash_attention(q, k, v, mask_packed=None, causal=True, local_window=0,
                     dropout_p=0.0, mode="none", seed=0, salt=0, rounds=7,
-                    block_q=128, block_k=128, interpret=True):
+                    block_q=128, block_k=128, interpret=True,
+                    heads_global=0):
     """Differentiable flash attention (forward = Pallas kernel; backward =
     the mathematically identical reference formulas, reusing the same
-    Philox mask so gradients see the exact dropped elements)."""
+    Philox mask so gradients see the exact dropped elements). In
+    "replay" mode the mask_packed slot carries the (4,) seed-salt
+    operand (it must enter as data — nondiff_argnums can't hold traced
+    seeds) and gets a float0 cotangent like the uint32 mask."""
     return flash_attention_fwd(
         q, k, v, mask_packed, causal=causal, local_window=local_window,
         dropout_p=dropout_p, mode=mode, seed=seed, salt=salt, rounds=rounds,
-        block_q=block_q, block_k=block_k, interpret=interpret)
+        block_q=block_q, block_k=block_k, interpret=interpret,
+        heads_global=heads_global)
 
 
 def _fa_fwd(q, k, v, mask_packed, causal, local_window, dropout_p, mode,
-            seed, salt, rounds, block_q, block_k, interpret):
+            seed, salt, rounds, block_q, block_k, interpret, heads_global):
     out = flash_attention_fwd(
         q, k, v, mask_packed, causal=causal, local_window=local_window,
         dropout_p=dropout_p, mode=mode, seed=seed, salt=salt, rounds=rounds,
-        block_q=block_q, block_k=block_k, interpret=interpret)
+        block_q=block_q, block_k=block_k, interpret=interpret,
+        heads_global=heads_global)
     return out, (q, k, v, mask_packed)
 
 
@@ -256,7 +351,7 @@ def _zero_ct(x):
 
 
 def _fa_bwd(causal, local_window, dropout_p, mode, seed, salt, rounds,
-            block_q, block_k, interpret, res, g):
+            block_q, block_k, interpret, heads_global, res, g):
     from repro.kernels import ref as _ref
     q, k, v, mask_packed = res
     eff_p = 0.0 if mode == "none" else dropout_p
@@ -264,7 +359,11 @@ def _fa_bwd(causal, local_window, dropout_p, mode, seed, salt, rounds,
     def f(q_, k_, v_):
         keep = None
         if eff_p > 0.0:
-            if mask_packed is not None:
+            if mode == "replay":
+                keep = replay_keep_plane(
+                    mask_packed, q_.shape[0], q_.shape[1], q_.shape[2],
+                    k.shape[2], dropout_p, rounds, heads_global)
+            elif mask_packed is not None:
                 b, h, sq32, sk = mask_packed.shape
                 keep = jax.vmap(jax.vmap(
                     lambda m: unpack_bits_q32(m, sq32 * 32)))(mask_packed)
@@ -288,42 +387,46 @@ flash_attention.defvjp(_fa_fwd, _fa_bwd)
 
 @functools.partial(
     jax.custom_vjp,
-    nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11, 12, 13))
+    nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14))
 def flash_attention_mosaic(q, k, v, mask_packed=None, causal=True,
                            local_window=0, dropout_p=0.0, mode="none",
                            seed=0, salt=0, rounds=7, block_q=128,
-                           block_k=128, interpret=True):
+                           block_k=128, interpret=True, heads_global=0):
     """Flash attention with Pallas forward *and* backward kernels —
     nothing O(SQ*SK) ever reaches HBM in either direction. In "premask"
     mode (the paper's overlap technique) the dropout bits come from HBM,
     so no RNG state enters the kernels and seeds may be traced values on
-    the producer side."""
+    the producer side. In "replay" mode even the bits stay out of HBM:
+    fwd and both bwd kernels re-derive them from the (4,) seed-salt
+    operand carried in the mask_packed slot (traced seeds enter as data;
+    the operand gets a float0 cotangent)."""
     return flash_attention_fwd(
         q, k, v, mask_packed, causal=causal, local_window=local_window,
         dropout_p=dropout_p, mode=mode, seed=seed, salt=salt,
         rounds=rounds, block_q=block_q, block_k=block_k,
-        interpret=interpret)
+        interpret=interpret, heads_global=heads_global)
 
 
 def _fam_fwd(q, k, v, mask_packed, causal, local_window, dropout_p, mode,
-             seed, salt, rounds, block_q, block_k, interpret):
+             seed, salt, rounds, block_q, block_k, interpret,
+             heads_global):
     o, lse = flash_attention_fwd(
         q, k, v, mask_packed, causal=causal, local_window=local_window,
         dropout_p=dropout_p, mode=mode, seed=seed, salt=salt,
         rounds=rounds, block_q=block_q, block_k=block_k,
-        interpret=interpret, return_lse=True)
+        interpret=interpret, heads_global=heads_global, return_lse=True)
     return o, (q, k, v, mask_packed, o, lse)
 
 
 def _fam_bwd(causal, local_window, dropout_p, mode, seed, salt, rounds,
-             block_q, block_k, interpret, res, g):
+             block_q, block_k, interpret, heads_global, res, g):
     from repro.kernels.flash_attention_bwd import flash_attention_bwd
     q, k, v, mask_packed, o, lse = res
     dq, dk, dv = flash_attention_bwd(
         q, k, v, o, lse, g, mask_packed, causal=causal,
         local_window=local_window, dropout_p=dropout_p, mode=mode,
         seed=seed, salt=salt, rounds=rounds, block_q=block_q,
-        block_k=block_k, interpret=interpret)
+        block_k=block_k, interpret=interpret, heads_global=heads_global)
     return dq, dk, dv, _zero_ct(mask_packed)
 
 

@@ -15,7 +15,11 @@ P = softmax(S),  O = (K ∘ P / (1-p)) V, so
   dS = P ∘ (dP - D),   D = rowsum(dO ∘ O) = rowsum(P ∘ dP)
 
 The same Philox counters (premask bits or in-kernel regeneration) make
-the gradients see exactly the dropped elements of the forward pass.
+the gradients see exactly the dropped elements of the forward pass. In
+"replay" mode there is no saved mask residual at all: both kernels
+re-derive each tile's keep bits from the (4,) uint32 seed-salt SMEM
+operand carried in the mask slot — identical counters to the forward
+pass, zero mask HBM traffic in the backward re-read.
 """
 from __future__ import annotations
 
@@ -29,6 +33,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.philox_common import (
+    global_bh,
+    seed_salt_smem,
     seed_to_key,
     threshold_from_p,
     tile_keep_mask,
@@ -54,17 +60,24 @@ def _mask_and_p(s, lse_blk, q_start, k_start, bq, bk, causal,
 
 
 def _keep_tile(mode, mask_ref, q_start, k_start, bh, bq, bk, salt, k0, k1,
-               threshold, rounds):
+               threshold, rounds, heads_local=0, heads_global=0):
     if mode == "premask":
         return unpack_bits_q32(mask_ref[0, 0], bq)
+    if mode == "replay":
+        # mask_ref is the (4,) uint32 [k0, k1, salt, bh_offset] SMEM
+        # operand — replay the forward tile's counters in-register
+        bh = global_bh(bh, heads_local, heads_global, mask_ref[3])
+        return tile_keep_mask(q_start, k_start, bh, mask_ref[2],
+                              mask_ref[0], mask_ref[1], threshold, bq, bk,
+                              rounds)
     return tile_keep_mask(q_start, k_start, bh, salt, k0, k1, threshold,
                           bq, bk, rounds)
 
 
 def _dq_kernel(*refs, bq, bk, scale, causal, local_window, q_offset,
                mode, threshold, inv_keep, salt, k0, k1, rounds,
-               out_dtype):
-    if mode == "premask":
+               out_dtype, heads_local=0, heads_global=0):
+    if mode in ("premask", "replay"):
         (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, mask_ref,
          dq_ref, acc) = refs
     else:
@@ -104,10 +117,12 @@ def _dq_kernel(*refs, bq, bk, scale, causal, local_window, q_offset,
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         if mode != "none":
-            keep = _keep_tile(mode, refs[6] if mode == "premask" else None,
+            keep = _keep_tile(mode,
+                              refs[6] if mode != "fused" else None,
                               q_start, k_start,
                               b * pl.num_programs(1) + h, bq, bk, salt,
-                              k0, k1, threshold, rounds)
+                              k0, k1, threshold, rounds,
+                              heads_local, heads_global)
             dp = jnp.where(keep, dp * inv_keep, 0.0)
         ds = p * (dp - delta)
         acc[...] += jax.lax.dot_general(
@@ -121,8 +136,8 @@ def _dq_kernel(*refs, bq, bk, scale, causal, local_window, q_offset,
 
 def _dkv_kernel(*refs, bq, bk, scale, causal, local_window, q_offset,
                 mode, threshold, inv_keep, salt, k0, k1, rounds,
-                out_dtype):
-    if mode == "premask":
+                out_dtype, heads_local=0, heads_global=0):
+    if mode in ("premask", "replay"):
         (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, mask_ref,
          dk_ref, dv_ref, acck, accv) = refs
     else:
@@ -163,10 +178,12 @@ def _dkv_kernel(*refs, bq, bk, scale, causal, local_window, q_offset,
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         if mode != "none":
-            keep = _keep_tile(mode, refs[6] if mode == "premask" else None,
+            keep = _keep_tile(mode,
+                              refs[6] if mode != "fused" else None,
                               q_start, k_start,
                               b * pl.num_programs(1) + h, bq, bk, salt,
-                              k0, k1, threshold, rounds)
+                              k0, k1, threshold, rounds,
+                              heads_local, heads_global)
             p_drop = jnp.where(keep, p * inv_keep, 0.0)
             dp = jnp.where(keep, dp * inv_keep, 0.0)
         else:
@@ -191,15 +208,21 @@ def flash_attention_bwd(q, k, v, o, lse, do,
                         causal=True, local_window=0, dropout_p=0.0,
                         mode="none", seed=0, salt=0, rounds=7,
                         scale=None, block_q=128, block_k=128,
-                        interpret=True) -> Tuple[jnp.ndarray, jnp.ndarray,
+                        interpret=True,
+                        heads_global=0) -> Tuple[jnp.ndarray, jnp.ndarray,
                                                  jnp.ndarray]:
     """Returns (dq, dk, dv). k/v gradients are computed per q-head and
-    group-summed for GQA outside the kernel."""
+    group-summed for GQA outside the kernel. In "replay" mode
+    ``mask_packed`` carries the (4,) uint32 seed-salt operand (built from
+    seed/salt when omitted) and both passes re-derive the forward keep
+    bits from counters — no mask plane is read."""
     batch, n_heads, sq, d = q.shape
     kv_heads, sk = k.shape[1], k.shape[2]
     group = n_heads // kv_heads
     if mode == "none" or dropout_p == 0.0:
         mode = "none"
+    if mode == "replay" and mask_packed is None:
+        mask_packed = seed_salt_smem(seed, salt)
     bq, bk = min(block_q, sq), min(block_k, sk)
     assert sq % bq == 0 and sk % bk == 0
     if scale is None:
@@ -210,7 +233,9 @@ def flash_attention_bwd(q, k, v, o, lse, do,
                   mode=mode, threshold=threshold_from_p(dropout_p),
                   inv_keep=float(1.0 / (1.0 - dropout_p))
                   if mode != "none" else 1.0,
-                  salt=salt, k0=k0, k1=k1, rounds=rounds, out_dtype=q.dtype)
+                  salt=salt, k0=k0, k1=k1, rounds=rounds, out_dtype=q.dtype,
+                  heads_local=n_heads,
+                  heads_global=heads_global or n_heads)
 
     delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
                     axis=-1)  # (B,H,SQ)
@@ -234,6 +259,9 @@ def flash_attention_bwd(q, k, v, o, lse, do,
     if mode == "premask":
         in_specs.append(mask_spec)
         args.append(mask_packed)
+    elif mode == "replay":
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        args.append(mask_packed)
     with jax.named_scope("pallas_kernel_region"):
         dq = pl.pallas_call(
             functools.partial(_dq_kernel, **common),
@@ -252,6 +280,9 @@ def flash_attention_bwd(q, k, v, o, lse, do,
     args = [q, k, v, do, lse, delta]
     if mode == "premask":
         in_specs.append(maskk_spec)
+        args.append(mask_packed)
+    elif mode == "replay":
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
         args.append(mask_packed)
     with jax.named_scope("pallas_kernel_region"):
         dk_h, dv_h = pl.pallas_call(

@@ -142,10 +142,27 @@ def attn_apply(p, x, cfg: ModelConfig, *, kind: AttentionKind,
                                              policy=policy,
                                              attn_impl=impl)
     site = asg.site if overlap else "xla"
+    replay = False
+    if overlap:
+        from repro.core import producer
+        replay = asg.how == producer.HOW_REPLAY
 
     # --- the paper's overlap site: mask produced at a producer GEMM ---
     packed = None
-    if overlap and site == "qkv":
+    if replay:
+        # zero-HBM consumption: the flash kernels re-derive the keep
+        # bits in-register from the plan's counters — no plane is
+        # built or fed here. A retained qkv host (asg.host_how) still
+        # runs its fused GEMM+RNG and the returned plane is discarded
+        # (the RNG stays hidden under the GEMM, bits contract-identical
+        # to what the kernel replays).
+        if site == "qkv" and asg.host_how:
+            q, k, v, _discarded, _how = _project_qkv_fused(
+                p, x, cfg, positions, plan, layer_idx, step,
+                how=asg.host_how, policy=policy)
+        else:
+            q, k, v = _project_qkv(p, x, cfg, positions)
+    elif overlap and site == "qkv":
         q, k, v, packed, _how = _project_qkv_fused(
             p, x, cfg, positions, plan, layer_idx, step, how=asg.how,
             policy=policy)
@@ -168,8 +185,16 @@ def attn_apply(p, x, cfg: ModelConfig, *, kind: AttentionKind,
                                           layer_idx, step)
 
     if impl == "pallas" and _pallas_ok(plan, policy, cfg, s):
-        out = _attn_pallas_sharded(q, k, v, packed, plan, local, policy)
+        out = _attn_pallas_sharded(
+            q, k, v, packed, plan, local, policy,
+            replay_key=(layer_idx, step) if replay else None)
     else:
+        if replay:
+            # fallback chain replay -> premask -> xla: this runtime
+            # cannot replay in-kernel, so regenerate the identical
+            # plane and consume it the premask way
+            packed = plan.precompute_mask(b, cfg.n_heads, s, s,
+                                          layer_idx, step)
         import jax.numpy as _jnp
         out = attention_xla(
             q, k, v, causal=True, local_window=local, plan=plan,
@@ -209,24 +234,44 @@ def _pallas_ok(plan, policy, cfg, s) -> bool:
     return h_ax is None or kv_ax is not None
 
 
-def _attn_pallas_sharded(q, k, v, packed, plan, local, policy):
+def _attn_pallas_sharded(q, k, v, packed, plan, local, policy,
+                         replay_key=None):
     """shard_map over the mesh; each shard runs the Pallas flash kernels
-    (Mosaic on TPU; interpret lowering here)."""
+    (Mosaic on TPU; interpret lowering here). ``replay_key`` =
+    (layer_idx, step) selects mode="replay": the kernels re-derive the
+    keep bits in-register from the plan's counters and the only dropout
+    operand is the 16-byte (4,) uint32 seed-salt vector in SMEM — no
+    mask plane touches HBM. Under a policy each shard folds its global
+    (b, h) window offset into the operand (producer.shard_mask_tile),
+    so shard-local replay equals the global plane's slice exactly."""
     from jax.sharding import PartitionSpec as P
     from repro.kernels import default_interpret
     from repro.kernels.flash_attention import flash_attention_mosaic
 
     p_drop = plan.cfg.p if (plan is not None and plan.enabled) else 0.0
-    mode = "premask" if (packed is not None and p_drop > 0.0) else "none"
+    if replay_key is not None and p_drop > 0.0:
+        mode = "replay"
+    elif packed is not None and p_drop > 0.0:
+        mode = "premask"
+    else:
+        mode = "none"
     rounds = plan.cfg.philox_rounds if plan is not None else 7
     interp = default_interpret()
+    n_heads = q.shape[1]
 
-    def body(q_, k_, v_, m_):
+    def body(q_, k_, v_, m_, heads_global=0):
         return flash_attention_mosaic(
             q_, k_, v_, m_, True, local, p_drop, mode, 0, 0, rounds,
-            128, 128, interp)
+            128, 128, interp, heads_global)
 
-    if policy is None:
+    if mode == "replay":
+        from repro.kernels.philox_common import seed_salt_smem
+        layer_idx, step = replay_key
+        seed_salt = seed_salt_smem(plan.step_seed(step),
+                                   plan.salt(layer_idx))
+        if policy is None:
+            return body(q, k, v, seed_salt)
+    elif policy is None:
         return body(q, k, v, packed if mode == "premask" else None)
 
     mesh = policy.mesh
@@ -237,6 +282,21 @@ def _attn_pallas_sharded(q, k, v, packed, plan, local, policy):
     kvs = P(b_ax,
             policy.mesh_axes_for("kv_heads", k.shape[1]), None, None)
     ms = P(b_ax, h_ax, None, None)
+    if mode == "replay":
+        from repro.core import producer
+        shard = producer.shard_exec(policy, bsz, n_heads)
+        sq, sk = q.shape[2], k.shape[2]
+
+        def rbody(q_, k_, v_, m_):
+            if shard is None:
+                return body(q_, k_, v_, m_, n_heads)
+            _shape, hg, off = producer.shard_mask_tile(
+                shard, bsz, n_heads, sq, sk)
+            return body(q_, k_, v_, m_.at[3].set(off), hg)
+
+        return shard_map(
+            rbody, mesh=mesh, in_specs=(qs, kvs, kvs, P()),
+            out_specs=qs, check_vma=False)(q, k, v, seed_salt)
     if mode == "premask":
         return shard_map(
             body, mesh=mesh, in_specs=(qs, kvs, kvs, ms),

@@ -265,6 +265,13 @@ def block_apply(p, x, cfg, rt: Runtime, kind, tag, layer_idx,
         f, aux, _ = _ffn_forward(p, h2, cfg, rt, tag)
     if emit and not is_attn:
         mask_next = mask_in        # carry rides through mixer-only blocks
+    if mask_next is not None and asg is not None:
+        from repro.core import producer
+        if asg.how == producer.HOW_REPLAY:
+            # replay-planned consumers never read a plane: a retained
+            # gemm-hosted emission ran for the RNG-under-GEMM overlap
+            # only — drop its output here, nothing reaches the carry
+            mask_next = None
     return x + f, aux, mask_next
 
 
@@ -338,7 +345,11 @@ def forward(params, cfg: ModelConfig, rt: Runtime, inputs
     carry_mask = active and sched.carried
     aux_total = jnp.float32(0.0)
     mask_buf = None
-    if carry_mask:
+    if carry_mask and not sched.replay:
+        # replay consumption needs no bootstrap and no carried plane:
+        # the scan still threads the (None) carry slot so retained
+        # gemm-hosted emissions keep their uniform body, but no mask
+        # bit is materialized for the consumers
         from repro.core import producer
         basg = sched.for_layer(sched.first_consumer)
         b, s = x.shape[0], x.shape[1]

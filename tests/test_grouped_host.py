@@ -156,8 +156,11 @@ def test_moe_stack_plans_grouped_hosts(site):
     ZERO standalone/XLA fallbacks for hostable shapes — the dense block
     emits under the dense fused kernel, the MoE blocks under the grouped
     kernel. Only the bootstrap consumption (no producer GEMM exists
-    before the first attention layer) stays standalone, by design."""
-    sched = compile_schedule(_moe_cfg(), _plan_cfg(site), 2, 128,
+    before the first attention layer) stays standalone, by design.
+    (attn_replay="off" pins the materialized-plane pipeline whose host
+    selection this test locks; replay planning lives in test_replay.py.)"""
+    sched = compile_schedule(_moe_cfg(),
+                             _plan_cfg(site, attn_replay="off"), 2, 128,
                              attn_impl="pallas")
     emits = [(a.layer, a.emit_how, a.emit_reason)
              for a in sched.assignments if a.emit_site]
@@ -213,8 +216,11 @@ def test_infeasible_grouped_shapes_report_distinct_reasons():
         n_layers=2, n_heads=32, n_kv_heads=32, head_dim=2,
         moe=MoEConfig(n_experts=2, top_k=1, d_ff_expert=8,
                       first_dense_layers=0, capacity_factor=0.25))
-    sched_r3 = compile_schedule(r3_cfg, _plan_cfg("ffn_up"), 1, 1024,
-                                attn_impl="pallas")
+    # attn_replay="off": at seq=1024 the default plan would replay the
+    # consumer and clear the standalone emission whose reason we check
+    sched_r3 = compile_schedule(r3_cfg,
+                                _plan_cfg("ffn_up", attn_replay="off"),
+                                1, 1024, attn_impl="pallas")
     reasons_r3 = {a.emit_reason for a in sched_r3.assignments
                   if a.emit_site}
     assert any("Region 3" in r and "MoE expert" in r
@@ -229,10 +235,12 @@ def test_first_dense_channel_mix_plans_on_its_own_grid(rng_key):
     """A MoE stack whose first-dense layer carries an RWKV channel-mix
     FFN plans THAT layer on the E=1 channel-mix grid, not the expert
     grid (the block kind is judged per layer) — and the executed
-    pipeline still matches the XLA site bit-for-bit."""
+    pipeline still matches the XLA site bit-for-bit. Planning
+    introspection pins attn_replay="off"; the executed comparison runs
+    the default (replay) plan, which must not move a bit."""
     cfg = _moe_cfg(ffn=FFNKind.RWKV_CHANNEL)
-    sched = compile_schedule(cfg, _plan_cfg("ffn_up"), 2, 128,
-                             attn_impl="pallas")
+    sched = compile_schedule(cfg, _plan_cfg("ffn_up", attn_replay="off"),
+                             2, 128, attn_impl="pallas")
     emits = {a.layer: a for a in sched.assignments if a.emit_site}
     assert emits[0].emit_how == producer.HOW_GEMM_GROUPED, \
         sched.explain()
@@ -241,8 +249,8 @@ def test_first_dense_channel_mix_plans_on_its_own_grid(rng_key):
     # an infeasible first-dense channel-mix shape reports the RWKV
     # reason, not a mislabelled "MoE expert" one
     bad = compile_schedule(_moe_cfg(ffn=FFNKind.RWKV_CHANNEL, d_ff=12),
-                           _plan_cfg("ffn_up"), 2, 128,
-                           attn_impl="pallas")
+                           _plan_cfg("ffn_up", attn_replay="off"), 2,
+                           128, attn_impl="pallas")
     bad_emits = {a.layer: a for a in bad.assignments if a.emit_site}
     assert "RWKV channel-mix" in bad_emits[0].emit_reason, bad.explain()
     assert bad_emits[1].emit_reason == "", bad.explain()

@@ -84,10 +84,11 @@ def test_mixed_pattern_routes_to_next_attention_layer():
     """Griffin-style stacks must CARRY: attention layer l's block emits
     the mask for the *next attention layer* (emit_stride spans the
     recurrent layers) instead of degrading to standalone per-layer
-    generation."""
+    generation. (attn_replay="off" pins the materialized-plane pipeline
+    this test is about; replay planning is covered by test_replay.py.)"""
     cfg = _griffin_cfg()
-    sched = compile_schedule(cfg, _plan_cfg("ffn_up"), 1, 128,
-                             attn_impl="pallas")
+    sched = compile_schedule(cfg, _plan_cfg("ffn_up", attn_replay="off"),
+                             1, 128, attn_impl="pallas")
     assert sched.carried and sched.active
     assert sched.first_consumer == 2
     a2, a5 = sched.for_layer(2), sched.for_layer(5)
@@ -106,10 +107,12 @@ def test_region3_planned_ahead_of_trace():
     """A GEMM too small to host the mask must be planned HOW_STANDALONE
     (paper Region 3) by the compiler — not discovered mid-scan. A
     64-head mask over the d_model=64 out-projection exceeds the fused
-    kernel's per-step row budget."""
+    kernel's per-step row budget. (attn_replay="off": Region 3 is a
+    property of the materialized-plane pipeline.)"""
     cfg = _dense_cfg(n_heads=64, n_kv_heads=64, head_dim=8)
-    sched = compile_schedule(cfg, _plan_cfg("prev_gemm"), 1, 512,
-                             attn_impl="pallas")
+    sched = compile_schedule(cfg,
+                             _plan_cfg("prev_gemm", attn_replay="off"),
+                             1, 512, attn_impl="pallas")
     asg = sched.for_layer(0)
     assert asg.emit_how == producer.HOW_STANDALONE
     assert "Region 3" in asg.emit_reason
@@ -118,11 +121,34 @@ def test_region3_planned_ahead_of_trace():
     assert "Region 3" in asg1.reason
 
 
-def test_explain_snapshot():
-    """explain() is the operator-facing contract — lock its shape."""
+def test_explain_snapshot_replay_default():
+    """explain() under the DEFAULT plan: feasible pallas cells are
+    replay-planned — consumers render how=replay, a retained
+    run-and-discard GEMM host renders as host=..., and the retained
+    emission rows keep their how."""
     cfg = _griffin_cfg()
     sched = compile_schedule(cfg, _plan_cfg("ffn_up"), 1, 128,
                              attn_impl="pallas")
+    want = """\
+dropout schedule: model=grif batch=1 seq=128 mode=overlap p=0.25 \
+site=ffn_up gemm_dtype=f32 impl=pallas carried=yes
+  L0   recurrent -
+  L1   recurrent -
+  L2   full      mask<-bootstrap:standalone how=replay | emits->L5 \
+under ffn_up how=gemm_rng
+  L3   recurrent -
+  L4   recurrent -
+  L5   full      mask<-L2:ffn_up how=replay host=gemm_rng | \
+emits->dropped under ffn_up how=gemm_rng"""
+    assert sched.explain() == want
+
+
+def test_explain_snapshot():
+    """explain() is the operator-facing contract — lock its shape
+    (attn_replay="off" pins the materialized-plane rendering)."""
+    cfg = _griffin_cfg()
+    sched = compile_schedule(cfg, _plan_cfg("ffn_up", attn_replay="off"),
+                             1, 128, attn_impl="pallas")
     want = """\
 dropout schedule: model=grif batch=1 seq=128 mode=overlap p=0.25 \
 site=ffn_up gemm_dtype=f32 impl=pallas carried=yes
@@ -141,10 +167,12 @@ ffn_up how=gemm_rng"""
 def test_explain_snapshot_standalone_fallback():
     """Standalone-fallback layers share one fallback reason between the
     consume and emit halves of a row — explain() must print it once,
-    not twice (it used to repeat the raw reason string)."""
+    not twice (it used to repeat the raw reason string).
+    attn_replay="off": the fallback rows are premask machinery."""
     cfg = _dense_cfg(n_heads=64, n_kv_heads=64, head_dim=8)
-    sched = compile_schedule(cfg, _plan_cfg("prev_gemm"), 1, 512,
-                             attn_impl="pallas")
+    sched = compile_schedule(cfg,
+                             _plan_cfg("prev_gemm", attn_replay="off"),
+                             1, 512, attn_impl="pallas")
     want = """\
 dropout schedule: model=t batch=1 seq=512 mode=overlap p=0.25 \
 site=prev_gemm gemm_dtype=f32 impl=pallas carried=yes
@@ -256,8 +284,12 @@ params = model_init(jax.random.PRNGKey(0), cfg)
 tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 128), 0,
                             cfg.vocab_size)
 
+# attn_replay="off": this script locks the sharded MATERIALIZED-plane
+# pipeline (shard-local fused producers, no XLA degrade); the sharded
+# replay-consumption case is tests/test_replay.py's subprocess script
 def pcfg(site):
-    return DropoutPlanConfig(mode="overlap", p=P_, seed=SEED_, site=site)
+    return DropoutPlanConfig(mode="overlap", p=P_, seed=SEED_, site=site,
+                             attn_replay="off")
 
 def run(site, policy, impl):
     rt = Runtime(plan=plan_from_config(pcfg(site)), step=4,
