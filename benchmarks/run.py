@@ -32,6 +32,15 @@ benchmarks/longctx_bench.py): ``--longctx --smoke`` asserts the
 bench_longctx/v1 schema plus the zero-byte replay and q·k-scaling
 premask invariants; ``--longctx --json BENCH_longctx.json`` records
 the table.
+
+``--tune`` runs the perf-model calibration benchmark (see
+benchmarks/tune_bench.py): fused/dot/rng cells measured on reduced
+avatars, Hardware correction factors fitted, and the per-cell residuals
+of the closed-form vs the calibrated model recorded, plus the
+shipped-config site="auto" flips the calibration induces.
+``--tune --smoke`` asserts the bench_tune/v1 schema and its invariants
+(calibrated residual strictly below closed-form; at least one site
+flip); ``--tune --json BENCH_tune.json`` records the table.
 """
 from __future__ import annotations
 
@@ -174,6 +183,38 @@ def run_longctx(smoke: bool, json_path: str | None) -> int:
     return 0
 
 
+def run_tune(smoke: bool, json_path: str | None) -> int:
+    """--tune: measure fused/dot/rng cells, fit the calibrated perf
+    model, and record closed-form-vs-calibrated residuals plus the
+    shipped-config site flips. --smoke shrinks the arch set and asserts
+    the bench_tune/v1 schema (calibrated residual strictly below
+    closed-form; >=1 site flip); --json writes BENCH_tune.json.
+    Returns a process exit code."""
+    from benchmarks import tune_bench
+    payload = tune_bench.tune_payload(smoke=smoke)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {json_path} (schema {payload['schema']})")
+    print("name,us_per_call,derived")
+    for name, us, derived in tune_bench.tune_rows(payload):
+        print(f"{name},{us:.1f},{derived}")
+    violations = tune_bench.assert_payload_schema(payload)
+    if violations:
+        for v in violations:
+            print(f"SCHEMA VIOLATION: {v}")
+        return 1
+    if smoke:
+        cal = payload["calibration"]
+        print(f"tune smoke OK: schema {payload['schema']}, residual "
+              f"{cal['residual_closed_form']:.3f} -> "
+              f"{cal['residual_calibrated']:.3f}, "
+              f"{sum(f['flipped'] for f in payload['site_flips'])} "
+              f"site flips")
+    return 0
+
+
 def run_smoke() -> int:
     """--smoke: one tiny MoE and one dense block per site, plus a schema
     assertion on every emitted record. Returns a process exit code."""
@@ -230,10 +271,17 @@ def main() -> None:
                          "table (analytic); combine with --smoke for "
                          "the CI schema gate or --json "
                          "BENCH_longctx.json")
+    ap.add_argument("--tune", action="store_true",
+                    help="perf-model calibration bench: measured "
+                         "closed-form-vs-calibrated residuals + site "
+                         "flips; combine with --smoke for the CI "
+                         "schema gate or --json BENCH_tune.json")
     args = ap.parse_args()
     if args.lint_only:
         from repro.analysis import lint
         raise SystemExit(lint.main(["--jaxpr", "off", "-q"]))
+    if args.tune:
+        raise SystemExit(run_tune(args.smoke, args.json))
     if args.longctx:
         raise SystemExit(run_longctx(args.smoke, args.json))
     if args.serve:

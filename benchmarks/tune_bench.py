@@ -1,0 +1,157 @@
+"""Calibration-quality benchmark: bench_tune/v1.
+
+Measures fused/dot/rng wall times on reduced avatars, fits the
+Hardware correction factors (repro.tune.calibrate), and records the
+per-cell residuals of the CLOSED-FORM perf model (spec-sheet constants)
+against the CALIBRATED one — the machine-readable evidence that the
+fitted model predicts the measured interpreter better than the
+constants it replaces, tracked across PRs like the other BENCH files.
+
+Payload contract (asserted by ``assert_payload_schema``):
+
+  schema            "bench_tune/v1"
+  meta              {archs, batch, seq, repeats}
+  calibration       the fitted constants + summary residuals
+  residuals         one row per measured fused cell with both models'
+                    relative errors
+  site_flips        shipped-config site="auto" resolutions, closed-form
+                    vs calibrated ranking
+  invariants: mean calibrated residual strictly below closed-form, and
+  at least one shipped config flips its host site under calibration.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Tuple
+
+SCHEMA = "bench_tune/v1"
+
+_SMOKE_ARCHS = ("llama2-7b", "qwen3-8b")
+
+_RESIDUAL_KEYS = ("arch", "site", "gemm", "mask", "measured_s",
+                  "pred_closed_form_s", "pred_calibrated_s",
+                  "rel_err_closed_form", "rel_err_calibrated")
+_FLIP_KEYS = ("arch", "default_site", "tuned_site", "default_s",
+              "predicted_s", "flipped")
+
+
+def tune_payload(smoke: bool = True, archs: Iterable[str] = (),
+                 batch: int = 2, seq: int = 128,
+                 full_batch: int = 256, full_seq: int = 4096
+                 ) -> Dict[str, object]:
+    from repro.config import get_arch
+    from repro.config.base import DropoutPlanConfig
+    from repro.core.overlap import plan_from_config
+    from repro.core.producer import rank_host_sites
+    from repro.perfmodel.hardware import TPU_V5E
+    from repro.tune import calibrate as cal_mod
+
+    archs = tuple(archs) or (_SMOKE_ARCHS if smoke
+                             else cal_mod.SMOKE_ARCHS)
+    repeats = 1 if smoke else 3
+    cal, ms = cal_mod.calibrate(archs, batch=batch, seq=seq,
+                                repeats=repeats)
+    rows = cal_mod.residual_rows(ms, cal)
+
+    plan = plan_from_config(DropoutPlanConfig(mode="overlap", p=0.1,
+                                              site="auto"))
+    hw_cal = cal.hardware()
+    flips: List[Dict[str, object]] = []
+    for arch in archs:
+        cfg = get_arch(arch)
+        base = rank_host_sites(cfg, plan, full_batch, full_seq,
+                               hw=TPU_V5E)
+        tuned = rank_host_sites(cfg, plan, full_batch, full_seq,
+                                hw=hw_cal)
+        if not base or not tuned:
+            continue
+        costs = {site: -score for site, score in tuned}
+        flips.append({
+            "arch": arch,
+            "default_site": base[0][0],
+            "tuned_site": tuned[0][0],
+            "default_s": costs.get(base[0][0], float("nan")),
+            "predicted_s": costs[tuned[0][0]],
+            "flipped": tuned[0][0] != base[0][0],
+        })
+
+    return {
+        "schema": SCHEMA,
+        "meta": {"archs": list(archs), "batch": batch, "seq": seq,
+                 "repeats": repeats,
+                 "full_shape": [full_batch, full_seq]},
+        "calibration": cal.to_json(),
+        "residuals": rows,
+        "site_flips": flips,
+    }
+
+
+def tune_rows(payload: Dict[str, object]
+              ) -> List[Tuple[str, float, str]]:
+    out: List[Tuple[str, float, str]] = []
+    cal = payload["calibration"]
+    out.append((
+        "tune/calibration", 0.0,
+        f"residual closed-form {cal['residual_closed_form']:.3f} -> "
+        f"calibrated {cal['residual_calibrated']:.3f} over "
+        f"{cal['n_cells']} cells ({cal['source']})"))
+    for r in payload["residuals"]:
+        out.append((
+            f"tune/residual/{r['arch']}/{r['site']}",
+            float(r["measured_s"]) * 1e6,
+            f"rel_err closed {r['rel_err_closed_form']:.3f} "
+            f"cal {r['rel_err_calibrated']:.3f}"))
+    for f in payload["site_flips"]:
+        out.append((
+            f"tune/site/{f['arch']}", 0.0,
+            f"{f['default_site']} -> {f['tuned_site']}"
+            f"{' FLIP' if f['flipped'] else ''}"))
+    return out
+
+
+def assert_payload_schema(payload: Dict[str, object]) -> List[str]:
+    """bench_tune/v1 invariants; returns human-readable violations."""
+    v: List[str] = []
+    if payload.get("schema") != SCHEMA:
+        v.append(f"schema is {payload.get('schema')!r}, want {SCHEMA!r}")
+        return v
+    cal = payload.get("calibration")
+    if not isinstance(cal, dict):
+        v.append("calibration missing")
+        return v
+    for key in ("mma_flops", "hbm_bw", "nonmma_ops", "rng_interference",
+                "gemm_interference", "step_overhead",
+                "residual_closed_form", "residual_calibrated",
+                "n_cells", "source"):
+        if key not in cal:
+            v.append(f"calibration missing key {key!r}")
+    rows = payload.get("residuals") or []
+    if not rows:
+        v.append("no residual rows")
+    for i, r in enumerate(rows):
+        missing = set(_RESIDUAL_KEYS) - set(r)
+        if missing:
+            v.append(f"residual row {i} missing {sorted(missing)}")
+            break
+    flips = payload.get("site_flips") or []
+    for i, f in enumerate(flips):
+        missing = set(_FLIP_KEYS) - set(f)
+        if missing:
+            v.append(f"site_flips row {i} missing {sorted(missing)}")
+            break
+    if v:
+        return v
+    # the lane's two substantive invariants
+    if not cal["residual_calibrated"] < cal["residual_closed_form"]:
+        v.append(
+            f"calibrated residual {cal['residual_calibrated']:.4f} not "
+            f"strictly below closed-form "
+            f"{cal['residual_closed_form']:.4f}")
+    if not any(f["flipped"] for f in flips):
+        v.append("no shipped config flips its auto site under "
+                 "calibration")
+    mean_closed = sum(r["rel_err_closed_form"] for r in rows) / len(rows)
+    mean_cal = sum(r["rel_err_calibrated"] for r in rows) / len(rows)
+    if not mean_cal < mean_closed:
+        v.append(f"per-row mean residual: calibrated {mean_cal:.4f} not "
+                 f"below closed-form {mean_closed:.4f}")
+    return v

@@ -19,6 +19,9 @@ else
     # serve lane: decode-engine unit tests (paged KV, continuous
     # batching, spec-decode bitwise replay)
     python -m pytest -q -m serve
+    # tune lane: perf-model calibration + gated autotuner search
+    # (tuned-table plumbing, bit-identity gates, residual fit)
+    python -m pytest -q -m tune
 fi
 
 # serving bench smoke: end-to-end trace through the decode engine +
@@ -29,6 +32,11 @@ python -m benchmarks.run --serve --smoke
 # schema-asserted (replay mask HBM bytes identically 0; premask
 # traffic q·k-scaling)
 python -m benchmarks.run --longctx --smoke
+
+# tune bench smoke: measure fused/dot/rng cells, fit the calibrated
+# perf model, assert the bench_tune/v1 schema + its invariants
+# (calibrated residual strictly below closed-form; >=1 site flip)
+python -m benchmarks.run --tune --smoke
 
 # per-topology lint: every cell re-proven on 2-way data- and model-axis
 # layouts (MS-C4 shard-window tiling; N-dim-sharded host GEMM) —

@@ -161,7 +161,9 @@ def _fused_blocks(cfg: ModelConfig, sched: DropoutSchedule, site: str,
             return None, rows_valid
         bm, bn, _ = blocks
         n_steps = (m_loc // bm) * (n_loc // bn)
-    layout = mask_emission_layout(n_steps, b_loc, h_loc, seq, seq)
+    layout = mask_emission_layout(
+        n_steps, b_loc, h_loc, seq, seq,
+        mask_block_cols=producer.mask_cols_cap(seq, seq))
     if layout is None:
         return None, rows_valid
     return tuple(layout.blocks()), rows_valid
@@ -196,15 +198,22 @@ def _standalone_blocks(cfg: ModelConfig, sched: DropoutSchedule
 
 
 def _replay_blocks(cfg: ModelConfig, sched: DropoutSchedule,
-                   block_q: int = 128, block_k: int = 128
+                   block_q: Optional[int] = None,
+                   block_k: Optional[int] = None
                    ) -> Tuple[Tuple[Block, ...], int]:
     """The flash-attention consumer's replay grid: one in-register
     tile_keep_mask derivation per (bh, q-block, k-block) kernel cell,
     each covering (block_q // 32) packed rows x block_k cols of the
-    local plane (models/attention runs the kernels at 128x128). Proving
+    local plane. The default blocks resolve through the SAME tuned-table
+    hook models/attention uses (128x128 with no table installed), so
+    the verified replay grid is always the executed kernel grid. Proving
     this grid exactly tiles the plane is the replay analogue of proving
     a producer's emission grid double-draws nothing."""
     seq = sched.seq
+    if block_q is None or block_k is None:
+        dq, dk = producer.attn_flash_blocks(seq, seq)
+        block_q = dq if block_q is None else block_q
+        block_k = dk if block_k is None else block_k
     sh = sched.shard
     shard_local = sh.policy_installed and sh.active
     b_loc = sched.batch // sh.batch_shards if shard_local else sched.batch

@@ -106,11 +106,55 @@ def _largest_divisor(dim: int, cap: int) -> int:
     return 1
 
 
+def _tuned_tables():
+    """The active tuned-table module (repro.tune.tables), or None. Lazy:
+    core must import without the tune subsystem, and no installed table
+    must mean exactly the shipped defaults."""
+    try:
+        from repro.tune import tables
+    except ImportError:          # pragma: no cover - trimmed installs
+        return None
+    return tables
+
+
+def mask_cols_cap(sq: int, sk: int) -> int:
+    """The fused kernels' RNG emission-grid column block for this mask
+    plane: the active tuned table's (proven) choice, else the shipped
+    default. Planner feasibility, the executed kernel grid, and the
+    verifier's emission layout all resolve through THIS function."""
+    t = _tuned_tables()
+    if t is not None:
+        return t.active_mask_cols(sq, sk, default=_MASK_COLS_CAP)
+    return _MASK_COLS_CAP
+
+
+def attn_flash_blocks(sq: int, sk: int) -> Tuple[int, int]:
+    """The flash-attention (block_q, block_k) for this plane: the active
+    tuned table's (bit-identity-proven) choice, else 128x128. Both the
+    executing kernel call (models/attention) and the verifier's replay
+    grid (analysis/counters._replay_blocks) resolve through here."""
+    t = _tuned_tables()
+    if t is not None:
+        return t.active_flash_blocks(sq, sk)
+    return (128, 128)
+
+
 def pick_gemm_blocks(m: int, n: int, k: int
                      ) -> Optional[Tuple[int, int, int]]:
     """Block shape for a model-path fused GEMM, or None when the operand
     shapes don't tile cleanly (oddly-sized dims would force degenerate
-    blocks; the caller then keeps the plain GEMM and the XLA producer)."""
+    blocks; the caller then keeps the plain GEMM and the XLA producer).
+
+    An installed tuned table (repro.tune.tables) overrides the answer
+    for exact shapes it carries a bit-identity-proven entry for; the
+    schedule compiler, the shard-local executor, and repro.analysis all
+    derive their grids from THIS function, so a tuned override
+    propagates to planner, kernels and verifier consistently."""
+    t = _tuned_tables()
+    if t is not None:
+        tuned = t.active_blocks(m, n, k)
+        if tuned is not None:
+            return tuned
     bm = _largest_divisor(m, _BLOCK_M_CAP)
     bn = _largest_divisor(n, _BLOCK_N_CAP)
     bk = _largest_divisor(k, _BLOCK_K_CAP)
@@ -158,8 +202,9 @@ def mask_kernel_unsupported_reason(plan: DropoutPlan, sq: int, sk: int,
         return f"sq32={sq32} breaks the packed-row tiling"
     if sk % min(_PHILOX_COLS_CAP, sk):
         return f"sk={sk} breaks the {_PHILOX_COLS_CAP}-column tiling"
-    if fused and sk % min(_MASK_COLS_CAP, sk):
-        return f"sk={sk} breaks the {_MASK_COLS_CAP}-column mask blocks"
+    cols = mask_cols_cap(sq, sk)
+    if fused and sk % min(cols, sk):
+        return f"sk={sk} breaks the {cols}-column mask blocks"
     return None
 
 
@@ -313,8 +358,9 @@ def _fused_gemm_call(x2d, w2d, plan, mask_shape, seed, salt, blocks,
                 x2d, w2d, mask_batch=batch, mask_heads=n_heads,
                 mask_sq=sq, mask_sk=sk, p=plan.cfg.p, seed=seed,
                 salt=salt, rounds=plan.cfg.philox_rounds, block_m=bm,
-                block_n=bn, block_k=bk, heads_global=heads_global,
-                bh_offset=bh_offset)
+                block_n=bn, block_k=bk,
+                mask_block_cols=mask_cols_cap(sq, sk),
+                heads_global=heads_global, bh_offset=bh_offset)
             return y, mask, "fp8"
         gemm_dtype = "f32"      # fp8 unavailable in this build: f32 host
     a = x2d.astype(jnp.bfloat16) if gemm_dtype == "bf16" else x2d
@@ -323,7 +369,8 @@ def _fused_gemm_call(x2d, w2d, plan, mask_shape, seed, salt, blocks,
         a, w, mask_batch=batch, mask_heads=n_heads, mask_sq=sq,
         mask_sk=sk, p=plan.cfg.p, seed=seed, salt=salt,
         rounds=plan.cfg.philox_rounds, block_m=bm, block_n=bn,
-        block_k=bk, heads_global=heads_global, bh_offset=bh_offset)
+        block_k=bk, mask_block_cols=mask_cols_cap(sq, sk),
+        heads_global=heads_global, bh_offset=bh_offset)
     if gemm_dtype == "bf16":
         y = y.astype(x2d.dtype)
     return y, mask, gemm_dtype
@@ -426,7 +473,8 @@ def _gemm_with_mask_sharded(x2d, w2d, plan, mask_shape, layer_idx, step,
         from repro.kernels.gemm_rng import mask_layout_feasible
         bm, bn, _bk = blocks
         fused = mask_layout_feasible((m_loc // bm) * (n_loc // bn),
-                                     b_loc, h_loc, sq, sk)
+                                     b_loc, h_loc, sq, sk,
+                                     mask_block_cols=mask_cols_cap(sq, sk))
     seed = jnp.asarray(plan.step_seed(step), jnp.uint32)
     salt = jnp.asarray(plan.salt(layer_idx), jnp.uint32)
     xs = P(shard.b_spec, None)
@@ -476,7 +524,9 @@ def grouped_layout_feasible(e: int, c: int, kdim: int, n: int, batch: int,
     from repro.kernels.gemm_rng import mask_layout_feasible
     bm, bn, _ = blocks
     n_steps = e * (c // bm) * (n // bn)
-    return mask_layout_feasible(n_steps, batch, n_heads, sq, sk), blocks
+    return mask_layout_feasible(
+        n_steps, batch, n_heads, sq, sk,
+        mask_block_cols=mask_cols_cap(sq, sk)), blocks
 
 
 def grouped_gemm_seeded(a3: jnp.ndarray, b3: jnp.ndarray,
@@ -512,7 +562,8 @@ def grouped_gemm_seeded(a3: jnp.ndarray, b3: jnp.ndarray,
     kw = dict(mask_batch=batch, mask_heads=n_heads, mask_sq=sq,
               mask_sk=sk, p=plan.cfg.p, seed=seed, salt=salt,
               rounds=plan.cfg.philox_rounds, block_m=bm, block_n=bn,
-              block_k=bk, heads_global=heads_global, bh_offset=bh_offset)
+              block_k=bk, mask_block_cols=mask_cols_cap(sq, sk),
+              heads_global=heads_global, bh_offset=bh_offset)
     gemm_dtype = plan.gemm_dtype
     if gemm_dtype == "fp8":
         from repro.kernels import quant
@@ -748,6 +799,10 @@ def rank_host_sites(cfg: ModelConfig, plan: DropoutPlan, batch: int,
     the per-layer capability later judges (grouped_host_shapes)."""
     from repro.perfmodel.hardware import TPU_V5E
     from repro.perfmodel.model import rank_host_gemms
+    if hw is None:
+        t = _tuned_tables()
+        if t is not None:
+            hw = t.active_hardware()    # calibrated ranking when tuned
     mask_elems = float(batch) * cfg.n_heads * seq * seq
     dtype_bytes = _DTYPE_BYTES.get(plan.gemm_dtype, 4)
     shapes = {}

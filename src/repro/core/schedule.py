@@ -376,7 +376,9 @@ def _fused_capability(plan: DropoutPlan, cfg: ModelConfig, batch: int,
     from repro.kernels.gemm_rng import mask_layout_feasible
     bm, bn, _ = blocks
     n_steps = (m_loc // bm) * (n_loc // bn)
-    if not mask_layout_feasible(n_steps, b_loc, h_loc, seq, seq):
+    if not mask_layout_feasible(
+            n_steps, b_loc, h_loc, seq, seq,
+            mask_block_cols=producer.mask_cols_cap(seq, seq)):
         return (HOW_STANDALONE, sharded,
                 f"Region 3: GEMM ({m_loc},{n_loc},{k}) too small for "
                 f"{b_loc}x{h_loc}x{seq}x{seq} mask")

@@ -57,6 +57,7 @@ def fused_qkv_gemm_rng(x: jnp.ndarray, w_qkv: jnp.ndarray, *,
                        mask_sk: int, p: float, seed, salt=0,
                        rounds: int = 7, block_m: int = 256,
                        block_n: int = 256, block_k: int = 512,
+                       mask_block_cols: int = 2048,
                        heads_global: int = 0, bh_offset=0,
                        ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """QKV projection with the dropout mask for the *following* attention
@@ -69,8 +70,8 @@ def fused_qkv_gemm_rng(x: jnp.ndarray, w_qkv: jnp.ndarray, *,
         x, w_qkv, mask_batch=mask_batch, mask_heads=mask_heads,
         mask_sq=mask_sq, mask_sk=mask_sk, p=p, seed=seed, salt=salt,
         rounds=rounds, block_m=block_m, block_n=block_n, block_k=block_k,
-        interpret=default_interpret(), heads_global=heads_global,
-        bh_offset=bh_offset)
+        mask_block_cols=mask_block_cols, interpret=default_interpret(),
+        heads_global=heads_global, bh_offset=bh_offset)
 
 
 def fused_gemm_rng_grouped(a: jnp.ndarray, b: jnp.ndarray, *,
@@ -78,6 +79,7 @@ def fused_gemm_rng_grouped(a: jnp.ndarray, b: jnp.ndarray, *,
                            mask_sk: int, p: float, seed, salt=0,
                            rounds: int = 7, block_m: int = 256,
                            block_n: int = 256, block_k: int = 512,
+                           mask_block_cols: int = 2048,
                            heads_global: int = 0, bh_offset=0,
                            ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Grouped expert GEMM C[e] = a[e] @ b[e] with the dropout mask
@@ -90,8 +92,8 @@ def fused_gemm_rng_grouped(a: jnp.ndarray, b: jnp.ndarray, *,
         a, b, mask_batch=mask_batch, mask_heads=mask_heads,
         mask_sq=mask_sq, mask_sk=mask_sk, p=p, seed=seed, salt=salt,
         rounds=rounds, block_m=block_m, block_n=block_n, block_k=block_k,
-        interpret=default_interpret(), heads_global=heads_global,
-        bh_offset=bh_offset)
+        mask_block_cols=mask_block_cols, interpret=default_interpret(),
+        heads_global=heads_global, bh_offset=bh_offset)
 
 
 def fused_gemm_rng_grouped_fp8(a: jnp.ndarray, b: jnp.ndarray, *,
@@ -99,8 +101,9 @@ def fused_gemm_rng_grouped_fp8(a: jnp.ndarray, b: jnp.ndarray, *,
                                mask_sq: int, mask_sk: int, p: float,
                                seed, salt=0, rounds: int = 7,
                                block_m: int = 256, block_n: int = 256,
-                               block_k: int = 512, heads_global: int = 0,
-                               bh_offset=0,
+                               block_k: int = 512,
+                               mask_block_cols: int = 2048,
+                               heads_global: int = 0, bh_offset=0,
                                ) -> Tuple[jnp.ndarray,
                                           Optional[jnp.ndarray]]:
     """Grouped expert GEMM on per-tile-scaled e4m3 operands with the
@@ -110,8 +113,8 @@ def fused_gemm_rng_grouped_fp8(a: jnp.ndarray, b: jnp.ndarray, *,
         a, b, mask_batch=mask_batch, mask_heads=mask_heads,
         mask_sq=mask_sq, mask_sk=mask_sk, p=p, seed=seed, salt=salt,
         rounds=rounds, block_m=block_m, block_n=block_n, block_k=block_k,
-        interpret=default_interpret(), heads_global=heads_global,
-        bh_offset=bh_offset)
+        mask_block_cols=mask_block_cols, interpret=default_interpret(),
+        heads_global=heads_global, bh_offset=bh_offset)
 
 
 def fused_gemm_rng_fp8(x: jnp.ndarray, w: jnp.ndarray, *,
@@ -119,6 +122,7 @@ def fused_gemm_rng_fp8(x: jnp.ndarray, w: jnp.ndarray, *,
                        mask_sk: int, p: float, seed, salt=0,
                        rounds: int = 7, block_m: int = 256,
                        block_n: int = 256, block_k: int = 512,
+                       mask_block_cols: int = 2048,
                        heads_global: int = 0, bh_offset=0,
                        ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Producer GEMM on per-tile-scaled e4m3 operands with the dropout
@@ -131,5 +135,5 @@ def fused_gemm_rng_fp8(x: jnp.ndarray, w: jnp.ndarray, *,
         x, w, mask_batch=mask_batch, mask_heads=mask_heads,
         mask_sq=mask_sq, mask_sk=mask_sk, p=p, seed=seed, salt=salt,
         rounds=rounds, block_m=block_m, block_n=block_n, block_k=block_k,
-        interpret=default_interpret(), heads_global=heads_global,
-        bh_offset=bh_offset)
+        mask_block_cols=mask_block_cols, interpret=default_interpret(),
+        heads_global=heads_global, bh_offset=bh_offset)

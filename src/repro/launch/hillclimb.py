@@ -1,5 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# 512 host devices for the production-mesh dry-run — but never clobber
+# flags the user already exported; append ours only when absent.
+_FLAG = "--xla_force_host_platform_device_count=512"
+_cur = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _cur:
+    os.environ["XLA_FLAGS"] = (_cur + " " + _FLAG).strip()
 
 # §Perf hillclimb driver: lower a cell with optimization knobs and report
 # the roofline delta vs the recorded baseline.
@@ -23,7 +28,14 @@ def main() -> None:
                     help="k=v overrides (probs_bf16, philox_bits, "
                          "moe_seq_dispatch, remat, layout, dropout_mode)")
     ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--tuned", default=None, metavar="TUNED.json",
+                    help="install this tuned table (autotuner output) "
+                         "before lowering the cell")
     args = ap.parse_args()
+
+    if args.tuned:
+        from repro.tune.tables import TunedTable, install
+        install(TunedTable.load(args.tuned))
 
     overrides = {}
     for kv in args.set:
@@ -40,10 +52,13 @@ def main() -> None:
     with open(os.path.join(args.out, tag + ".json"), "w") as f:
         json.dump(report, f, indent=2, default=float)
 
+    # resolve the baseline from the report's OWN mesh metadata — the
+    # dryrun owns the mesh naming; hardcoding it here breaks silently
+    # the day the production mesh changes shape.
+    mesh_suffix = report["meta"]["mesh"].replace("x", "_")
     base_path = os.path.join(
         "experiments/dryrun",
-        f"{args.arch}__{args.shape}__"
-        f"{'2_16_16' if args.multi_pod else '16_16'}.json")
+        f"{args.arch}__{args.shape}__{mesh_suffix}.json")
     if os.path.exists(base_path):
         with open(base_path) as f:
             base = json.load(f)["roofline"]

@@ -2,9 +2,15 @@ from repro.perfmodel.hardware import GH100, TPU_V5E, Hardware
 from repro.perfmodel.model import (
     BlockShape,
     block_speedup,
+    fused_host_time,
+    gemm_grid_steps,
+    gemm_host_cost,
+    gemm_tile_time,
+    gemm_tile_traffic_bytes,
     kernel_times,
     overlap_block_time,
     baseline_block_time,
+    rank_host_gemms,
     sweep_speedup,
 )
 
@@ -14,8 +20,14 @@ __all__ = [
     "Hardware",
     "BlockShape",
     "block_speedup",
+    "fused_host_time",
+    "gemm_grid_steps",
+    "gemm_host_cost",
+    "gemm_tile_time",
+    "gemm_tile_traffic_bytes",
     "kernel_times",
     "overlap_block_time",
     "baseline_block_time",
+    "rank_host_gemms",
     "sweep_speedup",
 ]

@@ -30,6 +30,16 @@ class Hardware:
     gemm_interference: float = 1.04  # GEMM slowdown while RNG runs
     drop_overhead: float = 1.12      # attention x1.12 with dropping step
     rng_hidden_fused: float = 0.15   # 10-20% of RNG hidden when fused
+    # measurement-calibrated extensions (repro.tune.calibrate). A fixed
+    # per-grid-step cost lets the tile-aware model see grid granularity;
+    # the silicon constants above keep it at exactly 0 so every closed-form
+    # number (headline_table and friends) is bit-for-bit unchanged.
+    step_overhead: float = 0.0       # seconds per kernel grid step (fitted)
+    calibrated_against: str = ""     # "" = closed-form spec constants
+
+    @property
+    def is_calibrated(self) -> bool:
+        return bool(self.calibrated_against)
 
     def scaled(self, mma_mult: float) -> "Hardware":
         """Paper §5.3: hypothetical GPU with scaled MMA compute, non-Tensor
@@ -38,6 +48,30 @@ class Hardware:
             self, name=f"{self.name}-mma{mma_mult:g}x",
             mma_flops=self.mma_flops * mma_mult,
             hbm_bw=self.hbm_bw * mma_mult)
+
+    @classmethod
+    def calibrated(cls, base: "Hardware", *, mma_flops: float,
+                   hbm_bw: float, nonmma_ops: float,
+                   rng_interference: float, gemm_interference: float,
+                   step_overhead: float, source: str) -> "Hardware":
+        """A Hardware whose roofs and interference factors were FITTED to
+        wall-time measurements (repro.tune.calibrate) rather than taken
+        from a spec sheet. ``source`` records what was measured (platform +
+        cell count) and flips ``is_calibrated`` on, which switches the host
+        ranking objective from raw Region-1 headroom to net added cost
+        (model.rank_host_gemms): fitted interference makes over-hosting a
+        measurable penalty, so the ranking stops assuming the biggest
+        shadow is free."""
+        if not source:
+            raise ValueError("calibrated hardware needs a source tag")
+        return dataclasses.replace(
+            base, name=f"{base.name}-cal",
+            mma_flops=float(mma_flops), hbm_bw=float(hbm_bw),
+            nonmma_ops=float(nonmma_ops),
+            rng_interference=float(rng_interference),
+            gemm_interference=float(gemm_interference),
+            step_overhead=float(step_overhead),
+            calibrated_against=str(source))
 
 
 # H100 SXM FP8 (the paper's platform): 1979 TFLOP/s dense FP8, HBM3

@@ -119,6 +119,84 @@ def kernel_times(shape: BlockShape, hw: Hardware = GH100,
             "mask_read": shape.mask_hbm_bytes() / hw.hbm_bw}
 
 
+def gemm_grid_steps(m: int, n: int, k: int,
+                    blocks: Tuple[int, int, int]) -> int:
+    """Kernel grid steps of a (m, n, k) GEMM tiled (bm, bn, bk) — the
+    unit the fitted per-step overhead multiplies."""
+    bm, bn, bk = blocks
+    return (-(-m // bm)) * (-(-n // bn)) * (-(-k // bk))
+
+
+def gemm_tile_traffic_bytes(m: int, n: int, k: int,
+                            blocks: Tuple[int, int, int],
+                            dtype_bytes: int = 2) -> float:
+    """HBM traffic of the tiled GEMM including operand RE-STREAMING: with
+    a (gm, gn, gk) grid the A operand is read once per N-block column and
+    B once per M-block row, so shrinking bm/bn multiplies weight/act
+    traffic — the term that gives the tile search a real gradient instead
+    of 'biggest block always wins'. Output is written once in f32."""
+    bm, bn, _ = blocks
+    gm, gn = -(-m // bm), -(-n // bn)
+    return float(m * k * gn + k * n * gm) * dtype_bytes + m * n * 4.0
+
+
+def gemm_tile_time(m: int, n: int, k: int, hw: Hardware,
+                   blocks: Optional[Tuple[int, int, int]] = None,
+                   dtype_bytes: int = 2) -> float:
+    """Tile-aware GEMM runtime: roofline max over MMA flops and the
+    re-streaming traffic, plus the (calibrated) fixed cost per grid step.
+    ``blocks=None`` reproduces the closed-form operand-once estimate the
+    pre-tuning model used (and step_overhead=0 on spec-sheet Hardware
+    keeps that path bit-identical)."""
+    flops = 2.0 * m * n * k
+    if blocks is None:
+        traffic = (m * k + k * n) * dtype_bytes + m * n * 4.0
+        steps = 0
+    else:
+        traffic = gemm_tile_traffic_bytes(m, n, k, blocks, dtype_bytes)
+        steps = gemm_grid_steps(m, n, k, blocks)
+    return (max(flops / hw.mma_flops, traffic / hw.hbm_bw)
+            + steps * hw.step_overhead)
+
+
+def fused_host_time(m: int, n: int, k: int, mask_elems: float,
+                    hw: Hardware, rounds: int = 7, dtype_bytes: int = 2,
+                    blocks: Optional[Tuple[int, int, int]] = None) -> float:
+    """Predicted wall time of ONE fused host GEMM carrying ``mask_elems``
+    of RNG: the Fig. 5f composition (GEMM stretched by interference, RNG
+    progressing in its shadow, exposed remainder serialized) evaluated
+    with whatever constants ``hw`` carries. This is the quantity
+    tune.calibrate fits against interpret-mode wall clocks and the
+    residual report compares closed-form vs calibrated on."""
+    t_gemm = gemm_tile_time(m, n, k, hw, blocks=blocks,
+                            dtype_bytes=dtype_bytes)
+    t_rng = max(mask_elems * rng_ops_per_elem(rounds) / hw.nonmma_ops,
+                mask_elems / 8.0 / hw.hbm_bw)
+    stretched = t_gemm * hw.gemm_interference
+    exposed = max(0.0, t_rng - stretched / hw.rng_interference)
+    return stretched + exposed
+
+
+def gemm_host_cost(m: int, n: int, k: int, mask_elems: float,
+                   hw: Hardware, rounds: int = 7,
+                   dtype_bytes: int = 2,
+                   blocks: Optional[Tuple[int, int, int]] = None) -> float:
+    """Net BLOCK-TIME cost (seconds) of electing this GEMM as the mask
+    host: the interference stretch it suffers plus any exposed RNG
+    remainder. The closed-form headroom ranking always prefers the
+    biggest shadow; with measured interference the correct Region-1
+    objective is the reverse — once the RNG hides fully, the SMALLEST
+    sufficient host minimizes the added time. rank_host_gemms switches
+    to this objective when ``hw.is_calibrated``."""
+    t_gemm = gemm_tile_time(m, n, k, hw, blocks=blocks,
+                            dtype_bytes=dtype_bytes)
+    t_rng = max(mask_elems * rng_ops_per_elem(rounds) / hw.nonmma_ops,
+                mask_elems / 8.0 / hw.hbm_bw)
+    stretched = t_gemm * hw.gemm_interference
+    exposed = max(0.0, t_rng - stretched / hw.rng_interference)
+    return (stretched - t_gemm) + exposed
+
+
 def gemm_host_headroom(m: int, n: int, k: int, mask_elems: float,
                        hw: Hardware = GH100, rounds: int = 7,
                        dtype_bytes: int = 2) -> float:
@@ -165,26 +243,63 @@ def grouped_gemm_host_headroom(e: int, m: int, n: int, k: int,
     return hidden - t_rng
 
 
+def grouped_gemm_host_cost(e: int, m: int, n: int, k: int,
+                           mask_elems: float, hw: Hardware,
+                           rounds: int = 7, dtype_bytes: int = 2) -> float:
+    """Net added cost of a GROUPED host (grouped-operand arithmetic of
+    grouped_gemm_host_headroom, net-cost objective of gemm_host_cost)."""
+    flops = 2.0 * e * m * n * k
+    gemm_bytes = e * ((m * k + k * n) * dtype_bytes + m * n * 4.0)
+    t_gemm = max(flops / hw.mma_flops, gemm_bytes / hw.hbm_bw)
+    t_rng = max(mask_elems * rng_ops_per_elem(rounds) / hw.nonmma_ops,
+                mask_elems / 8.0 / hw.hbm_bw)
+    stretched = t_gemm * hw.gemm_interference
+    exposed = max(0.0, t_rng - stretched / hw.rng_interference)
+    return (stretched - t_gemm) + exposed
+
+
 def rank_host_gemms(shapes: Dict[str, Tuple[int, int, int]],
                     mask_elems: float, hw: Hardware = GH100,
                     rounds: int = 7, dtype_bytes: int = 2,
                     grouped: Optional[Dict[str, Tuple[int, int, int, int]]]
                     = None) -> Tuple[Tuple[str, float], ...]:
-    """Candidate host GEMMs ranked by Region-1 headroom, best first.
-    ``shapes`` maps a site name to its dense (m, n, k); ``grouped`` maps
-    a site name to a grouped (e, m, n, k) judged by
-    ``grouped_gemm_host_headroom``. The schedule compiler
-    (core/schedule.py) consumes this both to resolve site="auto" and to
-    annotate explain() output with the margin each host was chosen by."""
-    rows = [
-        (site, gemm_host_headroom(m, n, k, mask_elems, hw=hw,
-                                  rounds=rounds, dtype_bytes=dtype_bytes))
-        for site, (m, n, k) in shapes.items()]
-    rows += [
-        (site, grouped_gemm_host_headroom(e, m, n, k, mask_elems, hw=hw,
-                                          rounds=rounds,
-                                          dtype_bytes=dtype_bytes))
-        for site, (e, m, n, k) in (grouped or {}).items()]
+    """Candidate host GEMMs ranked best-first, (site, score) with higher
+    score better. ``shapes`` maps a site name to its dense (m, n, k);
+    ``grouped`` maps a site name to a grouped (e, m, n, k). The schedule
+    compiler (core/schedule.py) consumes this both to resolve
+    site="auto" and to annotate explain() output with the margin each
+    host was chosen by.
+
+    Two objectives, selected by the Hardware:
+      * closed-form constants (the default): Region-1 headroom — the
+        GEMM with the most RNG-hiding shadow wins (the pre-calibration
+        behavior, bit-for-bit).
+      * ``hw.is_calibrated``: NEGATED net added cost (interference
+        stretch + exposed remainder). With fitted interference > 1,
+        hosting on a bigger GEMM than needed is a measured penalty, so
+        in Region 1 the smallest sufficient host wins — this is where
+        tuned tables legitimately flip a config's auto site."""
+    if hw.is_calibrated:
+        rows = [
+            (site, -gemm_host_cost(m, n, k, mask_elems, hw=hw,
+                                   rounds=rounds, dtype_bytes=dtype_bytes))
+            for site, (m, n, k) in shapes.items()]
+        rows += [
+            (site, -grouped_gemm_host_cost(
+                e, m, n, k, mask_elems, hw=hw, rounds=rounds,
+                dtype_bytes=dtype_bytes))
+            for site, (e, m, n, k) in (grouped or {}).items()]
+    else:
+        rows = [
+            (site, gemm_host_headroom(m, n, k, mask_elems, hw=hw,
+                                      rounds=rounds,
+                                      dtype_bytes=dtype_bytes))
+            for site, (m, n, k) in shapes.items()]
+        rows += [
+            (site, grouped_gemm_host_headroom(
+                e, m, n, k, mask_elems, hw=hw, rounds=rounds,
+                dtype_bytes=dtype_bytes))
+            for site, (e, m, n, k) in (grouped or {}).items()]
     return tuple(sorted(rows, key=lambda kv: -kv[1]))
 
 

@@ -172,11 +172,13 @@ class HloModule:
         flops_memo: Dict[str, float] = {}
         self._coll = defaultdict(lambda: {"count": 0.0, "bytes": 0.0})
         self._bytes = 0.0
+        self._pallas_bytes = 0.0
         entry = self.entry or next(iter(self.computations))
         flops = self._walk(entry, 1.0, flops_memo, sequenced=True)
         return {
             "flops": flops,
             "bytes": self._bytes,
+            "pallas_bytes": self._pallas_bytes,
             "collectives": {k: dict(v) for k, v in self._coll.items()},
         }
 
@@ -353,6 +355,10 @@ class HloModule:
                         for o in inst.operands:
                             b += shape_bytes(self._operand_type(comp, o))
                         self._bytes += b * mult
+                        # pallas-region call-boundary traffic, kept as its
+                        # own feature: calibration fits kernel-launch cost
+                        # terms against it separately from plain XLA bytes
+                        self._pallas_bytes += b * mult
                         total += self._walk(body.group(1), mult * trip,
                                             flops_memo, sequenced=False)
                         continue
@@ -395,3 +401,18 @@ def total_collective_bytes(hlo_text: str) -> float:
 
 def count_op(hlo_text: str, opcode: str) -> int:
     return len(re.findall(rf"\b{re.escape(opcode)}\(", hlo_text))
+
+
+def feature_vector(hlo_text: str) -> Dict[str, float]:
+    """Flat per-module cost features (the byteprofile feature-vector
+    idiom): matmul flops, HBM bytes, pallas-region call-boundary bytes,
+    and total collective bytes. repro.tune.calibrate pairs these with
+    interpret-mode wall-time samples to fit perfmodel throughputs."""
+    r = analyze_module(hlo_text)
+    return {
+        "flops": float(r["flops"]),
+        "bytes": float(r["bytes"]),
+        "pallas_bytes": float(r["pallas_bytes"]),
+        "collective_bytes": float(
+            sum(v["bytes"] for v in r["collectives"].values())),
+    }

@@ -1,0 +1,42 @@
+"""Measurement-calibrated perf model + mask-safe kernel autotuner.
+
+The measure -> calibrate -> search -> plan loop on top of the compiled
+dropout schedule:
+
+  calibrate.py  runs the shipped configs' kernels in interpret mode,
+                extracts per-op cost features from their HLO
+                (roofline/hlo.feature_vector) and fits the perfmodel's
+                throughput/interference constants to the measured wall
+                times (Hardware.calibrated), with residuals reported
+                against the closed-form defaults.
+  space.py      the legal kernel-config space per cell: GEMM tile sizes,
+                RNG emission-grid column blocks, flash-attention blocks,
+                philox_bits.
+  search.py     coordinate-descent autotuner over that space, every
+                candidate gated by repro.analysis.verify_schedule AND a
+                bit-identity spot check — tuning can never change a mask
+                bit or a kernel output bit, and it PROVES that per
+                candidate rather than assuming tile-invariance.
+  tables.py     tuned tables keyed by (config, shape-bucket, dtype,
+                topology), persisted to TUNED.json and consumed by
+                pick_gemm_blocks / rank_host_sites /
+                compile_schedule(site="auto") with deterministic
+                fallback to the shipped defaults.
+
+`python -m repro.tune --smoke` runs the whole loop on the reduced
+configs and writes TUNED.json.
+"""
+from repro.tune.tables import (  # noqa: F401
+    Calibration,
+    TunedCell,
+    TunedTable,
+    active_blocks,
+    active_flash_blocks,
+    active_hardware,
+    active_mask_cols,
+    cell_key,
+    install,
+    installed,
+    overlay,
+    uninstall,
+)

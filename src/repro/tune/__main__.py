@@ -1,0 +1,253 @@
+"""``python -m repro.tune [--smoke]`` — the full tune pipeline.
+
+  1. CALIBRATE   measure fused/dot/rng wall times on reduced avatars,
+                 fit Hardware correction factors, and REQUIRE the fitted
+                 model to beat the closed-form constants on the measured
+                 cells (strictly smaller mean relative error) — a
+                 calibration that doesn't predict better than the spec
+                 sheet is refused, not shipped.
+  2. SEARCH      gated coordinate descent per host cell (tune/search.py):
+                 candidates must win on the calibrated score AND pass
+                 mask-bit / GEMM-bit / flash-bit / verify_schedule gates.
+  3. RESOLVE     re-rank site="auto" for each tuned arch's SHIPPED
+                 (full-size) config under the calibrated hardware and
+                 record the cell (tuned site vs closed-form default).
+  4. PROVE       under the assembled table: static verifier lint sweep
+                 over every arch's reduced schedule, then whole-model
+                 forward logits bit-identical to the untuned plan for
+                 every tuned cell.
+  5. PERSIST     write TUNED.json (tuned/v1) for load_default().
+
+Exit is nonzero if calibration fails to beat closed-form, any proof
+fails, or no shipped config flips its auto site.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def _log(msg: str) -> None:
+    print(f"[tune] {msg}", flush=True)
+
+
+def _site_costs(arch: str, batch: int, seq: int, hw_default, hw_cal):
+    """(default_site, tuned_site, default_s, predicted_s) for the
+    shipped config at (batch, seq). Costs are the calibrated model's
+    (rank scores under a calibrated hw are NEGATED net host costs)."""
+    from repro.config import get_arch
+    from repro.config.base import DropoutPlanConfig
+    from repro.core.overlap import plan_from_config
+    from repro.core.producer import rank_host_sites
+    cfg = get_arch(arch)
+    plan = plan_from_config(DropoutPlanConfig(mode="overlap", p=0.1,
+                                              site="auto"))
+    base = rank_host_sites(cfg, plan, batch, seq, hw=hw_default)
+    cal = rank_host_sites(cfg, plan, batch, seq, hw=hw_cal)
+    if not base or not cal:
+        return None
+    default_site, tuned_site = base[0][0], cal[0][0]
+    cal_costs = {site: -score for site, score in cal}
+    return (default_site, tuned_site,
+            cal_costs.get(default_site, float("nan")),
+            cal_costs[tuned_site])
+
+
+def _forward_bitwise(arch: str, batch: int, seq: int, table) -> bool:
+    """Whole-model reduced-avatar forward: tuned table vs no table must
+    produce bit-identical logits (site may flip, blocks may change —
+    the mask bits and the arithmetic must not)."""
+    import jax
+    from repro.config import get_arch
+    from repro.config.base import DropoutPlanConfig
+    from repro.core.overlap import plan_from_config
+    from repro.models.transformer import Runtime, forward, model_init
+    from repro.tune.tables import overlay
+    cfg = get_arch(arch, reduced=True)
+    params = model_init(jax.random.PRNGKey(17), cfg)
+    if cfg.frontend == "token":
+        inputs = jax.random.randint(jax.random.PRNGKey(3), (batch, seq),
+                                    0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(jax.random.PRNGKey(3),
+                                   (batch, seq, cfg.d_model))
+    plan = plan_from_config(DropoutPlanConfig(mode="overlap", p=0.1,
+                                              seed=5, site="auto"))
+    rt = Runtime(plan=plan, step=0, attn_impl="pallas")
+
+    def run():
+        logits, _ = forward(params, cfg, rt, inputs)
+        return np.asarray(logits)
+
+    ref = run()
+    with overlay(table):
+        got = run()
+    return bool(np.array_equal(ref, got))
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tune",
+        description="calibrate the perf model and autotune the kernels")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small arch set, 1 host cell per arch, fewer "
+                         "repeats — the CI lane")
+    ap.add_argument("--archs", nargs="*", default=None,
+                    help="arch ids to tune (default: the smoke set)")
+    ap.add_argument("--batch", type=int, default=2,
+                    help="reduced-avatar batch for measure/search/proofs")
+    ap.add_argument("--seq", type=int, default=128,
+                    help="reduced-avatar seq for measure/search/proofs")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timing repeats per measured cell")
+    ap.add_argument("--full-batch", type=int, default=256,
+                    help="shipped-config batch for the site cells")
+    ap.add_argument("--full-seq", type=int, default=4096,
+                    help="shipped-config seq for the site cells")
+    ap.add_argument("--out", default="TUNED.json")
+    args = ap.parse_args(argv)
+
+    from repro.config import list_archs
+    from repro.perfmodel.hardware import TPU_V5E
+    from repro.tune import calibrate as cal_mod
+    from repro.tune import search
+    from repro.tune.tables import TunedCell, TunedTable, cell_key, overlay
+
+    archs = tuple(args.archs) if args.archs else cal_mod.SMOKE_ARCHS
+    repeats = min(args.repeats, 2) if args.smoke else args.repeats
+
+    # -- 1. calibrate ------------------------------------------------------
+    _log(f"calibrating on {', '.join(archs)} "
+         f"(b{args.batch} s{args.seq} x{repeats} repeats)")
+    cal, measurements = cal_mod.calibrate(archs, batch=args.batch,
+                                          seq=args.seq, repeats=repeats)
+    _log(f"residuals: closed-form {cal.residual_closed_form:.3f} -> "
+         f"calibrated {cal.residual_calibrated:.3f} "
+         f"({cal.n_cells} cells)")
+    if not cal.residual_calibrated < cal.residual_closed_form:
+        _log("FAIL: calibration does not beat closed-form constants")
+        return 2
+    hw_cal = cal.hardware()
+
+    # -- 2. search ---------------------------------------------------------
+    from repro.config import get_arch
+    gemm_blocks: Dict = {}
+    mask_cols: Dict = {}
+    flash_blocks: Dict = {}
+    tunings = []
+    for arch in archs:
+        cells = search.gemm_cells_for_arch(arch, args.batch, args.seq)
+        if not cells:
+            _log(f"{arch}: no tileable host cells, skipping")
+            continue
+        if args.smoke:
+            cells = cells[:1]
+        cfg_r = get_arch(arch, reduced=True)
+        mask = (args.batch, cfg_r.n_heads, args.seq, args.seq)
+        for site, gemm in cells:
+            t = search.tune_cell(arch, site, gemm, mask, hw_cal,
+                                 args.batch, args.seq,
+                                 max_gate_runs=6 if args.smoke else 12)
+            tunings.append(t)
+            n_rej = len(t.rejected)
+            _log(f"{arch}/{site} {gemm}: {t.default.blocks} -> "
+                 f"{t.tuned.blocks} mc{t.tuned.mask_cols} "
+                 f"({len(t.accepted)} accepted, {n_rej} gate-rejected)")
+            if t.tuned != t.default:
+                gemm_blocks[t.gemm] = t.tuned.blocks
+                sqsk = (mask[2], mask[3])
+                mask_cols[sqsk] = t.tuned.mask_cols
+                flash_blocks[sqsk] = t.tuned.flash
+    gate_rejections = sum(len(t.rejected) for t in tunings)
+    _log(f"search: {len(gemm_blocks)} tuned GEMM shapes, "
+         f"{gate_rejections} candidates killed by the safety gates")
+
+    # -- 3. resolve shipped-config auto sites ------------------------------
+    cells_out: Dict[str, TunedCell] = {}
+    flips = 0
+    for arch in archs:
+        r = _site_costs(arch, args.full_batch, args.full_seq,
+                        TPU_V5E, hw_cal)
+        if r is None:
+            continue
+        default_site, tuned_site, default_s, predicted_s = r
+        flipped = tuned_site != default_site
+        flips += bool(flipped)
+        proof = {"verify": True, "forward_bitwise": False}
+        for t in tunings:
+            if t.arch == arch:
+                proof.update({k: v for k, v in t.proof.items()})
+        key = cell_key(arch, args.full_batch, args.full_seq, "f32")
+        cells_out[key] = TunedCell(
+            key=key, site=tuned_site, default_site=default_site,
+            predicted_s=predicted_s, default_s=default_s, proof=proof,
+            measured_on=f"{arch}-reduced b{args.batch} s{args.seq}")
+        _log(f"{arch} @ b{args.full_batch} s{args.full_seq}: "
+             f"{default_site} -> {tuned_site}"
+             f"{'  [FLIP]' if flipped else ''}")
+
+    table = TunedTable(calibration=cal, gemm_blocks=gemm_blocks,
+                       mask_cols=mask_cols, flash_blocks=flash_blocks,
+                       cells=cells_out)
+
+    # -- 4a. static verifier lint sweep under the table --------------------
+    from repro import analysis
+    from repro.config.base import DropoutPlanConfig
+    from repro.core.schedule import compile_schedule
+    swept = failures = 0
+    with overlay(table):
+        for arch in list_archs():
+            cfg_r = get_arch(arch, reduced=True)
+            try:
+                sched = compile_schedule(
+                    cfg_r, DropoutPlanConfig(mode="overlap", p=0.1,
+                                             site="auto"),
+                    args.batch, args.seq, attn_impl="pallas")
+                analysis.verify_schedule(cfg_r, sched,
+                                         cell=f"tune-lint:{arch}")
+                swept += 1
+            except Exception as e:
+                failures += 1
+                _log(f"LINT FAIL {arch}: {type(e).__name__}: {e}")
+    _log(f"lint sweep: {swept} schedules verified, {failures} failures")
+    if failures:
+        return 3
+
+    # -- 4b. forward bit-identity per tuned cell ---------------------------
+    for arch in archs:
+        key = cell_key(arch, args.full_batch, args.full_seq, "f32")
+        if key not in cells_out:
+            continue
+        ok = _forward_bitwise(arch, args.batch, args.seq, table)
+        c = cells_out[key]
+        proof = dict(c.proof)
+        proof["forward_bitwise"] = ok
+        cells_out[key] = TunedCell(
+            key=c.key, site=c.site, default_site=c.default_site,
+            predicted_s=c.predicted_s, default_s=c.default_s,
+            proof=proof, measured_on=c.measured_on)
+        _log(f"{arch}: forward bitwise tuned-vs-untuned: "
+             f"{'OK' if ok else 'MISMATCH'}")
+        if not ok:
+            return 4
+    table.cells = cells_out
+
+    if flips < 1:
+        _log("FAIL: no shipped config flips its auto site under the "
+             "tuned table")
+        return 5
+
+    # -- 5. persist --------------------------------------------------------
+    table.save(args.out)
+    _log(f"wrote {args.out}: {len(gemm_blocks)} gemm shapes, "
+         f"{len(cells_out)} cells, {flips} site flips, calibration "
+         f"residual {cal.residual_calibrated:.3f} "
+         f"(closed-form {cal.residual_closed_form:.3f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,309 @@
+"""Measurement calibration of the perf model.
+
+Runs the shipped configs' host-GEMM cells through the real kernels in
+interpret mode, extracts per-op cost features from their compiled HLO
+(roofline/hlo.feature_vector — matmul flops, HBM bytes, pallas-region
+bytes, collective bytes) plus the analytic RNG op counts and kernel grid
+step counts, and fits the perfmodel's constants to the measured wall
+times:
+
+  t  ~=  th_mma * flops + th_hbm * bytes + th_rng * rng_ops
+         + th_step * grid_steps
+
+by non-negative least squares, then converts the fitted sensitivities to
+effective throughputs (Hardware.calibrated). The interference factors
+are fitted from the (plain dot, standalone RNG, fused GEMM+RNG) triples
+per cell via the paper's Fig. 5f composition, replacing the hand-set
+constants; the residual report compares the calibrated predictions
+against the closed-form spec-sheet model on the same measured cells.
+
+Wall clocks here are CPU interpret-mode numbers — they calibrate the
+model for *this* platform's ranking decisions (that is the point: the
+closed-form TPU constants are off by orders of magnitude on these
+cells, which nothing ever checked before).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.perfmodel.hardware import TPU_V5E, Hardware
+from repro.perfmodel.model import fused_host_time, rng_ops_per_elem
+from repro.tune.tables import Calibration
+
+# interference-fit clamps: interpret mode has no real MXU/VPU overlap,
+# so raw ratios can be extreme; the model only needs sane positives.
+_GIF_RANGE = (1.01, 8.0)
+_RIF_RANGE = (1.05, 8.0)
+
+# archs measured by --smoke (diverse block families, tiny reduced forms)
+SMOKE_ARCHS = ("llama2-7b", "yi-6b", "qwen3-8b", "musicgen-large")
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """One measured host cell: the (plain dot, standalone RNG, fused
+    GEMM+RNG) wall-time triple plus its cost features."""
+    arch: str
+    site: str
+    m: int
+    n: int
+    k: int
+    mask: Tuple[int, int, int, int]       # (b, h, sq, sk)
+    rounds: int
+    dtype_bytes: int
+    n_steps: int                          # fused kernel grid steps
+    rng_steps: int                        # standalone kernel grid steps
+    t_dot: float
+    t_rng: float
+    t_fused: float
+    features: Dict[str, float]            # fused-kernel HLO feature_vector
+
+    @property
+    def mask_elems(self) -> float:
+        b, h, sq, sk = self.mask
+        return float(b) * h * sq * sk
+
+    @property
+    def rng_ops(self) -> float:
+        return self.mask_elems * rng_ops_per_elem(self.rounds)
+
+
+def _wall(fn, *args, repeats: int = 3) -> float:
+    """Min-of-N wall time of a jitted callable (post-warmup)."""
+    import jax
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _hlo_features(fn, *args) -> Dict[str, float]:
+    import jax
+    from repro.roofline.hlo import feature_vector
+    try:
+        text = jax.jit(fn).lower(*args).compile().as_text()
+    except Exception:
+        return {}
+    return feature_vector(text)
+
+
+def measure_cell(arch: str, site: str, m: int, n: int, k: int,
+                 mask: Tuple[int, int, int, int], rounds: int = 7,
+                 seed: int = 7, repeats: int = 3
+                 ) -> Optional[Measurement]:
+    """Measure one host cell; None when the shape can't host (the fused
+    kernel would fall back and the triple would not be comparable)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.producer import pick_gemm_blocks
+    from repro.kernels import ops
+    from repro.kernels.philox import DEFAULT_BK, DEFAULT_ROWS32_BLK
+
+    blocks = pick_gemm_blocks(m, n, k)
+    if blocks is None:
+        return None
+    bm, bn, bk = blocks
+    b, h, sq, sk = mask
+    kx = jax.random.PRNGKey(seed)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(kx, 1), (k, n), jnp.float32)
+
+    dot = jax.jit(lambda a_, b_: a_ @ b_)
+
+    def fused(a_, b_):
+        return ops.fused_qkv_gemm_rng(
+            a_, b_, mask_batch=b, mask_heads=h, mask_sq=sq, mask_sk=sk,
+            p=0.1, seed=seed, salt=3, rounds=rounds,
+            block_m=bm, block_n=bn, block_k=bk)
+
+    fused_j = jax.jit(fused)
+    y, mk = fused_j(x, w)
+    if mk is None:                     # Region 3 at this shape: skip
+        return None
+
+    def rng():
+        return ops.dropout_mask(b, h, sq, sk, 0.1, seed, 3, rounds)
+
+    rng_j = jax.jit(rng)
+    rows32 = b * h * (sq // 32)
+    rng_steps = (-(-rows32 // DEFAULT_ROWS32_BLK)) \
+        * (-(-sk // min(DEFAULT_BK, sk)))
+    return Measurement(
+        arch=arch, site=site, m=m, n=n, k=k, mask=mask, rounds=rounds,
+        dtype_bytes=4,
+        n_steps=(m // bm) * (n // bn) * (k // bk),
+        rng_steps=rng_steps,
+        t_dot=_wall(dot, x, w, repeats=repeats),
+        t_rng=_wall(rng_j, repeats=repeats),
+        t_fused=_wall(fused_j, x, w, repeats=repeats),
+        features=_hlo_features(fused, x, w))
+
+
+def measure_archs(archs: Sequence[str], batch: int = 2, seq: int = 128,
+                  rounds: int = 7, repeats: int = 3) -> List[Measurement]:
+    """The calibration cell sweep: every tileable dense host site of each
+    arch's reduced avatar at an interpret-runnable shape."""
+    from repro.config import get_arch
+    from repro.core.producer import block_gemm_shapes
+    out: List[Measurement] = []
+    for arch in archs:
+        cfg = get_arch(arch, reduced=True)
+        mask = (batch, cfg.n_heads, seq, seq)
+        for site, (m, n, k) in block_gemm_shapes(cfg, batch, seq).items():
+            meas = measure_cell(arch, site, m, n, k, mask, rounds=rounds,
+                                repeats=repeats)
+            if meas is not None:
+                out.append(meas)
+    return out
+
+
+def _nnls(A: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Tiny non-negative least squares: solve, clamp negative coords to
+    zero, re-solve on the surviving columns until stable."""
+    active = list(range(A.shape[1]))
+    theta = np.zeros(A.shape[1])
+    for _ in range(A.shape[1] + 1):
+        if not active:
+            break
+        sol, *_ = np.linalg.lstsq(A[:, active], y, rcond=None)
+        if (sol >= 0).all():
+            for i, c in enumerate(active):
+                theta[c] = sol[i]
+            return theta
+        active = [c for c, v in zip(active, sol) if v > 0]
+    for i, c in enumerate(active):
+        theta[c] = max(0.0, float(sol[i]))
+    return theta
+
+
+def _analytic_bytes(meas: Measurement) -> float:
+    """Operand+output traffic of the fused cell (dtype operands, f32 out,
+    packed mask) — used when HLO features are unavailable."""
+    m, n, k, dt = meas.m, meas.n, meas.k, meas.dtype_bytes
+    return (m * k + k * n) * dt + m * n * 4.0 + meas.mask_elems / 8.0
+
+
+def fit(measurements: Sequence[Measurement], source: str,
+        base: Hardware = TPU_V5E) -> Calibration:
+    """Fit Hardware constants + interference factors to the measured
+    triples, then report residuals vs the closed-form defaults."""
+    if not measurements:
+        raise ValueError("no measurements to calibrate from")
+    rows, y = [], []
+    for ms in measurements:
+        flops = 2.0 * ms.m * ms.n * ms.k
+        mask_bytes = ms.mask_elems / 8.0
+        # one row per member of the triple: shared terms, different mixes
+        rows.append([flops, (ms.m * ms.k + ms.k * ms.n) * ms.dtype_bytes
+                     + ms.m * ms.n * 4.0, 0.0, 0.0])
+        y.append(ms.t_dot)
+        rows.append([0.0, mask_bytes, ms.rng_ops, ms.rng_steps])
+        y.append(ms.t_rng)
+        feats = ms.features
+        fbytes = feats.get("bytes") or _analytic_bytes(ms)
+        rows.append([feats.get("flops") or flops, fbytes, ms.rng_ops,
+                     ms.n_steps])
+        y.append(ms.t_fused)
+    theta = _nnls(np.asarray(rows), np.asarray(y))
+    eps = 1e-18
+    mma = 1.0 / max(theta[0], eps) if theta[0] > 0 else base.mma_flops
+    hbm = 1.0 / max(theta[1], eps) if theta[1] > 0 else base.hbm_bw
+    nonmma = 1.0 / max(theta[2], eps) if theta[2] > 0 \
+        else base.nonmma_ops
+    step = float(theta[3])
+
+    # interference from the triples (Fig. 5f composition, measured):
+    gifs, rifs = [], []
+    for ms in measurements:
+        if ms.t_dot <= 0 or ms.t_rng <= 0:
+            continue
+        gif = max(ms.t_fused - ms.t_rng, 0.0) / ms.t_dot
+        gifs.append(min(max(gif, _GIF_RANGE[0]), _GIF_RANGE[1]))
+        exposed = max(0.0, ms.t_fused - gif * ms.t_dot)
+        hidden = ms.t_rng - exposed
+        rif = (gif * ms.t_dot / hidden) if hidden > 0 else _RIF_RANGE[1]
+        rifs.append(min(max(rif, _RIF_RANGE[0]), _RIF_RANGE[1]))
+    gif = float(np.median(gifs)) if gifs else base.gemm_interference
+    rif = float(np.median(rifs)) if rifs else base.rng_interference
+
+    def residual(hw: Hardware) -> float:
+        errs = []
+        for ms in measurements:
+            pred = fused_host_time(ms.m, ms.n, ms.k, ms.mask_elems, hw,
+                                   rounds=ms.rounds,
+                                   dtype_bytes=ms.dtype_bytes,
+                                   blocks=None)
+            errs.append(abs(pred - ms.t_fused) / ms.t_fused)
+        return float(np.mean(errs))
+
+    def make(scale: float) -> Hardware:
+        return Hardware.calibrated(
+            base, mma_flops=mma / scale, hbm_bw=hbm / scale,
+            nonmma_ops=nonmma / scale, rng_interference=rif,
+            gemm_interference=gif, step_overhead=step * scale,
+            source=source)
+
+    # one global rescale centers the composed prediction on the measured
+    # times (the sum-form fit vs the max-form model leaves a bounded
+    # systematic factor; the median ratio removes it)
+    hw1 = make(1.0)
+    ratios = [ms.t_fused / max(
+        fused_host_time(ms.m, ms.n, ms.k, ms.mask_elems, hw1,
+                        rounds=ms.rounds, dtype_bytes=ms.dtype_bytes),
+        1e-15) for ms in measurements]
+    scale = float(np.median(ratios)) or 1.0
+    hw = make(scale)
+    return Calibration(
+        source=source,
+        mma_flops=hw.mma_flops, hbm_bw=hw.hbm_bw,
+        nonmma_ops=hw.nonmma_ops, rng_interference=rif,
+        gemm_interference=gif, step_overhead=hw.step_overhead,
+        residual_closed_form=residual(base),
+        residual_calibrated=residual(hw),
+        n_cells=len(measurements))
+
+
+def residual_rows(measurements: Sequence[Measurement],
+                  cal: Calibration, base: Hardware = TPU_V5E
+                  ) -> List[Dict[str, object]]:
+    """Per-cell closed-form vs calibrated prediction rows (BENCH_tune)."""
+    hw = cal.hardware(base)
+    out = []
+    for ms in measurements:
+        closed = fused_host_time(ms.m, ms.n, ms.k, ms.mask_elems, base,
+                                 rounds=ms.rounds,
+                                 dtype_bytes=ms.dtype_bytes)
+        fitted = fused_host_time(ms.m, ms.n, ms.k, ms.mask_elems, hw,
+                                 rounds=ms.rounds,
+                                 dtype_bytes=ms.dtype_bytes)
+        out.append({
+            "arch": ms.arch, "site": ms.site,
+            "gemm": [ms.m, ms.n, ms.k], "mask": list(ms.mask),
+            "measured_s": ms.t_fused,
+            "pred_closed_form_s": closed,
+            "pred_calibrated_s": fitted,
+            "rel_err_closed_form": abs(closed - ms.t_fused) / ms.t_fused,
+            "rel_err_calibrated": abs(fitted - ms.t_fused) / ms.t_fused,
+        })
+    return out
+
+
+def calibrate(archs: Optional[Iterable[str]] = None, batch: int = 2,
+              seq: int = 128, repeats: int = 3
+              ) -> Tuple[Calibration, List[Measurement]]:
+    """Measure + fit. Returns the Calibration and the raw measurements
+    (the CLI turns them into the BENCH_tune residual report)."""
+    archs = tuple(archs) if archs is not None else SMOKE_ARCHS
+    measurements = measure_archs(archs, batch=batch, seq=seq,
+                                 repeats=repeats)
+    source = f"cpu-interpret b{batch} s{seq} x{len(measurements)}cells"
+    return fit(measurements, source), measurements

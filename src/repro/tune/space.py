@@ -1,0 +1,99 @@
+"""The legal kernel-config search space for one tuning cell.
+
+A ``Point`` is one joint choice of GEMM tile sizes, RNG emission-grid
+column block, flash-attention blocks and philox_bits. The space only
+enumerates *representable* values (divisors, 8-aligned, kernel caps);
+whether a point is *admissible* is decided by the search gates
+(verify_schedule + bit identity), never here — the space deliberately
+contains bit-changing candidates (philox_bits=8, accumulation-order
+changing bk, softmax-order changing flash blocks) precisely so the
+gates are exercised on every cell rather than vacuously passing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Tuple
+
+# caps mirror core/producer + kernels/gemm_rng defaults
+BLOCK_M_CAP = 256
+BLOCK_N_CAP = 256
+BLOCK_K_CAP = 512
+MASK_COL_CHOICES = (64, 128, 256, 512, 1024, 2048, 4096)
+FLASH_CHOICES = ((128, 128), (256, 128), (128, 256), (256, 256))
+PHILOX_BITS_CHOICES = (32, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class Point:
+    blocks: Tuple[int, int, int]          # (bm, bn, bk)
+    mask_cols: int                        # RNG emission column block
+    flash: Tuple[int, int]                # (block_q, block_k)
+    philox_bits: int
+
+
+def divisor_choices(dim: int, cap: int) -> List[int]:
+    """8-aligned divisors of ``dim`` up to ``cap``, ascending."""
+    return [d for d in range(8, min(cap, dim) + 1, 8) if dim % d == 0]
+
+
+def default_point(m: int, n: int, k: int, sq: int, sk: int) -> Point:
+    """The shipped defaults — what an untuned run executes."""
+    from repro.core.producer import _largest_divisor
+    return Point(
+        blocks=(_largest_divisor(m, BLOCK_M_CAP),
+                _largest_divisor(n, BLOCK_N_CAP),
+                _largest_divisor(k, BLOCK_K_CAP)),
+        mask_cols=2048, flash=(128, 128), philox_bits=32)
+
+
+def _coord_choices(point: Point, coord: str, m: int, n: int, k: int,
+                   sq: int, sk: int) -> List[object]:
+    if coord == "bm":
+        return divisor_choices(m, BLOCK_M_CAP)
+    if coord == "bn":
+        return divisor_choices(n, BLOCK_N_CAP)
+    if coord == "bk":
+        return divisor_choices(k, BLOCK_K_CAP)
+    if coord == "mask_cols":
+        return [c for c in MASK_COL_CHOICES if sk % min(c, sk) == 0]
+    if coord == "flash":
+        return [(bq, bkk) for bq, bkk in FLASH_CHOICES
+                if sq % bq == 0 and sk % bkk == 0]
+    if coord == "philox_bits":
+        return list(PHILOX_BITS_CHOICES)
+    raise ValueError(coord)
+
+
+COORDS = ("bm", "bn", "bk", "mask_cols", "flash", "philox_bits")
+
+
+def with_coord(point: Point, coord: str, value) -> Point:
+    if coord == "bm":
+        return dataclasses.replace(point,
+                                   blocks=(value,) + point.blocks[1:])
+    if coord == "bn":
+        b = point.blocks
+        return dataclasses.replace(point, blocks=(b[0], value, b[2]))
+    if coord == "bk":
+        return dataclasses.replace(point,
+                                   blocks=point.blocks[:2] + (value,))
+    if coord == "mask_cols":
+        return dataclasses.replace(point, mask_cols=value)
+    if coord == "flash":
+        return dataclasses.replace(point, flash=value)
+    if coord == "philox_bits":
+        return dataclasses.replace(point, philox_bits=value)
+    raise ValueError(coord)
+
+
+def neighbors(point: Point, coord: str, m: int, n: int, k: int,
+              sq: int, sk: int) -> Iterator[Point]:
+    """Coordinate moves: every legal value of ``coord`` other than the
+    current one (the per-coordinate lists are short, so a full line
+    search per coordinate is cheaper than stepping)."""
+    cur = {"bm": point.blocks[0], "bn": point.blocks[1],
+           "bk": point.blocks[2], "mask_cols": point.mask_cols,
+           "flash": point.flash, "philox_bits": point.philox_bits}[coord]
+    for v in _coord_choices(point, coord, m, n, k, sq, sk):
+        if v != cur:
+            yield with_coord(point, coord, v)

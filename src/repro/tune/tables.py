@@ -1,0 +1,293 @@
+"""Tuned tables: persistence + the process-wide consumption hooks.
+
+A ``TunedTable`` is what the autotuner proves and the planner consumes:
+
+  * ``calibration`` — the fitted Hardware (throughputs, interference,
+    per-step overhead) plus the residual report that justifies it.
+  * ``gemm_blocks`` — exact-shape ``(m, n, k) -> (bm, bn, bk)`` tile
+    overrides, each bit-identity-proven by the search before it was
+    recorded. Keyed by the exact GEMM shape so a proof never applies
+    beyond the operands it was established on.
+  * ``mask_cols`` — per ``(sq, sk)`` plane, the RNG emission-grid
+    column block for the fused producers.
+  * ``flash_blocks`` — per ``(sq, sk)``, the flash-attention (bq, bk).
+  * ``cells`` — per (config, shape-bucket, dtype, topology): the tuned
+    ``site="auto"`` resolution with its predicted/default costs and the
+    proof record.
+
+Consumption is via one module-global active table: ``install(table)``
+(clears the schedule compile cache — compiled plans embed block
+choices), ``uninstall()``, and the ``overlay(table)`` context manager
+the search uses to judge a candidate without leaking it. The lookup
+helpers (``active_blocks`` / ``active_mask_cols`` / ``active_flash_blocks``
+/ ``active_hardware``) are what core/producer, core/schedule,
+models/attention and analysis/counters consult — every layer resolves
+through the SAME functions, so the planned emission layout, the executed
+kernel grid, and the verified counter tiling cannot disagree about a
+tuned value. No table installed -> every helper returns its
+deterministic default (the shipped behavior, bit-for-bit).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+from typing import Dict, Optional, Tuple
+
+from repro.perfmodel.hardware import TPU_V5E, Hardware
+
+SCHEMA = "tuned/v1"
+
+# legality floor shared with core/producer: fused kernel blocks must be
+# multiples of 8 and divide their dim; mask cols must divide sk.
+_BLOCK_ALIGN = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """The fitted constants and the evidence for them."""
+    source: str                       # platform + cell count tag
+    mma_flops: float
+    hbm_bw: float
+    nonmma_ops: float
+    rng_interference: float
+    gemm_interference: float
+    step_overhead: float
+    residual_closed_form: float       # mean relative error, spec constants
+    residual_calibrated: float        # mean relative error, fitted
+    n_cells: int
+
+    def hardware(self, base: Hardware = TPU_V5E) -> Hardware:
+        return Hardware.calibrated(
+            base, mma_flops=self.mma_flops, hbm_bw=self.hbm_bw,
+            nonmma_ops=self.nonmma_ops,
+            rng_interference=self.rng_interference,
+            gemm_interference=self.gemm_interference,
+            step_overhead=self.step_overhead, source=self.source)
+
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Dict[str, object]) -> "Calibration":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedCell:
+    """One (config, shape-bucket, dtype, topology) tuning result."""
+    key: str                          # cell_key(...)
+    site: str                         # tuned site="auto" resolution
+    default_site: str                 # what the closed-form model picked
+    predicted_s: float                # calibrated cost model, tuned choice
+    default_s: float                  # calibrated cost model, default choice
+    proof: Dict[str, bool]            # verify / mask_bits / gemm_bitwise /
+                                      # forward_bitwise
+    measured_on: str = ""             # the reduced avatar the proofs ran on
+
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Dict[str, object]) -> "TunedCell":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+
+def cell_key(arch: str, batch: int, seq: int, dtype: str,
+             mesh: str = "1x1") -> str:
+    """Shape-bucketed cell key: batch and seq round UP to a power of two
+    so nearby shapes share one tuning decision."""
+    def up2(v: int) -> int:
+        p = 1
+        while p < v:
+            p *= 2
+        return p
+    return f"{arch}|b{up2(max(1, batch))}s{up2(max(1, seq))}|{dtype}|{mesh}"
+
+
+def _shape_key(dims: Tuple[int, ...]) -> str:
+    return "x".join(str(int(d)) for d in dims)
+
+
+class TunedTable:
+    def __init__(self, calibration: Optional[Calibration] = None,
+                 gemm_blocks: Optional[Dict[Tuple[int, int, int],
+                                            Tuple[int, int, int]]] = None,
+                 mask_cols: Optional[Dict[Tuple[int, int], int]] = None,
+                 flash_blocks: Optional[Dict[Tuple[int, int],
+                                             Tuple[int, int]]] = None,
+                 cells: Optional[Dict[str, TunedCell]] = None):
+        self.calibration = calibration
+        self.gemm_blocks = dict(gemm_blocks or {})
+        self.mask_cols = dict(mask_cols or {})
+        self.flash_blocks = dict(flash_blocks or {})
+        self.cells = dict(cells or {})
+
+    # -- lookups (legality re-checked so a hand-edited table can only
+    #    fall back to defaults, never produce an illegal kernel grid) ----
+
+    def blocks_for(self, m: int, n: int, k: int
+                   ) -> Optional[Tuple[int, int, int]]:
+        b = self.gemm_blocks.get((m, n, k))
+        if b is None:
+            return None
+        bm, bn, bk = b
+        for dim, blk in ((m, bm), (n, bn), (k, bk)):
+            if blk <= 0 or dim % blk or blk % _BLOCK_ALIGN:
+                return None
+        return (bm, bn, bk)
+
+    def mask_cols_for(self, sq: int, sk: int) -> Optional[int]:
+        c = self.mask_cols.get((sq, sk))
+        if c is None or c <= 0 or sk % min(c, sk):
+            return None
+        return int(c)
+
+    def flash_blocks_for(self, sq: int, sk: int
+                         ) -> Optional[Tuple[int, int]]:
+        b = self.flash_blocks.get((sq, sk))
+        if b is None:
+            return None
+        bq, bk = b
+        if bq <= 0 or bk <= 0 or sq % bq or sk % bk or bq % 32:
+            return None
+        return (bq, bk)
+
+    def cell(self, key: str) -> Optional[TunedCell]:
+        return self.cells.get(key)
+
+    def hardware(self) -> Optional[Hardware]:
+        return self.calibration.hardware() if self.calibration else None
+
+    # -- persistence ----------------------------------------------------
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "schema": SCHEMA,
+            "calibration": (self.calibration.to_json()
+                            if self.calibration else None),
+            "gemm_blocks": {_shape_key(s): list(b)
+                            for s, b in sorted(self.gemm_blocks.items())},
+            "mask_cols": {_shape_key(s): c
+                          for s, c in sorted(self.mask_cols.items())},
+            "flash_blocks": {_shape_key(s): list(b)
+                             for s, b in sorted(self.flash_blocks.items())},
+            "cells": {k: c.to_json()
+                      for k, c in sorted(self.cells.items())},
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, object]) -> "TunedTable":
+        if d.get("schema") != SCHEMA:
+            raise ValueError(
+                f"unsupported tuned-table schema {d.get('schema')!r} "
+                f"(want {SCHEMA!r})")
+
+        def unkey(s: str) -> Tuple[int, ...]:
+            return tuple(int(v) for v in s.split("x"))
+
+        cal = d.get("calibration")
+        return cls(
+            calibration=Calibration.from_json(cal) if cal else None,
+            gemm_blocks={unkey(s): tuple(b)
+                         for s, b in (d.get("gemm_blocks") or {}).items()},
+            mask_cols={unkey(s): int(c)
+                       for s, c in (d.get("mask_cols") or {}).items()},
+            flash_blocks={unkey(s): tuple(b)
+                          for s, b in (d.get("flash_blocks") or {}).items()},
+            cells={k: TunedCell.from_json(c)
+                   for k, c in (d.get("cells") or {}).items()})
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "TunedTable":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+# --------------------------------------------------------------------------
+# the process-wide active table
+# --------------------------------------------------------------------------
+
+_ACTIVE: Optional[TunedTable] = None
+
+
+def _clear_schedule_cache() -> None:
+    # compiled schedules embed block/site choices; a table change must
+    # invalidate them. Lazy import: core.schedule imports producer which
+    # consults this module.
+    try:
+        from repro.core import schedule
+    except ImportError:          # pragma: no cover - partial interpreter
+        return
+    schedule.clear_cache()
+
+
+def install(table: Optional[TunedTable]) -> None:
+    """Make ``table`` the process-wide tuned table (None uninstalls)."""
+    global _ACTIVE
+    _ACTIVE = table
+    _clear_schedule_cache()
+
+
+def uninstall() -> None:
+    install(None)
+
+
+def installed() -> Optional[TunedTable]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def overlay(table: Optional[TunedTable]):
+    """Temporarily install ``table`` (the search judges candidates under
+    an overlay so a rejected candidate never leaks into the defaults)."""
+    prev = _ACTIVE
+    install(table)
+    try:
+        yield table
+    finally:
+        install(prev)
+
+
+def load_default(path: str = "TUNED.json") -> Optional[TunedTable]:
+    """Install the repo's committed table if present; None otherwise."""
+    if not os.path.exists(path):
+        return None
+    table = TunedTable.load(path)
+    install(table)
+    return table
+
+
+# -- the hooks the planner/executor/verifier consult ----------------------
+
+def active_blocks(m: int, n: int, k: int
+                  ) -> Optional[Tuple[int, int, int]]:
+    return _ACTIVE.blocks_for(m, n, k) if _ACTIVE is not None else None
+
+
+def active_mask_cols(sq: int, sk: int, default: int = 2048) -> int:
+    if _ACTIVE is not None:
+        c = _ACTIVE.mask_cols_for(sq, sk)
+        if c is not None:
+            return c
+    return default
+
+
+def active_flash_blocks(sq: int, sk: int,
+                        default: Tuple[int, int] = (128, 128)
+                        ) -> Tuple[int, int]:
+    if _ACTIVE is not None:
+        b = _ACTIVE.flash_blocks_for(sq, sk)
+        if b is not None:
+            return b
+    return default
+
+
+def active_hardware() -> Optional[Hardware]:
+    return _ACTIVE.hardware() if _ACTIVE is not None else None

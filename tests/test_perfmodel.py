@@ -85,3 +85,23 @@ def test_tpu_adaptation_sane():
                      ffn_gated=True, dtype_bytes=2)
     s = block_speedup(shp, TPU_V5E)
     assert 1.0 < s < 1.5
+
+
+def test_headline_snapshot_uncalibrated_bit_exact():
+    """The closed-form model under the DEFAULT (uncalibrated) Hardware
+    must reproduce these values bit-for-bit: the calibration machinery
+    (Hardware.calibrated / step_overhead / tuned tables) may only change
+    predictions when a calibration is explicitly installed. Any drift
+    here means a default changed underneath the headline table."""
+    t = headline_table()
+    assert t["gpt3"]["model"] == 1.059887232719141
+    assert t["llama2"]["model"] == 1.1405163283649824
+    assert t["moe"]["model"] == 1.1597352590332881
+
+
+def test_default_hardware_not_calibrated():
+    """Shipped Hardware constants carry no calibration tag — the
+    calibrated rank objective in rank_host_gemms must stay dormant."""
+    assert not GH100.is_calibrated
+    assert not TPU_V5E.is_calibrated
+    assert GH100.step_overhead == 0.0

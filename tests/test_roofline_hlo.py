@@ -1,0 +1,190 @@
+"""Hand-built HLO fixtures for the roofline module analyzer — the cost
+features repro.tune.calibrate fits the perf model against. Each fixture
+pins one accounting rule: dot FLOPs from contracting dims, while
+trip-count multiplication, collective byte conventions, fusion
+slice-aware in/out bytes, and the pallas-region call-boundary traffic
+that feeds the calibration feature vector."""
+import pytest
+
+from repro.roofline.hlo import (
+    HloModule,
+    analyze_module,
+    collective_bytes,
+    count_op,
+    feature_vector,
+    shape_bytes,
+)
+
+_DOT = """\
+ENTRY %main (p0: f32[128,64], p1: f32[64,256]) -> f32[128,256] {
+  %p0 = f32[128,64] parameter(0)
+  %p1 = f32[64,256] parameter(1)
+  ROOT %d = f32[128,256] dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+_WHILE = """\
+%add.red (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+
+%cond (c: (s32[], f32[2,2])) -> pred[] {
+  %c = (s32[], f32[2,2]) parameter(0)
+  %i = s32[] get-tuple-element(%c), index=0
+  %n = s32[] constant(8)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (b: (s32[], f32[2,2])) -> (s32[], f32[2,2]) {
+  %b = (s32[], f32[2,2]) parameter(0)
+  %i2 = s32[] get-tuple-element(%b), index=0
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i2, %one)
+  %xx = f32[2,2] get-tuple-element(%b), index=1
+  %y = f32[2,2] dot(%xx, %xx), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[2,2]) tuple(%ip, %y)
+}
+
+ENTRY %main (p: (s32[], f32[2,2])) -> (s32[], f32[2,2]) {
+  %p = (s32[], f32[2,2]) parameter(0)
+  ROOT %w = (s32[], f32[2,2]) while(%p), condition=%cond, body=%body
+}
+"""
+
+
+def test_dot_flops_from_contracting_dims():
+    r = analyze_module(_DOT)
+    # 2 * out_elems * contraction = 2 * (128*256) * 64
+    assert r["flops"] == 2.0 * 128 * 256 * 64
+
+
+def test_dot_bytes_operands_plus_output():
+    r = analyze_module(_DOT)
+    # parameters alias (0 bytes); the dot reads both operands + writes out
+    assert r["bytes"] == (128 * 64 + 64 * 256 + 128 * 256) * 4.0
+
+
+def test_while_trip_count_from_condition_constant():
+    mod = HloModule(_WHILE)
+    assert mod.while_trip_count("cond") == 8
+    assert mod.while_trip_count("no-such-computation") == 1
+
+
+def test_while_multiplies_body_flops():
+    r = analyze_module(_WHILE)
+    # per-iter dot: 2 * 4 * 2 = 16 flops, x8 trips
+    assert r["flops"] == 16.0 * 8
+    assert r["pallas_bytes"] == 0.0
+
+
+def test_pallas_while_charges_call_boundary_bytes_once():
+    # same loop, marked as an interpret-mode pallas grid: HBM charged by
+    # the kernel's carried operands (once), flops still loop-multiplied,
+    # and the boundary traffic surfaces as the pallas_bytes feature.
+    hlo = _WHILE.replace(
+        "while(%p), condition=%cond, body=%body",
+        "while(%p), condition=%cond, body=%body, "
+        'metadata={op_name="pallas_kernel_region"}')
+    r = analyze_module(hlo)
+    boundary = 4 + 2 * 2 * 4              # (s32[], f32[2,2]) operand
+    assert r["bytes"] == float(boundary)
+    assert r["pallas_bytes"] == float(boundary)
+    assert r["flops"] == 16.0 * 8
+
+
+_COLL = """\
+%add.red (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+
+ENTRY %main (p0: f32[16,16]) -> f32[16,16] {
+  %p0 = f32[16,16] parameter(0)
+  %ag = f32[16,16] all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[16,16] reduce-scatter(%ag), replica_groups=[4,8]<=[32], to_apply=%add.red
+  ROOT %ar = f32[16,16] all-reduce(%rs), to_apply=%add.red
+}
+"""
+
+
+def test_collective_bytes_conventions():
+    coll = collective_bytes(_COLL)
+    tensor = 16 * 16 * 4.0
+    # all-gather: gathered output; all-reduce: tensor bytes
+    assert coll["all-gather"]["bytes"] == tensor
+    assert coll["all-reduce"]["bytes"] == tensor
+    # reduce-scatter: input = per-shard result x group size (8)
+    assert coll["reduce-scatter"]["bytes"] == tensor * 8
+    assert all(v["count"] == 1.0 for v in coll.values())
+
+
+_FUSION_SLICE = """\
+%fused (fp0: f32[1024,64]) -> f32[1,64] {
+  %fp0 = f32[1024,64] parameter(0)
+  %zero = s32[] constant(0)
+  ROOT %ds = f32[1,64] dynamic-slice(%fp0, %zero, %zero), dynamic_slice_sizes={1,64}
+}
+
+ENTRY %main (p0: f32[1024,64]) -> f32[1,64] {
+  %p0 = f32[1024,64] parameter(0)
+  ROOT %f = f32[1,64] fusion(%p0), kind=kLoop, calls=%fused
+}
+"""
+
+_FUSION_DUS = """\
+%fused2 (gp0: f32[1024,64], gp1: f32[1,64]) -> f32[1024,64] {
+  %gp0 = f32[1024,64] parameter(0)
+  %gp1 = f32[1,64] parameter(1)
+  %z = s32[] constant(0)
+  ROOT %dus = f32[1024,64] dynamic-update-slice(%gp0, %gp1, %z, %z)
+}
+
+ENTRY %main (p0: f32[1024,64], p1: f32[1,64]) -> f32[1024,64] {
+  %p0 = f32[1024,64] parameter(0)
+  %p1 = f32[1,64] parameter(1)
+  ROOT %f = f32[1024,64] fusion(%p0, %p1), kind=kLoop, calls=%fused2
+}
+"""
+
+
+def test_fusion_param_consumed_by_slice_reads_slice_only():
+    r = analyze_module(_FUSION_SLICE)
+    slice_b = 1 * 64 * 4.0
+    # out: the slice result; in: the scan-stacked operand is read only
+    # through its dynamic-slice, NOT at its full 1024x64 size
+    assert r["bytes"] == slice_b + slice_b
+    assert r["bytes"] < 1024 * 64 * 4.0
+
+
+def test_fusion_dus_root_writes_update_region_only():
+    r = analyze_module(_FUSION_DUS)
+    upd = 1 * 64 * 4.0
+    # out: DUS root = 2x update (read+write the region, dest aliased);
+    # in: DUS destination param free (in-place), update param read fully
+    assert r["bytes"] == 2 * upd + 0.0 + upd
+
+
+def test_shape_bytes_flattens_tuples():
+    assert shape_bytes("(s32[], f32[2,2])") == 4 + 16
+    assert shape_bytes("bf16[8,128]") == 2 * 8 * 128
+    assert shape_bytes("pred[16]") == 16
+
+
+def test_count_op():
+    assert count_op(_COLL, "all-gather") == 1
+    assert count_op(_COLL, "all-reduce") == 1
+    assert count_op(_DOT, "dot") == 1
+
+
+def test_feature_vector_keys_and_composition():
+    fv = feature_vector(_COLL)
+    assert set(fv) == {"flops", "bytes", "pallas_bytes",
+                       "collective_bytes"}
+    assert fv["collective_bytes"] == 16 * 16 * 4.0 * (1 + 1 + 8)
+    fv2 = feature_vector(_DOT)
+    assert fv2["flops"] == 2.0 * 128 * 256 * 64
+    assert fv2["collective_bytes"] == 0.0
+    assert fv2["pallas_bytes"] == 0.0

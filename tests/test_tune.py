@@ -1,0 +1,296 @@
+"""Autotuner subsystem: tuned-table persistence + plumbing, the
+calibration fit, the search space, and the bit-identity gates. Select
+with ``-m tune`` (the check.sh tune lane)."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import producer
+from repro.perfmodel.hardware import TPU_V5E, Hardware
+from repro.tune import calibrate as cal_mod
+from repro.tune import search, space
+from repro.tune.tables import (
+    Calibration,
+    TunedCell,
+    TunedTable,
+    active_blocks,
+    active_flash_blocks,
+    active_hardware,
+    active_mask_cols,
+    cell_key,
+    install,
+    installed,
+    overlay,
+    uninstall,
+)
+
+pytestmark = pytest.mark.tune
+
+_CAL = Calibration(source="test", mma_flops=1e12, hbm_bw=1e11,
+                   nonmma_ops=1e10, rng_interference=1.4,
+                   gemm_interference=1.2, step_overhead=1e-6,
+                   residual_closed_form=1.0, residual_calibrated=0.2,
+                   n_cells=3)
+
+
+@pytest.fixture(autouse=True)
+def _no_table_leak():
+    """Every test starts and ends with no tuned table installed."""
+    uninstall()
+    yield
+    uninstall()
+
+
+# -- tables ---------------------------------------------------------------
+
+def test_table_roundtrip(tmp_path):
+    t = TunedTable(
+        calibration=_CAL,
+        gemm_blocks={(256, 192, 64): (64, 192, 64)},
+        mask_cols={(128, 128): 64},
+        flash_blocks={(128, 128): (128, 128)},
+        cells={"a|b2s128|f32|1x1": TunedCell(
+            key="a|b2s128|f32|1x1", site="prev_gemm",
+            default_site="ffn_up", predicted_s=1.0, default_s=2.0,
+            proof={"verify": True}, measured_on="a-reduced")})
+    p = os.path.join(tmp_path, "t.json")
+    t.save(p)
+    t2 = TunedTable.load(p)
+    assert t2.gemm_blocks == t.gemm_blocks
+    assert t2.mask_cols == t.mask_cols
+    assert t2.flash_blocks == t.flash_blocks
+    assert t2.cells["a|b2s128|f32|1x1"].site == "prev_gemm"
+    assert t2.calibration == _CAL
+    assert t2.hardware().is_calibrated
+
+
+def test_table_rejects_unknown_schema(tmp_path):
+    p = os.path.join(tmp_path, "bad.json")
+    with open(p, "w") as f:
+        json.dump({"schema": "tuned/v999"}, f)
+    with pytest.raises(ValueError, match="schema"):
+        TunedTable.load(p)
+
+
+def test_table_lookups_revalidate_legality():
+    """A hand-edited table can only fall back to defaults — never hand
+    an illegal grid to the kernels."""
+    t = TunedTable(
+        gemm_blocks={(256, 192, 64): (60, 192, 64),    # 60 not 8-aligned
+                     (128, 128, 64): (256, 128, 64)},  # 256 > m
+        mask_cols={(128, 128): 48},                    # 48 !| 128
+        flash_blocks={(128, 128): (96, 128)})          # 96 % 32 != 0
+    assert t.blocks_for(256, 192, 64) is None
+    assert t.blocks_for(128, 128, 64) is None
+    assert t.mask_cols_for(128, 128) is None
+    assert t.flash_blocks_for(128, 128) is None
+
+
+def test_cell_key_buckets_pow2():
+    assert cell_key("a", 256, 4096, "f32") == "a|b256s4096|f32|1x1"
+    assert cell_key("a", 200, 3000, "f32") == "a|b256s4096|f32|1x1"
+    assert cell_key("a", 1, 1, "bf16", "2x16") == "a|b1s1|bf16|2x16"
+
+
+def test_hooks_default_without_table():
+    assert installed() is None
+    assert active_blocks(256, 192, 64) is None
+    assert active_mask_cols(128, 128) == 2048
+    assert active_flash_blocks(128, 128) == (128, 128)
+    assert active_hardware() is None
+
+
+def test_install_overlay_uninstall():
+    t = TunedTable(calibration=_CAL, mask_cols={(128, 128): 64})
+    install(t)
+    assert installed() is t
+    assert active_mask_cols(128, 128) == 64
+    assert active_hardware().is_calibrated
+    with overlay(None):
+        assert active_mask_cols(128, 128) == 2048
+    assert active_mask_cols(128, 128) == 64
+    uninstall()
+    assert installed() is None
+
+
+# -- producer plumbing ----------------------------------------------------
+
+def test_producer_resolves_tuned_values():
+    """Planner-side resolvers consult the active table; kernels, the
+    schedule compiler and the verifier all resolve through these same
+    functions, so one lookup proves the whole path."""
+    m, n, k = 256, 192, 64
+    default = producer.pick_gemm_blocks(m, n, k)
+    t = TunedTable(gemm_blocks={(m, n, k): (64, 192, 64)},
+                   mask_cols={(128, 128): 64},
+                   flash_blocks={(256, 256): (128, 128)})
+    with overlay(t):
+        assert producer.pick_gemm_blocks(m, n, k) == (64, 192, 64)
+        assert producer.mask_cols_cap(128, 128) == 64
+        assert producer.mask_cols_cap(64, 64) == 2048   # not in table
+    assert producer.pick_gemm_blocks(m, n, k) == default
+    assert producer.mask_cols_cap(128, 128) == 2048
+
+
+def test_rank_host_sites_uses_calibrated_hw_from_table():
+    """Installing a calibrated table switches site="auto" ranking to the
+    net-cost objective — without a table the headroom ranking is
+    untouched (the headline snapshot pins that bit-for-bit)."""
+    from repro.config import get_arch
+    from repro.config.base import DropoutPlanConfig
+    from repro.core.overlap import plan_from_config
+    cfg = get_arch("llama2-7b")
+    plan = plan_from_config(DropoutPlanConfig(mode="overlap", p=0.1,
+                                              site="auto"))
+    base = producer.rank_host_sites(cfg, plan, 256, 4096)
+    with overlay(TunedTable(calibration=_CAL)):
+        cal = producer.rank_host_sites(cfg, plan, 256, 4096)
+    assert base and cal
+    assert {s for s, _ in base} == {s for s, _ in cal}
+    # calibrated scores are negated costs (<= 0); headroom scores are not
+    assert all(score <= 0.0 for _, score in cal)
+
+
+# -- calibration fit ------------------------------------------------------
+
+def test_nnls_nonnegative():
+    rng = np.random.default_rng(3)
+    A = rng.uniform(0.1, 1.0, (12, 4))
+    theta_true = np.array([2.0, 0.0, 1.0, 3.0])
+    theta = cal_mod._nnls(A, A @ theta_true)
+    assert (theta >= 0).all()
+    np.testing.assert_allclose(theta, theta_true, atol=1e-8)
+
+
+def _synthetic_measurement(m, n, k, t_scale=1.0):
+    mask = (2, 4, 128, 128)
+    elems = float(np.prod(mask))
+    flops = 2.0 * m * n * k
+    t_dot = flops / 1e10 * t_scale
+    t_rng = elems * 10.0 / 1e8 * t_scale
+    return cal_mod.Measurement(
+        arch="synth", site="qkv", m=m, n=n, k=k, mask=mask, rounds=7,
+        dtype_bytes=4, n_steps=4, rng_steps=2, t_dot=t_dot,
+        t_rng=t_rng, t_fused=1.2 * t_dot + 0.5 * t_rng, features={})
+
+
+def test_fit_beats_closed_form_on_synthetic_cells():
+    ms = [_synthetic_measurement(256, 192, 64),
+          _synthetic_measurement(256, 64, 64),
+          _synthetic_measurement(256, 256, 64),
+          _synthetic_measurement(512, 128, 128)]
+    cal = cal_mod.fit(ms, source="synthetic")
+    assert cal.n_cells == 4
+    assert cal.residual_calibrated < cal.residual_closed_form
+    hw = cal.hardware()
+    assert hw.is_calibrated and hw.calibrated_against == "synthetic"
+    rows = cal_mod.residual_rows(ms, cal)
+    assert len(rows) == 4
+    assert all(r["rel_err_calibrated"] < r["rel_err_closed_form"]
+               for r in rows)
+
+
+def test_calibrated_hardware_requires_source():
+    with pytest.raises(ValueError, match="source"):
+        Hardware.calibrated(
+            TPU_V5E, mma_flops=1e12, hbm_bw=1e11, nonmma_ops=1e10,
+            rng_interference=1.4, gemm_interference=1.2,
+            step_overhead=0.0, source="")
+
+
+# -- search space ---------------------------------------------------------
+
+def test_default_point_matches_shipped_producer_defaults():
+    m, n, k = 256, 192, 64
+    p = space.default_point(m, n, k, 128, 128)
+    assert p.blocks == producer.pick_gemm_blocks(m, n, k)
+    assert p.mask_cols == 2048
+    assert p.flash == (128, 128)
+    assert p.philox_bits == 32
+
+
+def test_divisor_choices_aligned():
+    assert space.divisor_choices(192, 256) == [8, 16, 24, 32, 48, 64,
+                                               96, 192]
+    assert all(d % 8 == 0 for d in space.divisor_choices(512, 512))
+
+
+def test_neighbors_exclude_current_and_respect_legality():
+    p = space.default_point(256, 192, 64, 128, 128)
+    for coord in space.COORDS:
+        for q in space.neighbors(p, coord, 256, 192, 64, 128, 128):
+            assert q != p
+    flashes = list(space.neighbors(p, "flash", 256, 192, 64, 128, 128))
+    assert flashes == []     # 256-blocks illegal at sq=sk=128
+    bits = list(space.neighbors(p, "philox_bits", 256, 192, 64,
+                                128, 128))
+    assert [q.philox_bits for q in bits] == [8]
+
+
+def test_score_illegal_point_is_inf():
+    hw = _CAL.hardware()
+    p = dataclasses.replace(space.default_point(256, 192, 64, 128, 128),
+                            blocks=(100, 192, 64))
+    assert search.score(p, 256, 192, 64, (2, 4, 128, 128), hw) \
+        == float("inf")
+    d = space.default_point(256, 192, 64, 128, 128)
+    assert np.isfinite(search.score(d, 256, 192, 64, (2, 4, 128, 128),
+                                    hw))
+
+
+# -- gates (kernel-level) -------------------------------------------------
+
+def test_gate_rejects_philox_bits_8_and_accepts_default():
+    """The mask-bits gate must kill a bit-changing candidate and pass
+    the shipped default on the same cell."""
+    m, n, k = 128, 64, 64
+    mask = (1, 2, 64, 64)
+    d = space.default_point(m, n, k, mask[2], mask[3])
+    flags, failed = search.prove_kernel_bits(d, m, n, k, mask)
+    assert failed is None
+    assert flags["mask_bits"] and flags["gemm_bitwise"]
+    bad = space.with_coord(d, "philox_bits", 8)
+    _, failed_bad = search.prove_kernel_bits(bad, m, n, k, mask)
+    assert failed_bad == "mask_bits"
+
+
+def test_shipped_tuned_table_consistent_with_ranking():
+    """The committed TUNED.json must agree with the code that produced
+    it: each cell's tuned site is what the calibrated ranking picks, its
+    default site is what the closed-form ranking picks, and the lint
+    sweep stays clean under the installed table."""
+    from repro import analysis
+    from repro.config import get_arch
+    from repro.config.base import DropoutPlanConfig
+    from repro.core.overlap import plan_from_config
+    from repro.core.schedule import compile_schedule
+    if not os.path.exists("TUNED.json"):
+        pytest.skip("no TUNED.json committed")
+    t = TunedTable.load("TUNED.json")
+    assert t.calibration is not None
+    assert (t.calibration.residual_calibrated
+            < t.calibration.residual_closed_form)
+    plan = plan_from_config(DropoutPlanConfig(mode="overlap", p=0.1,
+                                              site="auto"))
+    flips = 0
+    with overlay(t):
+        for key, cell in t.cells.items():
+            arch = key.split("|")[0]
+            cfg = get_arch(arch)
+            ranked = producer.rank_host_sites(cfg, plan, 256, 4096)
+            assert ranked[0][0] == cell.site
+            base = producer.rank_host_sites(cfg, plan, 256, 4096,
+                                            hw=TPU_V5E)
+            assert base[0][0] == cell.default_site
+            assert cell.proof.get("forward_bitwise") is True
+            flips += cell.site != cell.default_site
+            cfg_r = get_arch(arch, reduced=True)
+            sched = compile_schedule(
+                cfg_r, DropoutPlanConfig(mode="overlap", p=0.1,
+                                         site="auto"),
+                2, 128, attn_impl="pallas")
+            analysis.verify_schedule(cfg_r, sched, cell=f"test:{arch}")
+    assert flips >= 1
